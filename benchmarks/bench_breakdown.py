@@ -1,0 +1,63 @@
+"""Fig. 2 / Fig. 19 — execution breakdown.
+
+Fig. 2 analogue (the motivating bottleneck): fraction of bytes moved over
+the slow interconnect in gather-vectors mode vs NDSearch mode (the SSD
+I/O read share of the baseline, the "filtered" share of ours).
+
+Fig. 19 analogue (where NDSearch time goes): per-round roofline terms of
+the distributed engine from the dry-run artifact — NAND read ~ HBM bytes,
+embedded cores/DRAM ~ non-dot compute, interconnect ~ collective bytes.
+Reads results/dryrun/ndsearch-engine_*.json when present."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import (build_packed, dataset, emit, graph_for,
+                               reorder_graph, run_engine)
+
+NAME, N, SHARDS = "sift-1b", 8192, 8
+
+
+def run(quick: bool = False):
+    db0, adj0, medoid0 = graph_for(NAME, N if not quick else 4096)
+    db, adj, medoid = reorder_graph(db0, adj0, medoid0, "ours")
+    packed = build_packed(db, adj, medoid, shards=SHARDS)
+    queries = dataset(NAME, N if not quick else 4096).queries(128)
+    d = packed.db.shape[-1]
+    R = packed.max_degree
+
+    nd = run_engine(db, packed, queries)
+    rows = []
+    # interconnect bytes per mode (per computed distance)
+    io_nd = nd.n_dist * (8 + d * 4 / R)
+    io_gv = nd.n_dist * (d * 4 + 4)
+    local_read = nd.page_reads / max(nd.n_dist, 1) * 64 * d * 4  # page bytes
+    rows.append(["gather_vectors(baseline)",
+                 round(100 * io_gv / (io_gv + local_read), 1)])
+    rows.append(["ndsearch(filtered)",
+                 round(100 * io_nd / (io_nd + local_read), 1)])
+    emit(rows, ["mode", "interconnect_share_pct"],
+         "Fig2-analogue: slow-link share of moved bytes")
+
+    rows2 = []
+    for path in sorted(glob.glob("results/dryrun/ndsearch-engine_*.json")):
+        r = json.load(open(path))
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        tot = rl["compute_s"] + rl["memory_s"] + rl["collective_s"] or 1.0
+        rows2.append([os.path.basename(path),
+                      round(100 * rl["memory_s"] / tot, 1),
+                      round(100 * rl["compute_s"] / tot, 1),
+                      round(100 * rl["collective_s"] / tot, 1)])
+    if rows2:
+        emit(rows2, ["cell", "nand_read_pct(hbm)", "compute_pct",
+                     "interconnect_pct(ici)"],
+             "Fig19-analogue: engine per-round roofline shares")
+    return rows + rows2
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Fig. 15 — throughput (QPS) of NDSearch vs the gather-vectors baseline
+(the SmartSSD-only / host-DiskANN design: feature vectors move to the
+querying shard instead of scalar distances moving back).
+
+The TPU-native speedup driver is the collective-byte reduction
+("filtering"): we report measured bytes-moved per mode plus QPS of the
+CPU simulation, and the analytic byte ratio (paper's ~1/32 claim)."""
+from __future__ import annotations
+
+from benchmarks.common import (build_packed, dataset, emit, graph_for,
+                               reorder_graph, run_engine)
+from repro.core.metrics import filter_ratio_bytes
+
+DATASETS = [("glove-100", 4096), ("fashion-mnist", 4096), ("sift-1b", 8192),
+            ("deep-1b", 8192), ("spacev-1b", 8192)]
+SHARDS = 8
+
+
+def run(quick: bool = False):
+    rows = []
+    for name, n in DATASETS[:2 if quick else None]:
+        db0, adj0, medoid0 = graph_for(name, n)
+        db, adj, medoid = reorder_graph(db0, adj0, medoid0, "ours")
+        queries = dataset(name, n).queries(128)
+        packed = build_packed(db, adj, medoid, shards=SHARDS)
+        d = packed.db.shape[-1]
+        R = packed.max_degree
+
+        nd = run_engine(db, packed, queries, gather_vectors=False)
+        gv = run_engine(db, packed, queries, gather_vectors=True)
+        # bytes over the interconnect per computed distance
+        nd_bytes = d * 4 + 8            # query vec amortized + dist+id
+        gv_bytes = d * 4 + 4            # full feature vector + id
+        moved_nd = nd.n_dist * (8 + d * 4 / R)     # queries amortized over R
+        moved_gv = gv.n_dist * (d * 4 + 4)
+        rows.append([name, round(nd.qps, 1), round(gv.qps, 1),
+                     round(nd.qps / gv.qps, 2),
+                     round(moved_gv / max(moved_nd, 1), 1),
+                     round(filter_ratio_bytes(d, R), 1),
+                     round(nd.recall, 3), round(gv.recall, 3)])
+    emit(rows, ["dataset", "ndsearch_qps", "gather_qps", "speedup_x",
+                "bytes_reduction_x", "analytic_filter_x",
+                "recall_nd", "recall_gv"],
+         "Fig15: throughput, NDSearch vs gather-vectors baseline")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Fig. 21 — batch-size scaling: LUN-level parallelism needs enough
+queries per shard; small batches under-fill the buckets, large batches
+amortize page reads across more queries. Paper: NDSearch's advantage
+grows with batch then dips when batches split (capacity limits)."""
+from __future__ import annotations
+
+from benchmarks.common import (build_packed, dataset, emit, graph_for,
+                               reorder_graph, run_engine)
+
+NAME, N, SHARDS = "sift-1b", 8192, 8
+BATCHES = [64, 128, 256, 512, 1024]
+
+
+def run(quick: bool = False):
+    db0, adj0, medoid0 = graph_for(NAME, N)
+    db, adj, medoid = reorder_graph(db0, adj0, medoid0, "ours")
+    packed = build_packed(db, adj, medoid, shards=SHARDS)
+    rows = []
+    for b in BATCHES[:3 if quick else None]:
+        queries = dataset(NAME, N).queries(b)
+        res = run_engine(db, packed, queries, repeats=1)
+        share = res.item_reads / max(res.page_reads, 1)
+        rows.append([b, round(res.qps, 1), round(share, 2),
+                     res.rounds, round(res.recall, 3)])
+    emit(rows, ["batch", "qps_cpu_sim", "page_sharing_x", "rounds",
+                "recall@10"],
+         "Fig21: batch-size scaling")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

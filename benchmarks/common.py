@@ -1,0 +1,113 @@
+"""Shared benchmark machinery: index building, engine runs, timing.
+
+Scale note: the paper's billion-vector datasets are represented by
+scale-reduced synthetic stand-ins (data/vectors.py) with the same
+clustered structure; every benchmark reports the paper's METRIC (page
+access ratio, relative speedup, recall, QPS) rather than absolute
+billion-scale numbers. CPU wall-clock is reported where meaningful and
+clearly labeled as CPU-simulation time."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import EngineParams, pack_for_engine, search_sim
+from repro.core.graph import brute_force_topk, build_vamana, recall_at_k
+from repro.core.luncsr import Geometry, LUNCSR, pack_index
+from repro.core.ref_search import SearchParams
+from repro.core.reorder import (apply_reordering, bandwidth_beta,
+                                degree_ascending_bfs, identity_order,
+                                random_bfs)
+from repro.data.vectors import PAPER_DATASETS, VectorDataset
+
+_GRAPH_CACHE: dict = {}
+
+
+def dataset(name: str, n: int):
+    ds = PAPER_DATASETS[name]
+    return dataclasses.replace(ds, n=n)
+
+
+def graph_for(name: str, n: int, r: int = 16, seed: int = 0):
+    key = (name, n, r, seed)
+    if key not in _GRAPH_CACHE:
+        db = dataset(name, n).materialize()
+        adj, medoid = build_vamana(db, r=r, seed=seed)
+        _GRAPH_CACHE[key] = (db, adj, medoid)
+    return _GRAPH_CACHE[key]
+
+
+def reorder_graph(db, adj, medoid, how: str, seed: int = 0):
+    if how == "none":
+        return db, adj, medoid
+    if how == "random_bfs":
+        order = random_bfs(adj, seed=seed)
+    elif how == "ours":
+        order = degree_ascending_bfs(adj)
+    else:
+        raise ValueError(how)
+    return apply_reordering(db, adj, order, entry=medoid)
+
+
+def build_packed(db, adj, medoid, *, shards: int, page_size: int = 64,
+                 r: int = 16, stripe: str = "striped", pref_width: int = 0):
+    geom = Geometry(num_shards=shards, page_size=page_size,
+                    pages_per_block=4, dim=db.shape[1], stripe=stripe)
+    idx = LUNCSR.from_adjacency(db, adj, geom, entry=medoid,
+                                pref_width=pref_width)
+    return pack_index(idx, max_degree=r)
+
+
+@dataclasses.dataclass
+class RunResult:
+    qps: float
+    recall: float
+    rounds: int
+    n_dist: float            # mean distance computations per query
+    page_reads: int          # unique page reads (dynamic allocating)
+    item_reads: int          # page reads without sharing (baseline)
+    wall_s: float
+    drops: int
+
+
+def run_engine(db, packed, queries, *, L=32, W=1, k=10, spec=0,
+               gather_vectors=False, repeats=2, max_rounds=0) -> RunResult:
+    consts, geom, entry = pack_for_engine(packed)
+    S = packed.geometry.num_shards
+    nq = queries.shape[0] - queries.shape[0] % S or S
+    q = jnp.asarray(queries[:nq].reshape(S, nq // S, -1))
+    sp = SearchParams(L=L, W=W, k=k, max_rounds=max_rounds)
+    params = EngineParams.lossless(sp, nq // S, packed.max_degree,
+                                   spec_width=spec,
+                                   gather_vectors=gather_vectors)
+    ids = dists = stats = None
+    t_best = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        ids, dists, stats = search_sim(consts, q, *entry, params, geom)
+        jax.block_until_ready(ids)
+        t_best = min(t_best, time.time() - t0)
+    ids = np.asarray(ids).reshape(nq, -1)
+    true_ids, _ = brute_force_topk(db, queries[:nq], k)
+    return RunResult(
+        qps=nq / t_best,
+        recall=float(recall_at_k(ids, true_ids)),
+        rounds=int(np.asarray(stats["total_rounds"]).max()),
+        n_dist=float(np.asarray(stats["n_dist"]).mean()),
+        page_reads=int(np.asarray(stats["pages_unique"]).sum()),
+        item_reads=int(np.asarray(stats["items_recv"]).sum()),
+        wall_s=t_best,
+        drops=int(np.asarray(stats["drops_b"]).sum()),
+    )
+
+
+def emit(rows, header, title):
+    print(f"\n== {title} ==")
+    print(",".join(header))
+    for row in rows:
+        print(",".join(str(x) for x in row))
+    return rows

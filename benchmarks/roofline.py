@@ -1,0 +1,65 @@
+"""§Roofline report: reads results/dryrun/*.json and emits the per-cell
+table (three terms, dominant bottleneck, useful-flops ratio, fit)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_cells(pattern: str = "results/dryrun/*.json"):
+    cells = []
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(r):
+    if r["status"] == "skip":
+        return [r["arch"], r["shape"], r["mesh"], "SKIP", "-", "-", "-",
+                "-", "-", r.get("reason", "")[:48]]
+    if r["status"] != "ok":
+        return [r["arch"], r["shape"], r["mesh"], "ERROR", "-", "-", "-",
+                "-", "-", r.get("error", "")[:48]]
+    rl = r["roofline"]
+    mem = r.get("memory", {})
+    return [r["arch"], r["shape"], r["mesh"], rl.get("dominant", "?"),
+            f"{rl['compute_s']:.3e}", f"{rl['memory_s']:.3e}",
+            f"{rl['collective_s']:.3e}",
+            f"{r.get('useful_flops_ratio', 0):.3f}",
+            "yes" if mem.get("fits_16gb") else
+            ("-" if "fits_16gb" not in mem else "NO"),
+            r.get("note", "")[:40]]
+
+
+def run(quick: bool = False, pattern: str = "results/dryrun/*.json"):
+    cells = load_cells(pattern)
+    header = ["arch", "shape", "mesh", "dominant", "compute_s", "memory_s",
+              "collective_s", "useful_flops", "fits16g", "note"]
+    print("\n== §Roofline table (from dry-run artifacts) ==")
+    print(",".join(header))
+    rows = []
+    for r in cells:
+        row = fmt_row(r)
+        rows.append(row)
+        print(",".join(str(x) for x in row))
+    ok = sum(1 for r in cells if r["status"] == "ok")
+    skip = sum(1 for r in cells if r["status"] == "skip")
+    err = sum(1 for r in cells if r["status"] not in ("ok", "skip"))
+    print(f"-- {ok} ok / {skip} skip / {err} error --")
+    return rows
+
+
+def to_markdown(pattern: str = "results/dryrun/*.json"):
+    cells = load_cells(pattern)
+    lines = ["| arch | shape | mesh | dominant | compute s | memory s | "
+             "collective s | useful | fits 16G | note |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in cells:
+        lines.append("| " + " | ".join(str(x) for x in fmt_row(r)) + " |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

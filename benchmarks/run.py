@@ -1,0 +1,54 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # full
+  PYTHONPATH=src python -m benchmarks.run --quick    # reduced sweep
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench substrings")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_breakdown, bench_fig15_throughput,
+                            bench_fig16_reorder, bench_fig17_dynamic,
+                            bench_fig18_ablation, bench_fig21_batch,
+                            bench_table1_stats, roofline)
+    benches = [
+        ("fig15_throughput", bench_fig15_throughput.run),
+        ("fig16_reorder", bench_fig16_reorder.run),
+        ("fig17_dynamic", bench_fig17_dynamic.run),
+        ("fig18_ablation", bench_fig18_ablation.run),
+        ("fig21_batch", bench_fig21_batch.run),
+        ("table1_stats", bench_table1_stats.run),
+        ("breakdown_fig2_19", bench_breakdown.run),
+        ("roofline", roofline.run),
+    ]
+    only = [s for s in args.only.split(",") if s]
+    failures = []
+    for name, fn in benches:
+        if only and not any(s in name for s in only):
+            continue
+        t0 = time.time()
+        try:
+            fn(quick=args.quick)
+            print(f"[bench {name}: {time.time() - t0:.1f}s]")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"[bench {name}: FAILED {e!r}]")
+    if failures:
+        print("FAILURES:", failures)
+        return 1
+    print("all benchmarks complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

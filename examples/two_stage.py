@@ -1,0 +1,75 @@
+"""Two-stage retrieve/rank application (the paper's Fig. 1 motivation):
+ANNS retrieves candidate item vectors, a transformer ranker scores them.
+
+Stage 1 (retrieve): NDSearch engine returns top-k neighbor ids+vectors.
+Stage 2 (rank):     a reduced LM backbone scores each (query, candidate)
+                    pair from pooled hidden states (DeepFM/dg-net style:
+                    retrieved vectors are the model inputs).
+
+  PYTHONPATH=src python examples/two_stage.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.engine import EngineParams, pack_for_engine, search_sim
+from repro.core.graph import build_vamana
+from repro.core.luncsr import Geometry, LUNCSR, pack_index
+from repro.core.ref_search import SearchParams
+from repro.data.vectors import VectorDataset
+from repro.models import ModelOpts, forward_hidden, init_params
+
+K, NQ, DIM = 8, 32, 64
+
+# ---- stage 1: retrieval over the item database --------------------------
+ds = VectorDataset("items", n=4096, dim=DIM, clusters=16, intrinsic=12)
+db = ds.materialize()
+queries = ds.queries(NQ)
+adj, medoid = build_vamana(db, r=16)
+geom = Geometry(num_shards=4, page_size=64, pages_per_block=4, dim=DIM)
+packed = pack_index(LUNCSR.from_adjacency(db, adj, geom, entry=medoid),
+                    max_degree=16)
+consts, egeom, entry = pack_for_engine(packed)
+sp = SearchParams(L=24, W=1, k=K)
+params_e = EngineParams.lossless(sp, NQ // 4, 16)
+
+t0 = time.time()
+ids, dists, stats = search_sim(
+    consts, jnp.asarray(queries.reshape(4, NQ // 4, -1)), *entry, params_e,
+    egeom)
+ids = np.asarray(ids).reshape(NQ, K)
+t_retrieve = time.time() - t0
+cand_vecs = db[np.clip(ids, 0, db.shape[0] - 1)]        # (NQ, K, DIM)
+
+# ---- stage 2: rank with a reduced transformer backbone -------------------
+cfg = reduced(get_config("llava-next-mistral-7b"))      # re-id style ranker
+key = jax.random.PRNGKey(0)
+params = init_params(cfg, key)
+proj = 0.1 * jax.random.normal(key, (DIM, cfg.d_model))
+
+# sequence = [query_embed, cand_1 ... cand_K]; score = head of last hidden
+seq = jnp.concatenate(
+    [jnp.asarray(queries)[:, None] @ proj, jnp.asarray(cand_vecs) @ proj],
+    axis=1)                                              # (NQ, 1+K, d)
+tokens = jnp.zeros((NQ, 1 + K), jnp.int32)
+t0 = time.time()
+hidden, _ = forward_hidden(params, cfg, tokens,
+                           opts=ModelOpts(remat="none", loss_chunk=32),
+                           frontend_embeds=seq)
+w_score = 0.1 * jax.random.normal(key, (cfg.d_model,))
+scores = hidden[:, 1:] @ w_score                         # (NQ, K)
+rank = jnp.argsort(-scores, axis=1)
+t_rank = time.time() - t0
+
+reranked = np.take_along_axis(ids, np.asarray(rank), axis=1)
+print(f"retrieve: {t_retrieve:.2f}s   rank: {t_rank:.2f}s")
+print(f"retrieve share of end-to-end: "
+      f"{100 * t_retrieve / (t_retrieve + t_rank):.0f}% "
+      "(the paper's Fig.1 observation: ANNS dominates)")
+print("query 0 retrieved :", ids[0].tolist())
+print("query 0 reranked  :", reranked[0].tolist())
+assert np.isfinite(np.asarray(scores)).all()
+print("OK")

@@ -1,0 +1,5 @@
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES
+from repro.configs.registry import get_config, list_archs, reduced
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "get_config", "list_archs",
+           "reduced"]

@@ -1,0 +1,125 @@
+"""Capacity-bounded shard dispatch — the Allocator discipline (§IV-C3).
+
+The paper's Allocator gathers the candidates that target the same LUN into
+that LUN's queue (bounded by queue capacity) so one page read serves many
+queries. The TPU-native analogue is a dense, capacity-bounded bucket
+scatter followed by an all_to_all:
+
+    items (M,) with destination shard ids
+      -> buckets (S, C) + validity mask          (scatter, overflow drops)
+      -> all_to_all                              (queries travel to data)
+      -> remote compute
+      -> all_to_all back                         (scalar results return)
+      -> gather_from_buckets                     (results in item order)
+
+Everything is static-shaped: overflow beyond capacity C is *dropped and
+counted* — exactly the bounded-LUN-queue behaviour — and never silently
+lost (stats expose the drop count; the engine re-proposes dropped vertices
+organically since they are not marked visited).
+
+This module is shared machinery: the ANNS engine (core/engine.py) and the
+MoE expert-parallel layer (models/moe.py) both route through it — the
+paper's "batch-wise dynamic allocating" and MoE token dispatch are the
+same discipline.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+INVALID = -1
+
+
+def compute_ranks(dest: jax.Array, valid: jax.Array, num_shards: int):
+    """Stable rank of each item within its destination bucket.
+
+    dest: (M,) i32 in [0, S) (ignored where ~valid). Returns
+    (rank (M,) i32, counts (S,) i32). Ranks are assigned in item order
+    (first-come-first-served, like queue admission).
+    """
+    onehot = (dest[:, None] == jnp.arange(num_shards, dtype=dest.dtype)) \
+        & valid[:, None]                                  # (M, S)
+    csum = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
+    rank = jnp.take_along_axis(
+        csum, jnp.clip(dest[:, None], 0, num_shards - 1), axis=1)[:, 0] - 1
+    rank = jnp.where(valid, rank, 0)
+    return rank, csum[-1]
+
+
+def scatter_to_buckets(dest, rank, valid, payload, num_shards: int,
+                       capacity: int, fill=0):
+    """payload (M, ...) -> buckets (S, C, ...). Overflow (rank >= C) drops."""
+    slot = jnp.where(valid & (rank < capacity), rank, capacity)
+    d = jnp.where(valid, dest, 0)
+    shape = (num_shards, capacity + 1) + payload.shape[1:]
+    out = jnp.full(shape, fill, dtype=payload.dtype)
+    out = out.at[d, slot].set(payload, mode="drop")
+    return out[:, :capacity]
+
+
+def bucket_mask(dest, rank, valid, num_shards: int, capacity: int):
+    ok = valid & (rank < capacity)
+    slot = jnp.where(ok, rank, capacity)
+    d = jnp.where(valid, dest, 0)
+    m = jnp.zeros((num_shards, capacity + 1), dtype=bool)
+    m = m.at[d, slot].set(ok, mode="drop")
+    return m[:, :capacity]
+
+
+def gather_from_buckets(buckets: jax.Array, dest, rank, valid,
+                        capacity: int):
+    """Inverse of scatter: results (S, C, ...) -> (M, ...) in item order."""
+    ok = valid & (rank < capacity)
+    d = jnp.where(ok, dest, 0)
+    r = jnp.where(ok, rank, 0)
+    out = buckets[d, r]
+    zero = jnp.zeros((), dtype=buckets.dtype)
+    return jnp.where(
+        ok.reshape(ok.shape + (1,) * (out.ndim - 1)), out, zero)
+
+
+def dispatch_stats(dest, rank, valid, num_shards: int, capacity: int):
+    """(#items sent, #dropped to overflow, per-shard load)."""
+    ok = valid & (rank < capacity)
+    dropped = valid & (rank >= capacity)
+    onehot = (dest[:, None] == jnp.arange(num_shards)) & ok[:, None]
+    return ok.sum(), dropped.sum(), onehot.sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Page-tile builder for the Pallas SiN kernel path (offline/host).
+# The kernel consumes fixed (T, QB) tiles, one page per tile; this groups a
+# routed batch by page id and pads each page group to QB rows.
+# ---------------------------------------------------------------------------
+def build_page_tiles(page_ids, payload_rows, qb: int):
+    """numpy: group rows by page into (T, QB) tiles (INVALID-padded).
+
+    Returns (tile_page (T,), tile_rows (T, QB) indices into payload order,
+    tile_valid (T, QB)).
+    """
+    import numpy as np
+
+    page_ids = np.asarray(page_ids)
+    order = np.argsort(page_ids, kind="stable")
+    sorted_pages = page_ids[order]
+    tiles_p, tiles_r, tiles_v = [], [], []
+    i = 0
+    m = len(sorted_pages)
+    while i < m:
+        j = i
+        while j < m and sorted_pages[j] == sorted_pages[i]:
+            j += 1
+        group = order[i:j]
+        for s in range(0, len(group), qb):
+            chunk = group[s: s + qb]
+            rows = np.full(qb, INVALID, dtype=np.int64)
+            rows[: len(chunk)] = chunk
+            tiles_p.append(sorted_pages[i])
+            tiles_r.append(rows)
+            tiles_v.append(rows != INVALID)
+        i = j
+    return (np.asarray(tiles_p, dtype=np.int32),
+            np.stack(tiles_r).astype(np.int64),
+            np.stack(tiles_v))

@@ -1,0 +1,480 @@
+"""Distributed NDSearch engine (§IV dataflow + §V processing model).
+
+Queries live on their *home* shard (the paper's SSD-controller query
+property table, made SPMD); vectors + adjacency live sharded across all
+devices ("LUN groups"). One search round is the paper's Allocating ->
+Searching -> Gathering pipeline:
+
+  phase A (Vgenerator): route the ids of the best-W unexpanded candidates
+      to their owner shards (all_to_all); owners return adjacency rows
+      (+ speculative 2nd-order prefetch lists) from the sharded LUNCSR.
+  phase B (Allocator + SiN): bucket (query vec, candidate id) assignments
+      by candidate owner with bounded capacity (dropped-on-overflow ==
+      bounded LUN queues), all_to_all; owners translate logical id ->
+      physical (page, slot) via blk_perm arithmetic (no FTL translation),
+      compute distances where the vectors live, and return *scalar*
+      distances ("filtering") — or, in `gather_vectors` baseline mode,
+      the raw feature vectors (the SmartSSD-only/DiskANN-host design the
+      paper compares against; same results, ~R*d/(d+2R) times the bytes).
+  merge (Gather + Sort): bloom-insert computed proposals, bitonic-merge
+      into candidate lists, refresh termination mask.
+
+Two drivers share the same stage functions bit-for-bit:
+
+  * ``search_sim``          — the shard axis is a leading array axis;
+                              all_to_all == swapaxes. Runs on one device.
+  * ``search_distributed``  — shard_map over a 1-D "lun" mesh with
+                              lax.all_to_all. Multi-device SPMD.
+
+Equality sim == distributed == single-shard traversal (lossless capacity,
+spec off) is tested in tests/test_engine*.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dispatch import (bucket_mask, compute_ranks,
+                                 gather_from_buckets, scatter_to_buckets)
+from repro.core.luncsr import PackedIndex
+from repro.core.ref_search import SearchParams
+from repro.core.traversal import (ID_SENTINEL, dedup_in_round,
+                                  merge_candidates, select_expand)
+from repro.utils import BIG_DIST, bloom_insert, bloom_query
+
+INVALID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineGeom:
+    """Static placement arithmetic (the Allocator's address generator)."""
+
+    num_shards: int
+    page_size: int
+    pages_per_block: int
+    pages_per_shard: int
+    dim: int
+    max_degree: int
+    spec_stored: int
+    n: int
+    stripe: str = "striped"
+
+    @staticmethod
+    def from_packed(packed: PackedIndex) -> "EngineGeom":
+        g = packed.geometry
+        return EngineGeom(
+            num_shards=g.num_shards, page_size=g.page_size,
+            pages_per_block=g.pages_per_block,
+            pages_per_shard=packed.pages_per_shard, dim=packed.db.shape[-1],
+            max_degree=packed.max_degree, spec_stored=packed.pref.shape[-1],
+            n=packed.n, stripe=g.stripe)
+
+    def owner(self, vid):
+        gp = vid // self.page_size
+        if self.stripe == "striped":
+            return (gp % self.num_shards).astype(jnp.int32)
+        return (gp // self.pages_per_shard).astype(jnp.int32)
+
+    def local_page(self, vid):
+        gp = vid // self.page_size
+        if self.stripe == "striped":
+            return gp // self.num_shards
+        return gp % self.pages_per_shard
+
+    def logical_slot(self, vid):
+        return self.local_page(vid) * self.page_size + vid % self.page_size
+
+    def phys_page(self, vid, blk_perm):
+        lpage = self.local_page(vid)
+        blk = lpage // self.pages_per_block
+        pib = lpage % self.pages_per_block
+        blk = jnp.clip(blk, 0, blk_perm.shape[0] - 1)
+        return blk_perm[blk] * self.pages_per_block + pib
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineParams:
+    """Static engine configuration."""
+
+    search: SearchParams
+    capacity_a: int                 # phase-A request slots per destination
+    capacity_b: int                 # phase-B assignment slots per destination
+    sort_by_page: bool = True       # dynamic allocating (page-locality stats)
+    spec_width: int = 0             # 2nd-order speculative prefetch width
+    gather_vectors: bool = False    # baseline: move vectors, not distances
+    payload_bf16: bool = False      # halve a2a bytes: bf16 query payloads
+
+    @staticmethod
+    def lossless(search: SearchParams, queries_per_shard: int,
+                 max_degree: int, spec_width: int = 0,
+                 **kw) -> "EngineParams":
+        """Capacities that can never overflow (for exactness tests)."""
+        m = queries_per_shard * search.W * (max_degree + spec_width)
+        return EngineParams(
+            search=search,
+            capacity_a=queries_per_shard * search.W,
+            capacity_b=m, spec_width=spec_width, **kw)
+
+
+class EngineState(NamedTuple):
+    cand_d: jax.Array    # (Qs, L)
+    cand_i: jax.Array    # (Qs, L)
+    cand_e: jax.Array    # (Qs, L)
+    bloom: jax.Array     # (Qs, W32)
+    done: jax.Array      # (Qs,)
+    rounds: jax.Array    # (Qs,)
+    n_dist: jax.Array    # (Qs,)
+    items_recv: jax.Array    # () items received by this shard's SiN
+    pages_unique: jax.Array  # () unique page reads (dynamic allocating)
+    drops_b: jax.Array       # () phase-B overflow drops at this source
+    props_sent: jax.Array    # () accepted proposals sent by this source
+
+
+# ---------------------------------------------------------------------------
+# Stage functions — all operate on one shard's local arrays.
+# ---------------------------------------------------------------------------
+def _init_state(queries, qq, entry_vec, entry_norm, entry_id,
+                params: EngineParams) -> EngineState:
+    sp = params.search
+    Qs = queries.shape[0]
+    L = sp.L
+    e_d = (qq - 2.0 * (queries @ entry_vec.astype(jnp.float32))
+           + entry_norm)                                   # (Qs,)
+    cand_d = jnp.concatenate(
+        [e_d[:, None], jnp.full((Qs, L - 1), BIG_DIST, jnp.float32)], axis=1)
+    cand_i = jnp.concatenate(
+        [jnp.full((Qs, 1), entry_id, jnp.int32),
+         jnp.full((Qs, L - 1), ID_SENTINEL, jnp.int32)], axis=1)
+    cand_e = jnp.zeros((Qs, L), dtype=bool)
+    bloom = jnp.zeros((Qs, sp.bloom_words), dtype=jnp.uint32)
+    bloom = bloom_insert(bloom, cand_i[:, :1],
+                         jnp.ones((Qs, 1), dtype=bool))
+    z = jnp.zeros((Qs,), jnp.int32)
+    zs = jnp.int32(0)
+    return EngineState(cand_d, cand_i, cand_e, bloom, z.astype(bool),
+                       z, z, zs, zs, zs, zs)
+
+
+def _fa_select(state: EngineState, params: EngineParams, geom: EngineGeom):
+    """Select W best unexpanded; bucket their ids by owner (phase A send)."""
+    sp = params.search
+    sel_ids, sel_valid, cand_e2 = select_expand(
+        state.cand_d, state.cand_i, state.cand_e, sp.W)
+    sel_valid &= ~state.done[:, None]
+    vid = sel_ids.reshape(-1)                      # (Qs*W,)
+    valid = sel_valid.reshape(-1)
+    safe = jnp.clip(vid, 0, geom.n - 1)
+    dest = jnp.where(valid, geom.owner(safe), 0)
+    rank, _ = compute_ranks(dest, valid, geom.num_shards)
+    valid &= rank < params.capacity_a              # lossless by default
+    send = {
+        "vid": scatter_to_buckets(dest, rank, valid, vid,
+                                  geom.num_shards, params.capacity_a,
+                                  fill=INVALID),
+        "mask": bucket_mask(dest, rank, valid, geom.num_shards,
+                            params.capacity_a),
+    }
+    keep = {"dest": dest, "rank": rank, "valid": valid, "cand_e2": cand_e2}
+    return send, keep
+
+
+def _fb_adjacency(recv, adj, pref, params: EngineParams, geom: EngineGeom):
+    """Owner: serve adjacency rows (+ prefetch lists) for requested ids."""
+    vid = recv["vid"]                              # (S, C_A)
+    mask = recv["mask"]
+    safe = jnp.clip(vid, 0, geom.n - 1)
+    lslot = jnp.clip(geom.logical_slot(safe), 0, adj.shape[0] - 1)
+    nbrs = jnp.where(mask[..., None], adj[lslot], INVALID)
+    send = {"nbrs": nbrs}
+    if params.spec_width > 0:
+        pr = pref[lslot][..., :params.spec_width]
+        send["pref"] = jnp.where(mask[..., None], pr, INVALID)
+    return send
+
+
+def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq,
+                params: EngineParams, geom: EngineGeom):
+    """Build proposals, dedup + bloom-filter, bucket phase-B assignments."""
+    sp = params.search
+    Qs = queries.shape[0]
+    W, R = sp.W, geom.max_degree
+    nbrs = gather_from_buckets(recv_b["nbrs"], keep_a["dest"],
+                               keep_a["rank"], keep_a["valid"],
+                               params.capacity_a)       # (Qs*W, R)
+    nbrs = jnp.where(keep_a["valid"][:, None], nbrs, INVALID)
+    props = nbrs.reshape(Qs, W * R)
+    if params.spec_width > 0:
+        pr = gather_from_buckets(recv_b["pref"], keep_a["dest"],
+                                 keep_a["rank"], keep_a["valid"],
+                                 params.capacity_a)
+        pr = jnp.where(keep_a["valid"][:, None], pr, INVALID)
+        props = jnp.concatenate(
+            [props, pr.reshape(Qs, W * params.spec_width)], axis=1)
+    M = props.shape[1]
+    valid = props != INVALID
+    valid = dedup_in_round(props, valid)
+    valid &= ~bloom_query(state.bloom, props)
+
+    flat_vid = props.reshape(-1)
+    flat_valid = valid.reshape(-1)
+    safe = jnp.clip(flat_vid, 0, geom.n - 1)
+    dest = jnp.where(flat_valid, geom.owner(safe), 0)
+    rank, _ = compute_ranks(dest, flat_valid, geom.num_shards)
+    ok = flat_valid & (rank < params.capacity_b)
+    drops = (flat_valid & ~ok).sum().astype(jnp.int32)
+
+    qidx = jnp.repeat(jnp.arange(Qs, dtype=jnp.int32), M)
+    S, C = geom.num_shards, params.capacity_b
+    send = {
+        "vid": scatter_to_buckets(dest, rank, ok, flat_vid, S, C,
+                                  fill=INVALID),
+        "mask": bucket_mask(dest, rank, ok, S, C),
+    }
+    if not params.gather_vectors:
+        qpay = queries[qidx]
+        if params.payload_bf16:
+            qpay = qpay.astype(jnp.bfloat16)
+        send["qvec"] = scatter_to_buckets(dest, rank, ok, qpay, S, C)
+        send["qq"] = scatter_to_buckets(dest, rank, ok, qq[qidx], S, C)
+    keep = {"dest": dest, "rank": rank, "ok": ok, "props": props,
+            "valid": valid, "drops": drops}
+    return send, keep
+
+
+def _fd_distance(recv, db, vnorm, blk_perm, params: EngineParams,
+                 geom: EngineGeom):
+    """Owner SiN: translate id -> physical page/slot, compute distances.
+
+    In gather_vectors mode returns the raw vectors instead (baseline).
+    Also counts page-buffer statistics: unique pages (dynamic allocating
+    shares a page read across assignments) vs raw items (no sharing).
+    """
+    vid = recv["vid"]                              # (S, C_B)
+    mask = recv["mask"]
+    S, C = vid.shape
+    flat_vid = jnp.clip(vid.reshape(-1), 0, geom.n - 1)
+    flat_mask = mask.reshape(-1)
+    ppage = geom.phys_page(flat_vid, blk_perm)
+    ppage = jnp.clip(ppage, 0, db.shape[0] - 1)
+    slot = flat_vid % geom.page_size
+    v = db[ppage, slot].astype(jnp.float32)        # (S*C, d)
+    vn = vnorm[ppage, slot]
+
+    items = flat_mask.sum().astype(jnp.int32)
+    sorted_pages = jnp.sort(jnp.where(flat_mask, ppage, jnp.int32(2**30)))
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_pages[1:] != sorted_pages[:-1]])
+    uniq = (first & (sorted_pages != 2**30)).sum().astype(jnp.int32)
+
+    if params.gather_vectors:
+        send = {"vec": jnp.where(flat_mask[:, None], v, 0.0).reshape(S, C, -1),
+                "vn": jnp.where(flat_mask, vn, 0.0).reshape(S, C)}
+    else:
+        qv = jnp.sum(recv["qvec"].reshape(S * C, -1).astype(jnp.float32) * v,
+                     axis=-1)
+        dist = recv["qq"].reshape(-1) - 2.0 * qv + vn
+        dist = jnp.where(flat_mask, dist, BIG_DIST)
+        send = {"dist": dist.reshape(S, C)}
+    return send, items, uniq
+
+
+def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
+              queries, qq, params: EngineParams, geom: EngineGeom):
+    """Requester: recover distances, bloom-insert, merge, re-terminate."""
+    sp = params.search
+    Qs, L = state.cand_d.shape
+    props = keep_c["props"]                        # (Qs, M)
+    M = props.shape[1]
+    ok = keep_c["ok"]
+
+    if params.gather_vectors:
+        vec = gather_from_buckets(recv_d["vec"], keep_c["dest"],
+                                  keep_c["rank"], ok, params.capacity_b)
+        vn = gather_from_buckets(recv_d["vn"], keep_c["dest"],
+                                 keep_c["rank"], ok, params.capacity_b)
+        qidx = jnp.repeat(jnp.arange(Qs, dtype=jnp.int32), M)
+        qv = jnp.sum(queries[qidx].astype(jnp.float32) * vec, axis=-1)
+        dist = qq[qidx] - 2.0 * qv + vn
+    else:
+        dist = gather_from_buckets(recv_d["dist"], keep_c["dest"],
+                                   keep_c["rank"], ok, params.capacity_b)
+    accepted = ok.reshape(Qs, M)
+    dist = jnp.where(accepted, dist.reshape(Qs, M), BIG_DIST)
+
+    bloom = bloom_insert(state.bloom, props, accepted)
+    cand_d, cand_i, cand_e = merge_candidates(
+        state.cand_d, state.cand_i, keep_a["cand_e2"], dist, props,
+        accepted, L)
+    worked = ~state.done
+    keep = state.done
+    cand_d = jnp.where(keep[:, None], state.cand_d, cand_d)
+    cand_i = jnp.where(keep[:, None], state.cand_i, cand_i)
+    cand_e = jnp.where(keep[:, None], state.cand_e, cand_e)
+    bloom = jnp.where(keep[:, None], state.bloom, bloom)
+    rounds = state.rounds + worked.astype(jnp.int32)
+    n_dist = state.n_dist + jnp.where(worked, accepted.sum(-1), 0
+                                      ).astype(jnp.int32)
+    done = state.done | ~((~cand_e) & (cand_i != ID_SENTINEL)).any(axis=1)
+    return EngineState(
+        cand_d, cand_i, cand_e, bloom, done, rounds, n_dist,
+        state.items_recv + items, state.pages_unique + uniq,
+        state.drops_b + keep_c["drops"],
+        state.props_sent + accepted.sum().astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Round body, parameterized by the communication primitive.
+# ---------------------------------------------------------------------------
+def _round(state, consts, params: EngineParams, geom: EngineGeom, a2a):
+    send_a, keep_a = _fa_select(state, params, geom)
+    recv_a = a2a(send_a)
+    send_b = _fb_adjacency(recv_a, consts["adj"], consts["pref"],
+                           params, geom)
+    recv_b = a2a(send_b)
+    send_c, keep_c = _fc_propose(state, keep_a, recv_b, consts["queries"],
+                                 consts["qq"], params, geom)
+    recv_c = a2a(send_c)
+    send_d, items, uniq = _fd_distance(recv_c, consts["db"], consts["vnorm"],
+                                       consts["blk_perm"], params, geom)
+    recv_d = a2a(send_d)
+    return _fe_merge(state, keep_a, keep_c, recv_d, items, uniq,
+                     consts["queries"], consts["qq"], params, geom)
+
+
+def _finalize(state: EngineState, k: int):
+    out_i = jnp.where(state.cand_i[:, :k] != ID_SENTINEL,
+                      state.cand_i[:, :k], INVALID)
+    out_d = state.cand_d[:, :k]
+    stats = {
+        "rounds": state.rounds, "n_dist": state.n_dist,
+        "items_recv": state.items_recv, "pages_unique": state.pages_unique,
+        "drops_b": state.drops_b, "props_sent": state.props_sent,
+    }
+    return out_i, out_d, stats
+
+
+# ---------------------------------------------------------------------------
+# Drivers
+# ---------------------------------------------------------------------------
+def pack_for_engine(packed: PackedIndex):
+    """PackedIndex -> (device consts dict with leading shard axis, geom)."""
+    import numpy as np
+
+    geom = EngineGeom.from_packed(packed)
+    consts = {
+        "db": jnp.asarray(packed.db),
+        "vnorm": jnp.asarray(packed.vnorm),
+        "adj": jnp.asarray(packed.adj),
+        "pref": jnp.asarray(packed.pref),
+        "blk_perm": jnp.asarray(packed.blk_perm),
+    }
+    # locate the entry vertex's physical position on its shard
+    from repro.core.refresh import physical_page_of
+    s, p, sl = physical_page_of(packed, np.asarray([packed.entry]))
+    ev = packed.db[int(s[0]), int(p[0]), int(sl[0])]
+    en = packed.vnorm[int(s[0]), int(p[0]), int(sl[0])]
+    return consts, geom, (jnp.asarray(ev, jnp.float32), jnp.float32(en),
+                          jnp.int32(packed.entry))
+
+
+@functools.partial(jax.jit, static_argnames=("params", "geom"))
+def search_sim(consts, queries, entry_vec, entry_norm, entry_id,
+               params: EngineParams, geom: EngineGeom):
+    """Single-device simulation: shard axis leads every array."""
+    qq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)   # (S, Qs)
+
+    state0 = jax.vmap(
+        lambda q, qn: _init_state(q, qn, entry_vec, entry_norm, entry_id,
+                                  params))(queries, qq)
+
+    def a2a(tree):
+        return jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), tree)
+
+    # vmapped stages with communication interleaved
+    vfa = jax.vmap(functools.partial(_fa_select, params=params, geom=geom))
+    vfb = jax.vmap(functools.partial(_fb_adjacency, params=params, geom=geom),
+                   in_axes=(0, 0, 0))
+    vfc = jax.vmap(functools.partial(_fc_propose, params=params, geom=geom),
+                   in_axes=(0, 0, 0, 0, 0))
+    vfd = jax.vmap(functools.partial(_fd_distance, params=params, geom=geom),
+                   in_axes=(0, 0, 0, 0))
+    vfe = jax.vmap(functools.partial(_fe_merge, params=params, geom=geom),
+                   in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
+
+    def body(carry):
+        state, t = carry
+        send_a, keep_a = vfa(state)
+        recv_a = a2a(send_a)
+        send_b = vfb(recv_a, consts["adj"], consts["pref"])
+        recv_b = a2a(send_b)
+        send_c, keep_c = vfc(state, keep_a, recv_b, queries, qq)
+        recv_c = a2a(send_c)
+        send_d, items, uniq = vfd(recv_c, consts["db"], consts["vnorm"],
+                                  consts["blk_perm"])
+        recv_d = a2a(send_d)
+        state = vfe(state, keep_a, keep_c, recv_d, items, uniq, queries, qq)
+        return state, t + 1
+
+    def cond(carry):
+        state, t = carry
+        return (~state.done).any() & (t < params.search.rounds_cap)
+
+    state, t = jax.lax.while_loop(cond, body, (state0, jnp.int32(0)))
+    out_i, out_d, stats = jax.vmap(lambda s: _finalize(s, params.search.k)
+                                   )(state)
+    stats["total_rounds"] = t
+    return out_i, out_d, stats
+
+
+def search_distributed(consts, queries, entry_vec, entry_norm, entry_id,
+                       params: EngineParams, geom: EngineGeom, mesh,
+                       axis_name: str = "lun"):
+    """shard_map driver over a 1-D mesh; same stages, lax.all_to_all."""
+    from jax.sharding import PartitionSpec as P
+
+    def a2a(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.all_to_all(x, axis_name, 0, 0), tree)
+
+    def local_fn(db, vnorm, adj, pref, blk_perm, q, evec, enorm, eid):
+        # shard_map hands (1, ...) blocks; work on the squeezed shard view
+        lc = {"db": db[0], "vnorm": vnorm[0], "adj": adj[0],
+              "pref": pref[0], "blk_perm": blk_perm[0]}
+        ql = q[0]
+        qq = jnp.sum(ql.astype(jnp.float32) ** 2, axis=-1)
+        lc["queries"] = ql
+        lc["qq"] = qq
+        state0 = _init_state(ql, qq, evec, enorm, eid, params)
+        active0 = jax.lax.psum((~state0.done).sum(), axis_name)
+
+        def body(carry):
+            state, t, _ = carry
+            state = _round(state, lc, params, geom, a2a)
+            active = jax.lax.psum((~state.done).sum(), axis_name)
+            return state, t + 1, active
+
+        def cond(carry):
+            _, t, active = carry
+            return (active > 0) & (t < params.search.rounds_cap)
+
+        state, t, _ = jax.lax.while_loop(
+            cond, body, (state0, jnp.int32(0), active0))
+        out_i, out_d, stats = _finalize(state, params.search.k)
+        stats = {k: v[None] for k, v in stats.items()}
+        stats["total_rounds"] = t[None]
+        return out_i[None], out_d[None], stats
+
+    f = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name), P(axis_name),
+                  P(axis_name), P(axis_name), P(), P(), P()),
+        out_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        check_vma=False,
+    )
+    return jax.jit(f)(consts["db"], consts["vnorm"], consts["adj"],
+                      consts["pref"], consts["blk_perm"], queries,
+                      entry_vec, entry_norm, entry_id)

@@ -1,0 +1,30 @@
+"""Search-quality and locality metrics used across tests and benchmarks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import brute_force_topk, recall_at_k  # re-export
+from repro.core.reorder import bandwidth_beta                # re-export
+
+__all__ = [
+    "brute_force_topk", "recall_at_k", "bandwidth_beta",
+    "page_access_ratio", "filter_ratio_bytes", "qps",
+]
+
+
+def page_access_ratio(page_accesses: np.ndarray, n_dist: np.ndarray) -> float:
+    """Paper Fig. 6/16 metric: #page accesses / length of the search trace."""
+    n = np.maximum(np.asarray(n_dist, dtype=np.float64), 1.0)
+    return float((np.asarray(page_accesses, np.float64) / n).mean())
+
+
+def filter_ratio_bytes(d: int, R: int, dtype_bytes: int = 4,
+                       id_bytes: int = 4, dist_bytes: int = 4) -> float:
+    """Bytes(gather R vectors) / Bytes(NDSearch filtered exchange)."""
+    gather = R * d * dtype_bytes
+    nd = d * dtype_bytes + R * (id_bytes + dist_bytes)
+    return gather / nd
+
+
+def qps(num_queries: int, seconds: float) -> float:
+    return num_queries / max(seconds, 1e-12)

@@ -1,0 +1,66 @@
+"""FTL-style block refresh simulation (§II-B2, §IV-B).
+
+NAND retention/read-disturb forces periodic block refreshes that move data
+to new physical blocks; the paper keeps refreshes *within* a plane so the
+multi-plane mapping survives, and updates the LUNCSR LUN/BLK arrays so the
+Allocator still resolves logical ids without FTL translation.
+
+Here a "refresh" permutes logical->physical block mapping within a shard
+(blk_perm row) and physically moves the affected db pages + vnorm rows.
+Search results must be invariant (tested in tests/test_refresh.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.luncsr import PackedIndex
+
+
+def refresh_blocks(packed: PackedIndex, rng: np.random.Generator,
+                   frac: float = 0.25) -> PackedIndex:
+    """Refresh a random fraction of blocks per shard.
+
+    Each refreshed block swaps physical position with another block of the
+    same shard (a 2-cycle of the permutation), mirroring "copy to a free
+    block, retire the old one" at steady state.
+    """
+    g = packed.geometry
+    S, B = packed.blk_perm.shape
+    ppb = g.pages_per_block
+    new_perm = packed.blk_perm.copy()
+    db = packed.db.copy()
+    vnorm = packed.vnorm.copy()
+    for s in range(S):
+        k = max(1, int(B * frac)) & ~1  # even count -> disjoint swap pairs
+        if k < 2:
+            continue
+        chosen = rng.choice(B, size=k, replace=False)
+        for a, b in zip(chosen[::2], chosen[1::2]):
+            pa, pb = int(new_perm[s, a]), int(new_perm[s, b])
+            new_perm[s, a], new_perm[s, b] = pb, pa
+            ra = slice(pa * ppb, (pa + 1) * ppb)
+            rb = slice(pb * ppb, (pb + 1) * ppb)
+            db[s][[*range(ra.start, ra.stop)]], db[s][[*range(rb.start, rb.stop)]] = (
+                db[s][[*range(rb.start, rb.stop)]].copy(),
+                db[s][[*range(ra.start, ra.stop)]].copy(),
+            )
+            vnorm[s][[*range(ra.start, ra.stop)]], vnorm[s][[*range(rb.start, rb.stop)]] = (
+                vnorm[s][[*range(rb.start, rb.stop)]].copy(),
+                vnorm[s][[*range(ra.start, ra.stop)]].copy(),
+            )
+    return dataclasses.replace(packed, db=db, vnorm=vnorm, blk_perm=new_perm)
+
+
+def physical_page_of(packed: PackedIndex, ids: np.ndarray) -> np.ndarray:
+    """Host-side Allocator arithmetic: logical id -> (shard, phys page, slot)."""
+    g = packed.geometry
+    n = packed.n
+    ids = np.asarray(ids, dtype=np.int64)
+    shard = g.owner_of_n(ids, n)
+    lpage = g.local_page_of_n(ids, n)
+    blk = lpage // g.pages_per_block
+    pib = lpage % g.pages_per_block
+    phys = packed.blk_perm[shard, blk] * g.pages_per_block + pib
+    return shard, phys, ids % g.page_size

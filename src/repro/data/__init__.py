@@ -1,0 +1,5 @@
+from repro.data.pipeline import FrontendPipeline, TokenPipeline
+from repro.data.vectors import PAPER_DATASETS, VectorDataset
+
+__all__ = ["FrontendPipeline", "TokenPipeline", "PAPER_DATASETS",
+           "VectorDataset"]

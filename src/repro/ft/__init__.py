@@ -1,0 +1,4 @@
+from repro.ft.guard import all_finite, select_tree
+from repro.ft.restart import RestartStats, run_with_restarts
+
+__all__ = ["all_finite", "select_tree", "RestartStats", "run_with_restarts"]

@@ -1,0 +1,28 @@
+"""In-step fault guards.
+
+``skip_nonfinite`` is compiled into the train step: if any gradient (or
+the loss) is NaN/inf — a flipped bit, a bad batch, an overflowing bf16
+reduction — the parameter/optimizer update is suppressed for that step
+(identity update) and a counter increments. The step stays bulk-
+synchronous, so every data-parallel worker takes the same branch (the
+finiteness predicate is computed on globally-reduced grads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def all_finite(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    ok = jnp.bool_(True)
+    for l in leaves:
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            ok &= jnp.isfinite(l).all()
+    return ok
+
+
+def select_tree(pred, on_true, on_false):
+    """Elementwise tree select (pred scalar bool)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false)

@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the SiN distance kernel.
+
+Pads tiles to hardware-aligned shapes, dispatches to the Pallas kernel on
+TPU and to the jnp oracle elsewhere (interpret mode available for tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance.kernel import paged_distances
+from repro.kernels.distance.ref import paged_distances_ref
+from repro.utils import round_up
+
+LANE = 128      # TPU minor-dim tile
+SUBLANE = 8     # f32 second-minor tile
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_distance_op(page_ids: jax.Array, queries: jax.Array,
+                      qq: jax.Array, db: jax.Array, vnorm: jax.Array,
+                      mode: str = "auto") -> jax.Array:
+    """mode: 'auto' | 'pallas' | 'interpret' | 'ref'."""
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        return paged_distances_ref(page_ids, queries, qq, db, vnorm)
+    return paged_distances(page_ids, queries, qq, db, vnorm,
+                           interpret=(mode == "interpret"))
+
+
+def pad_tiles(queries: jax.Array, qq: jax.Array, qb: int = 16):
+    """Pad the query-tile axis QB up to a hardware-friendly multiple."""
+    T, QB, d = queries.shape
+    tgt = round_up(QB, qb)
+    if tgt == QB:
+        return queries, qq
+    pq = jnp.zeros((T, tgt - QB, d), queries.dtype)
+    queries = jnp.concatenate([queries, pq], axis=1)
+    qq = jnp.concatenate([qq, jnp.zeros((T, tgt - QB), qq.dtype)], axis=1)
+    return queries, qq

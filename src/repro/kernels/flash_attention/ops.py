@@ -1,0 +1,37 @@
+"""Public attention op: auto backend dispatch + shape padding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.utils import round_up
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention_op(q, k, v, *, scale: float, causal: bool = True,
+                 window: int = 0, softcap: float = 0.0,
+                 mode: str = "auto", block_q: int = 128,
+                 block_k: int = 128) -> jax.Array:
+    """Pads S/Skv to block multiples, runs kernel or oracle, slices back."""
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        return attention_ref(q, k, v, scale=scale, causal=causal,
+                             window=window, softcap=softcap)
+    B, H, S, dh = q.shape
+    Skv = k.shape[2]
+    Sp = round_up(S, block_q)
+    Skvp = round_up(Skv, block_k)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, Skvp - Skv), (0, 0)))
+    out = flash_attention(qp, kp, vp, scale=scale, causal=causal,
+                          window=window, softcap=softcap, s_orig=Skv,
+                          block_q=block_q, block_k=block_k,
+                          interpret=(mode == "interpret"))
+    return out[:, :, :S, :]

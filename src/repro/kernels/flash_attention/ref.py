@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, window, softcap)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap", "s_orig"))
+def attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                  window: int = 0, softcap: float = 0.0,
+                  s_orig: int = 0) -> jax.Array:
+    """Same contract as kernels.flash_attention.kernel.flash_attention."""
+    B, H, S, dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = H // Hkv
+    s_orig = s_orig or Skv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(Skv)[None, :]
+    mask = cols < s_orig
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

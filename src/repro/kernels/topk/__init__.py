@@ -1,0 +1,5 @@
+from repro.kernels.topk.kernel import bitonic_sort
+from repro.kernels.topk.ops import sort_op, topk_op
+from repro.kernels.topk.ref import bitonic_sort_ref, topk_ref
+
+__all__ = ["bitonic_sort", "sort_op", "topk_op", "bitonic_sort_ref", "topk_ref"]

@@ -1,0 +1,40 @@
+"""jit'd public wrappers: padding to power-of-two, top-k slicing."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk.kernel import bitonic_sort
+from repro.kernels.topk.ref import bitonic_sort_ref
+from repro.utils import BIG_DIST, next_pow2
+
+ID_SENTINEL = jnp.int32(2**31 - 1)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sort_op(dists: jax.Array, ids: jax.Array, mode: str = "auto",
+            block_b: int = 1):
+    """Lexicographic sort rows of (dists, ids); pads M to a power of two."""
+    B, M = dists.shape
+    m2 = next_pow2(M)
+    if m2 != M:
+        pad_d = jnp.full((B, m2 - M), BIG_DIST, dists.dtype)
+        pad_i = jnp.full((B, m2 - M), ID_SENTINEL, ids.dtype)
+        dists = jnp.concatenate([dists, pad_d], axis=1)
+        ids = jnp.concatenate([ids, pad_i], axis=1)
+    if mode == "auto":
+        mode = "pallas" if _on_tpu() else "ref"
+    if mode == "ref":
+        d, i = bitonic_sort_ref(dists, ids)
+    else:
+        d, i = bitonic_sort(dists, ids, interpret=(mode == "interpret"),
+                            block_b=block_b)
+    return d[:, :M], i[:, :M]
+
+
+def topk_op(dists: jax.Array, ids: jax.Array, k: int, mode: str = "auto"):
+    d, i = sort_op(dists, ids, mode=mode)
+    return d[:, :k], i[:, :k]

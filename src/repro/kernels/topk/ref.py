@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the bitonic sort/top-k kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bitonic_sort_ref(dists: jax.Array, ids: jax.Array):
+    """Ascending lexicographic (dist, id) sort of each row."""
+    return jax.lax.sort((dists, ids), num_keys=2)
+
+
+def topk_ref(dists: jax.Array, ids: jax.Array, k: int):
+    d, i = bitonic_sort_ref(dists, ids)
+    return d[..., :k], i[..., :k]

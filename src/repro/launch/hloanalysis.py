@@ -1,0 +1,332 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body ONCE
+(verified in-tree: a 10-step scanned matmul reports the flops of one),
+which makes it useless for scan-over-layers models. The compiled HLO
+text, however, carries ``known_trip_count`` annotations on every
+counted loop. This module re-derives the three roofline inputs with
+loop multiplicities applied:
+
+  flops            2*M*N*K of every dot (+conv), x trip-count product
+  hbm bytes        per-instruction traffic model (fusion = read inputs +
+                   write outputs; gather/dynamic-slice read only what they
+                   produce; dynamic-update-slice writes only the update —
+                   in-place semantics, matching TPU buffer reuse)
+  collective bytes per-kind wire-byte model (all-reduce 2x input [ring],
+                   all-gather output, reduce-scatter input, all-to-all /
+                   permute input), x trip counts
+
+Known approximations (documented in EXPERIMENTS.md §Roofline):
+  * elementwise/reduce flops ignored (dots dominate; <5% on these models)
+  * both branches of a rare ``conditional`` are counted (upper bound)
+  * loops without known_trip_count (e.g. the ANNS engine's convergence
+    loop) count as ONE iteration -> those cells report per-round costs
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f8e4m3fn|f8e5m2|[suf]\d+|c64|c128|token)"
+                       r"\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+# NB: tuple types may contain /*index=N*/ comments (with '='); match any
+# non-paren content inside the type parens.
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+"
+    r"([\w\-]+)\((.*)$")
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALLREF = re.compile(
+    r"(body|condition|calls|to_apply|true_computation|false_computation)="
+    r"%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "add-dependency", "partition-id", "replica-id", "domain",
+               "opt-barrier"}
+
+
+def shape_elems_bytes(text: str):
+    elems, total = 0, 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+def first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # operand list + attrs (raw remainder of the line)
+
+    @property
+    def out_bytes(self) -> int:
+        return shape_elems_bytes(self.type_str)[1]
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    is_entry: bool
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    symbols: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def parse_hlo(text: str):
+    comps: Dict[str, Comp] = {}
+    cur: Optional[Comp] = None
+    entry = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Comp(name=m.group(2), is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.symbols[ins.name] = ins.type_str
+    return comps, entry
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Operand %refs inside the argument parens (before attrs)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERAND.findall(rest[:i])
+    return _OPERAND.findall(rest)
+
+
+def _operand_bytes(comp: Comp, rest: str) -> List[int]:
+    out = []
+    args = _operand_names(rest)
+    for a in args:
+        t = comp.symbols.get(a)
+        if t is not None:
+            out.append(shape_elems_bytes(t)[1])
+    # fall back to inline types when operands are printed with shapes
+    if not out:
+        depth, cut = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    cut = i
+                    break
+        _, b = shape_elems_bytes(rest[:cut])
+        if b:
+            out.append(b)
+    return out
+
+
+def compute_multipliers(comps: Dict[str, Comp], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = {entry: 1.0}
+    work = [entry]
+    while work:
+        cname = work.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for ins in comp.instrs:
+            trip = 1.0
+            if ins.opcode == "while":
+                t = _TRIP.search(ins.rest)
+                trip = float(t.group(1)) if t else 1.0
+            for kind, ref in _CALLREF.findall(ins.rest):
+                f = trip if kind in ("body", "condition") else 1.0
+                if ref in comps:
+                    mult[ref] = mult.get(ref, 0.0) + m * f
+                    work.append(ref)
+            b = _BRANCHES.search(ins.rest)
+            if b:
+                for ref in _OPERAND.findall(b.group(1)):
+                    if ref in comps:
+                        mult[ref] = mult.get(ref, 0.0) + m
+                        work.append(ref)
+    return mult
+
+
+def _reached_via_calls(comps, entry):
+    """Computations whose instruction traffic should be counted directly
+    (entry + while bodies/conditions + conditional branches + calls);
+    fusion/reduce bodies are costed at their call sites."""
+    keep = {entry}
+    work = [entry]
+    while work:
+        c = comps.get(work.pop())
+        if c is None:
+            continue
+        for ins in c.instrs:
+            for kind, ref in _CALLREF.findall(ins.rest):
+                if kind in ("body", "condition", "true_computation",
+                            "false_computation") and ref in comps \
+                        and ref not in keep:
+                    keep.add(ref)
+                    work.append(ref)
+            if ins.opcode == "call":
+                for kind, ref in _CALLREF.findall(ins.rest):
+                    if kind == "to_apply" and ref in comps \
+                            and ref not in keep:
+                        keep.add(ref)
+                        work.append(ref)
+            b = _BRANCHES.search(ins.rest)
+            if b:
+                for ref in _OPERAND.findall(b.group(1)):
+                    if ref in comps and ref not in keep:
+                        keep.add(ref)
+                        work.append(ref)
+    return keep
+
+
+def _dot_flops(comp: Comp, ins: Instr) -> float:
+    out_elems, _ = shape_elems_bytes(ins.type_str)
+    ops = _operand_names(ins.rest)
+    lhs_dims = None
+    if ops:
+        t = comp.symbols.get(ops[0])
+        if t:
+            lhs_dims = first_shape_dims(t)
+    if lhs_dims is None:
+        lhs_dims = first_shape_dims(ins.rest)      # inline operand type
+    cd = _CDIMS.search(ins.rest)
+    k = 1
+    if lhs_dims and cd:
+        for d in cd.group(1).split(","):
+            if d:
+                k *= lhs_dims[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(comp: Comp, ins: Instr) -> float:
+    out_elems, _ = shape_elems_bytes(ins.type_str)
+    ops = _operand_names(ins.rest)
+    rhs_elems = 0
+    if len(ops) >= 2:
+        t = comp.symbols.get(ops[1])
+        if t:
+            rhs_elems, _ = shape_elems_bytes(t)
+    return 2.0 * out_elems * max(rhs_elems, 1) ** 0.5   # crude; models none
+
+
+def _instr_traffic(comp: Comp, ins: Instr) -> int:
+    if ins.opcode in _NO_TRAFFIC:
+        return 0
+    ob = ins.out_bytes
+    if ins.opcode == "broadcast" or ins.opcode == "iota":
+        return ob
+    if ins.opcode in ("gather", "dynamic-slice", "slice"):
+        return 2 * ob                      # read what you produce + write
+    if ins.opcode in ("dynamic-update-slice",):
+        opb = _operand_bytes(comp, ins.rest)
+        upd = opb[1] if len(opb) > 1 else ob
+        return 2 * min(upd, ob)            # in-place: touch the update only
+    if ins.opcode == "scatter":
+        opb = _operand_bytes(comp, ins.rest)
+        upd = opb[2] if len(opb) > 2 else ob
+        return 3 * min(upd, ob)
+    if ins.opcode.startswith("all-") or ins.opcode.startswith("collective") \
+            or ins.opcode.startswith("reduce-scatter"):
+        return ob + sum(_operand_bytes(comp, ins.rest))
+    return ob + sum(_operand_bytes(comp, ins.rest))
+
+
+def _collective_wire_bytes(comp: Comp, ins: Instr, kind: str) -> int:
+    inb = sum(_operand_bytes(comp, ins.rest))
+    ob = ins.out_bytes
+    if kind == "all-reduce":
+        return 2 * inb
+    if kind == "all-gather":
+        return ob
+    if kind == "reduce-scatter":
+        return inb
+    return inb                              # all-to-all, collective-permute
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "collective_bytes": 0.0,
+                "collectives": {}, "warnings": ["no entry computation"]}
+    mult = compute_multipliers(comps, entry)
+    traffic_comps = _reached_via_calls(comps, entry)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_by_kind: Dict[str, float] = {}
+    coll_count: Dict[str, int] = {}
+    warnings = []
+    unrolled_trip1 = 0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        count_traffic = cname in traffic_comps
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(comp, ins)
+            elif ins.opcode == "convolution":
+                flops += m * _conv_flops(comp, ins)
+                warnings.append("convolution flops are approximate")
+            if ins.opcode == "while" and not _TRIP.search(ins.rest):
+                unrolled_trip1 += 1
+            base = ins.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                if ins.opcode.endswith("-done"):
+                    continue
+                w = m * _collective_wire_bytes(comp, ins, base)
+                coll_by_kind[base] = coll_by_kind.get(base, 0.0) + w
+                coll_count[base] = coll_count.get(base, 0) + int(m)
+            if count_traffic:
+                hbm += m * _instr_traffic(comp, ins)
+    if unrolled_trip1:
+        warnings.append(f"{unrolled_trip1} while-loop(s) without "
+                        "known_trip_count counted as 1 iteration")
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collective_bytes": sum(coll_by_kind.values()),
+        "collectives": {"bytes_by_kind": coll_by_kind,
+                        "count_by_kind": coll_count},
+        "warnings": sorted(set(warnings)),
+    }

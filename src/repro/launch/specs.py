@@ -1,0 +1,225 @@
+"""Cell plans: (architecture x input shape x mesh) -> a concrete step
+function + ShapeDtypeStruct inputs ready to ``.lower().compile()``.
+
+``input_specs()`` returns weak-type-correct, shardable stand-ins for
+every model input — no device allocation ever happens in the dry-run.
+
+Per-arch memory policy (grad-accum, grouped-scan remat, moment dtypes,
+loss chunk) is what makes the big cells fit a 16 GB v5e chip; the table
+is the tuned state of the §Perf iterations (EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.models.params import pspec_of, shape_structs
+from repro.models.sharding import make_rules
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import TrainConfig, make_train_step
+
+HBM_PER_CHIP = 16 * 1024**3          # v5e
+
+
+# --------------------------------------------------------------------------
+# Per-arch training memory policy (see EXPERIMENTS.md §Perf for tuning log)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ArchPolicy:
+    grad_accum: int = 1
+    scan_groups: int = 1
+    loss_chunk: int = 1024
+    m_dtype: Any = jnp.float32
+    v_dtype: Any = jnp.float32
+    factored_v: bool = False
+    param_dtype: Any = jnp.bfloat16
+    cap_factor: float = 1.25
+
+
+POLICIES = {
+    "llama3-405b": ArchPolicy(grad_accum=8, scan_groups=14, loss_chunk=512,
+                              m_dtype=jnp.bfloat16, factored_v=True),
+    "yi-34b": ArchPolicy(grad_accum=8, scan_groups=10, loss_chunk=512),
+    "gemma2-27b": ArchPolicy(grad_accum=8, scan_groups=2, loss_chunk=512),
+    "dbrx-132b": ArchPolicy(grad_accum=8, scan_groups=8, loss_chunk=512,
+                            m_dtype=jnp.bfloat16),
+    "mixtral-8x7b": ArchPolicy(grad_accum=8, scan_groups=4, loss_chunk=512),
+    "llava-next-mistral-7b": ArchPolicy(grad_accum=8, scan_groups=4,
+                                        loss_chunk=512),
+    "zamba2-1.2b": ArchPolicy(grad_accum=2),
+    "mamba2-780m": ArchPolicy(grad_accum=4),
+    "gemma3-1b": ArchPolicy(loss_chunk=512),
+    "seamless-m4t-medium": ArchPolicy(loss_chunk=512),
+}
+
+# encoder length used for encdec decode shapes (the 32k/500k cache is the
+# decoder's; the cross-attention context is a 4096-frame utterance)
+ENCDEC_DECODE_ENC_LEN = 4096
+
+
+def policy_for(arch: str) -> ArchPolicy:
+    return POLICIES.get(arch, ArchPolicy())
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    kind: str                       # train | prefill | decode
+    step_fn: Callable
+    args: tuple                     # ShapeDtypeStruct pytrees
+    donate: tuple = ()
+    note: str = ""
+
+
+class Skip(Exception):
+    """Cell not applicable (reason in str); recorded, not an error."""
+
+
+def _sds(shape, dtype, mesh, pspec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, pspec))
+
+
+def _batch_pspec(rules):
+    return P(rules.acts.lookup("batch"))
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    pol = policy_for(arch)
+    kind = shp.kind
+    if kind == "decode" and shp.seq_len > 65536:
+        kind = "decode_long"
+    rules = make_rules(cfg, mesh, kind=kind)
+    bp = _batch_pspec(rules)
+    B, S = shp.global_batch, shp.seq_len
+    out = {}
+    if shp.kind == "train":
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, bp)
+        out["labels"] = _sds((B, S), jnp.int32, mesh, bp)
+        if cfg.family == "vlm":
+            out["frontend"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                   jnp.float32, mesh, bp)
+        elif cfg.family == "encdec":
+            out["frontend"] = _sds((B, S, cfg.d_model), jnp.float32, mesh, bp)
+    elif shp.kind == "prefill":
+        out["tokens"] = _sds((B, S), jnp.int32, mesh, bp)
+        if cfg.family == "vlm":
+            out["frontend"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                   jnp.float32, mesh, bp)
+        elif cfg.family == "encdec":
+            out["frontend"] = _sds((B, S, cfg.d_model), jnp.float32, mesh, bp)
+        enc_len = S if cfg.family == "encdec" else 0
+        cspec = T.cache_spec(cfg, B, S, enc_len=enc_len)
+        out["cache"] = shape_structs(cspec, rules=rules.acts, mesh=mesh)
+    else:  # decode
+        out["tokens"] = _sds((B, 1), jnp.int32, mesh, bp)
+        enc_len = ENCDEC_DECODE_ENC_LEN if cfg.family == "encdec" else 0
+        cspec = T.cache_spec(cfg, B, S, enc_len=enc_len)
+        out["cache"] = shape_structs(cspec, rules=rules.acts, mesh=mesh)
+    del pol
+    return out
+
+
+def param_structs(cfg: ArchConfig, mesh, rules, dtype):
+    return shape_structs(T.model_spec(cfg), rules=rules.params, mesh=mesh,
+                         dtype=dtype)
+
+
+def opt_structs(cfg: ArchConfig, mesh, rules, pol: ArchPolicy):
+    """ShapeDtypeStructs for the AdamW state matching init_opt()."""
+    from repro.models.params import tree_paths_map
+    pspecs = T.model_spec(cfg)
+
+    def leaf(s):
+        axes = tuple(rules.params.lookup(n) for n in s.names)
+        ps = pspec_of(s, rules.params)
+        m = _sds(s.shape, pol.m_dtype, mesh, ps)
+        if pol.factored_v:
+            if len(s.shape) >= 2:
+                v = {"r": _sds(s.shape[:-1], jnp.float32, mesh,
+                               P(*axes[:-1])),
+                     "c": _sds(s.shape[:-2] + s.shape[-1:], jnp.float32,
+                               mesh, P(*(axes[:-2] + axes[-1:])))}
+            else:
+                v = {"f": _sds(s.shape, jnp.float32, mesh, ps)}
+        else:
+            v = _sds(s.shape, pol.v_dtype, mesh, ps)
+        return m, v
+    mv = tree_paths_map(leaf, pspecs)
+    m = jax.tree_util.tree_map(lambda t: t[0], mv,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree_util.tree_map(lambda t: t[1], mv,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    step = jax.ShapeDtypeStruct((), jnp.int32,
+                                sharding=NamedSharding(mesh, P()))
+    return {"m": m, "v": v, "step": step}
+
+
+def plan_cell(arch: str, shape_name: str, mesh) -> CellPlan:
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    pol = policy_for(arch)
+
+    if shp.name == "long_500k" and not cfg.subquadratic:
+        raise Skip(f"{arch} is pure full-attention: long_500k skipped per "
+                   "assignment (DESIGN.md §6)")
+
+    kind = shp.kind
+    if kind == "decode" and shp.seq_len > 65536:
+        kind = "decode_long"
+    rules = make_rules(cfg, mesh, kind=kind)
+    opts = T.ModelOpts(remat="full" if shp.kind == "train" else "none",
+                       scan_groups=pol.scan_groups if shp.kind == "train"
+                       else 1,
+                       loss_chunk=pol.loss_chunk,
+                       act_dtype=jnp.bfloat16,
+                       cap_factor=pol.cap_factor)
+    ins = input_specs(arch, shape_name, mesh)
+
+    if shp.kind == "train":
+        oc = OptConfig(m_dtype=pol.m_dtype, v_dtype=pol.v_dtype,
+                       factored_v=pol.factored_v)
+        tc = TrainConfig(grad_accum=pol.grad_accum)
+        step = make_train_step(cfg, oc, tc, rules=rules, opts=opts)
+        params = param_structs(cfg, mesh, rules, pol.param_dtype)
+        opt = opt_structs(cfg, mesh, rules, pol)
+        return CellPlan(arch, shape_name, "train", step,
+                        (params, opt, ins), donate=(0, 1),
+                        note=f"GA={pol.grad_accum} groups={pol.scan_groups}")
+
+    params = param_structs(cfg, mesh, rules, pol.param_dtype)
+    if shp.kind == "prefill":
+        def step(params, cache, tokens, frontend=None):
+            return T.prefill(params, cfg, tokens, cache, rules=rules,
+                             opts=opts, frontend_embeds=frontend)
+        args = [params, ins["cache"], ins["tokens"]]
+        if "frontend" in ins:
+            args.append(ins["frontend"])
+        return CellPlan(arch, shape_name, "prefill", step, tuple(args),
+                        donate=(1,))
+
+    # decode: one new token against a seq_len-deep cache
+    def step(params, cache, tokens):
+        return T.decode_step(params, cfg, cache, tokens, rules=rules,
+                             opts=opts)
+    return CellPlan(arch, shape_name, "decode", step,
+                    (params, ins["cache"], ins["tokens"]), donate=(1,),
+                    note=kind)
+
+
+def all_cells():
+    from repro.configs.registry import list_archs
+    for arch in list_archs():
+        for shape in SHAPES:
+            yield arch, shape

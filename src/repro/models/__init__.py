@@ -1,0 +1,8 @@
+from repro.models.transformer import (ModelOpts, decode_step, forward_hidden,
+                                      init_cache, init_params, logits_fn,
+                                      loss_fn, model_spec, prefill)
+from repro.models.sharding import MeshRules, make_rules
+
+__all__ = ["ModelOpts", "decode_step", "forward_hidden", "init_cache",
+           "init_params", "logits_fn", "loss_fn", "model_spec", "prefill",
+           "MeshRules", "make_rules"]

@@ -1,0 +1,468 @@
+"""Attention: GQA + RoPE + sliding window + softcap; direct / chunked /
+decode paths.
+
+The chunked path is the memory-safe jnp twin of kernels/flash_attention
+(online softmax over kv blocks, scan-over-chunks): it is what the 32k
+prefill lowers to in the dry-run; the Pallas kernel is the TPU-native
+version of the same loop (validated against the same oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import shard_act, spec
+from repro.utils import round_up
+
+NEG_INF = -1.0e30
+DIRECT_MAX_SEQ = 2048          # use the quadratic path at or below this
+
+
+def attention_spec(cfg):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": spec((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": spec((d, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": spec((d, K, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": spec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def cross_attention_spec(cfg):
+    return attention_spec(cfg)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd), positions (..., S) -> rotated x."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (...,S,1,half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (GQA grouped, no KV repeat)
+# ---------------------------------------------------------------------------
+def _scores_mask(s, rows, cols, *, causal, window, softcap, kv_valid):
+    """window: python int (0 = full) OR traced scalar (always applied;
+    callers encode "full" as a huge traced value for scanned layers)."""
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.ones(s.shape[-2:], dtype=bool)
+    if kv_valid is not None:
+        mask = mask & (cols < kv_valid)
+    if causal:
+        mask = mask & (cols <= rows)
+    if not (isinstance(window, int) and window <= 0):
+        mask = mask & ((rows - cols) < window)
+    return jnp.where(mask, s, NEG_INF)
+
+
+def attn_direct(q, k, v, *, scale, causal=True, window=0, softcap=0.0,
+                q_offset=0, kv_valid=None):
+    """q (B,Sq,H,hd); k,v (B,Sk,K,hd). Quadratic reference path.
+
+    Inputs stay in their storage dtype (bf16 on the serve path) with f32
+    MXU accumulation via preferred_element_type — materializing f32
+    copies of a multi-GB KV cache per layer dominated decode temp memory
+    (EXPERIMENTS.md §Perf)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    rows = q_offset + jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    s = _scores_mask(s, rows, cols, causal=causal, window=window,
+                     softcap=softcap, kv_valid=kv_valid)
+    p = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attn_chunked(q, k, v, *, scale, causal=True, window=0, softcap=0.0,
+                 q_offset=0, kv_valid=None,
+                 q_chunk=512, kv_chunk=1024):
+    """Online-softmax scan over kv chunks, outer scan over q chunks.
+
+    Bounded memory: one (q_chunk x kv_chunk) score block per head group at
+    a time, f32 accumulators. Matches attn_direct to float tolerance.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    Sqp, Skp = round_up(Sq, q_chunk), round_up(Sk, kv_chunk)
+    qp = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    kv_lim = jnp.asarray(Sk if kv_valid is None else kv_valid, jnp.int32)
+
+    nq, nk = Sqp // q_chunk, Skp // kv_chunk
+    q_blocks = qp.reshape(B, nq, q_chunk, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    k_blocks = kp.reshape(B, nk, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    v_blocks = vp.reshape(B, nk, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+        q_f = q_blk.astype(jnp.float32)
+
+        def kv_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, k_blk, v_blk = kj_blk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_f,
+                           k_blk.astype(jnp.float32)) * scale
+            rows = q_offset + qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            cols = kj * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            s = _scores_mask(s, rows, cols, causal=causal, window=window,
+                             softcap=softcap, kv_valid=kv_lim)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p,
+                            v_blk.astype(jnp.float32))
+            acc_new = acc * alpha[..., 0][..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), k_blocks, v_blocks))
+        l = jnp.maximum(l[..., 0][..., None], 1e-30)
+        y = (acc / l).transpose(0, 3, 1, 2, 4)        # (B, qc, K, G, hd)
+        return None, y.reshape(B, q_chunk, H, hd).astype(q.dtype)
+
+    _, ys = jax.lax.scan(q_step, None, (jnp.arange(nq), q_blocks))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sqp, H, hd)
+    return y[:, :Sq]
+
+
+# When True, long-sequence attention lowers to an HBM-traffic stand-in
+# with the SAME inputs/outputs but no materialized score blocks — the
+# traffic profile of the fused Pallas kernel (kernels/flash_attention),
+# which keeps blocks in VMEM. Used by the dry-run to derive the
+# "kernelized" roofline (the TPU deployment path); the analytic attention
+# FLOPs are added back by launch/dryrun.py. Never used for real compute.
+STUB_LONG_ATTENTION = False
+
+
+def _attn_traffic_stub(q, k, v):
+    """Reads q,k,v once, writes o once — the fused kernel's HBM profile."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    kv = (k.astype(jnp.float32) + v.astype(jnp.float32)).mean(
+        axis=1, keepdims=True)                          # (B,1,K,hd)
+    kv = jnp.repeat(kv, G, axis=2)                      # (B,1,H,hd)
+    return (q.astype(jnp.float32) * 1e-3 + kv * 1e-3).astype(q.dtype)
+
+
+def attn_auto(q, k, v, **kw):
+    if q.shape[1] <= DIRECT_MAX_SEQ and k.shape[1] <= DIRECT_MAX_SEQ:
+        kw.pop("q_chunk", None)
+        kw.pop("kv_chunk", None)
+        return attn_direct(q, k, v, **kw)
+    if STUB_LONG_ATTENTION:
+        return _attn_traffic_stub(q, k, v)
+    return flash_attention(q, k, v, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (jnp twin of kernels/flash_attention) with a custom VJP:
+# the backward pass RECOMPUTES score blocks instead of saving them, so
+# training memory is O(S*d) instead of O(S^2 / chunking) — without this the
+# scan-over-layers backward stacks every block's softmax intermediates
+# (measured: ~17 GiB/device on gemma3-1b train_4k; see EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+def _fa_fwd_impl(q, k, v, window, kv_valid, *, scale, causal, softcap,
+                 q_offset, q_chunk, kv_chunk):
+    """Returns (y (B,Sq,H,hd), lse (B,K,G,Sqp))."""
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    Sqp, Skp = round_up(Sq, qc), round_up(Sk, kc)
+    qp = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    kv_lim = jnp.minimum(jnp.asarray(kv_valid, jnp.int32), Sk)
+    nq, nk = Sqp // qc, Skp // kc
+    q_blocks = qp.reshape(B, nq, qc, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    k_blocks = kp.reshape(B, nk, kc, K, hd).transpose(1, 0, 2, 3, 4)
+    v_blocks = vp.reshape(B, nk, kc, K, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+        q_f = q_blk.astype(jnp.float32)
+
+        def kv_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, k_blk, v_blk = kj_blk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_f,
+                           k_blk.astype(jnp.float32)) * scale
+            rows = q_offset + qi * qc + jnp.arange(qc)[:, None]
+            cols = kj * kc + jnp.arange(kc)[None, :]
+            s = _scores_mask(s, rows, cols, causal=causal, window=window,
+                             softcap=softcap, kv_valid=kv_lim)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc * alpha[..., 0][..., None] + pv), None
+
+        m0 = jnp.full((B, K, G, qc, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, qc, 1), jnp.float32)
+        a0 = jnp.zeros((B, K, G, qc, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), k_blocks, v_blocks))
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+        y = (acc / jnp.maximum(l, 1e-30)).transpose(0, 3, 1, 2, 4)
+        return None, (y.reshape(B, qc, H, hd).astype(q.dtype), lse[..., 0])
+
+    _, (ys, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), q_blocks))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Sqp, H, hd)[:, :Sq]
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, K, G, Sqp)
+    return y, lse
+
+
+def _fa_bwd_impl(q, k, v, window, kv_valid, y, lse, dy, *, scale, causal,
+                 softcap, q_offset, q_chunk, kv_chunk):
+    """Block-recomputing backward. Returns (dq, dk, dv)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    Sqp, Skp = round_up(Sq, qc), round_up(Sk, kc)
+    qp = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    yp = jnp.pad(y, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0)))
+    dyp = jnp.pad(dy, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0)))
+    kv_lim = jnp.minimum(jnp.asarray(kv_valid, jnp.int32), Sk)
+    nq, nk = Sqp // qc, Skp // kc
+    # D = rowsum(dy * y) per head -> (B,K,G,Sqp)
+    D = jnp.sum(dyp.astype(jnp.float32) * yp.astype(jnp.float32), axis=-1)
+    D = D.reshape(B, Sqp, K, G).transpose(0, 2, 3, 1)
+
+    qb = qp.reshape(B, nq, qc, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    dyb = dyp.reshape(B, nq, qc, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(B, nk, kc, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, kc, K, hd).transpose(1, 0, 2, 3, 4)
+    lse_b = lse.reshape(B, K, G, nq, qc).transpose(3, 0, 1, 2, 4)
+    D_b = D.reshape(B, K, G, nq, qc).transpose(3, 0, 1, 2, 4)
+
+    def kv_step(dq_full, kj_blk):
+        kj, k_blk, v_blk = kj_blk
+        k_f = k_blk.astype(jnp.float32)
+        v_f = v_blk.astype(jnp.float32)
+
+        def q_step(carry, qi_blk):
+            dkj, dvj, dq_full = carry
+            qi, q_blk, dy_blk, lse_i, D_i = qi_blk
+            q_f = q_blk.astype(jnp.float32)
+            s_raw = jnp.einsum("bqkgd,bskd->bkgqs", q_f, k_f) * scale
+            if softcap > 0.0:
+                t = jnp.tanh(s_raw / softcap)
+                s_cap = softcap * t
+            else:
+                s_cap = s_raw
+            rows = q_offset + qi * qc + jnp.arange(qc)[:, None]
+            cols = kj * kc + jnp.arange(kc)[None, :]
+            mask = jnp.ones(s_cap.shape[-2:], dtype=bool)
+            mask = mask & (cols < kv_lim)
+            if causal:
+                mask = mask & (cols <= rows)
+            if not (isinstance(window, int) and window <= 0):
+                mask = mask & ((rows - cols) < window)
+            s_m = jnp.where(mask, s_cap, NEG_INF)
+            p = jnp.exp(s_m - lse_i[..., None])               # (b,k,g,q,s)
+            dy_f = dy_blk.astype(jnp.float32)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", dy_f, v_f)
+            ds = p * (dp - D_i[..., None])
+            if softcap > 0.0:
+                ds = ds * (1.0 - t * t)
+            ds = ds * scale
+            dq_i = jnp.einsum("bkgqs,bskd->bqkgd", ds, k_f)
+            prev = jax.lax.dynamic_slice(
+                dq_full, (0, qi * qc, 0, 0, 0), (B, qc, K, G, hd))
+            dq_full = jax.lax.dynamic_update_slice(
+                dq_full, prev + dq_i, (0, qi * qc, 0, 0, 0))
+            dkj = dkj + jnp.einsum("bkgqs,bqkgd->bskd", ds, q_f)
+            dvj = dvj + jnp.einsum("bkgqs,bqkgd->bskd", p, dy_f)
+            return (dkj, dvj, dq_full), None
+
+        dkj0 = jnp.zeros((B, kc, K, hd), jnp.float32)
+        dvj0 = jnp.zeros((B, kc, K, hd), jnp.float32)
+        (dkj, dvj, dq_full), _ = jax.lax.scan(
+            q_step, (dkj0, dvj0, dq_full),
+            (jnp.arange(nq), qb, dyb, lse_b, D_b))
+        return dq_full, (dkj, dvj)
+
+    dq0 = jnp.zeros((B, Sqp, K, G, hd), jnp.float32)
+    dq_full, (dks, dvs) = jax.lax.scan(
+        kv_step, dq0, (jnp.arange(nk), kb, vb))
+    dq = dq_full.reshape(B, Sqp, H, hd)[:, :Sq].astype(q.dtype)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Skp, K, hd)[:, :Sk]
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Skp, K, hd)[:, :Sk]
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(scale, causal, softcap, q_offset, q_chunk, kv_chunk):
+    kw = dict(scale=scale, causal=causal, softcap=softcap,
+              q_offset=q_offset, q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    @jax.custom_vjp
+    def fa(q, k, v, window, kv_valid):
+        y, _ = _fa_fwd_impl(q, k, v, window, kv_valid, **kw)
+        return y
+
+    def fa_fwd(q, k, v, window, kv_valid):
+        y, lse = _fa_fwd_impl(q, k, v, window, kv_valid, **kw)
+        return y, (q, k, v, window, kv_valid, y, lse)
+
+    def fa_bwd(res, dy):
+        q, k, v, window, kv_valid, y, lse = res
+        dq, dk, dv = _fa_bwd_impl(q, k, v, window, kv_valid, y, lse, dy,
+                                  **kw)
+        zw = np.zeros(jnp.shape(window), jax.dtypes.float0)
+        zv = np.zeros(jnp.shape(kv_valid), jax.dtypes.float0)
+        return dq, dk, dv, zw, zv
+
+    fa.defvjp(fa_fwd, fa_bwd)
+    return fa
+
+
+def flash_attention(q, k, v, *, scale, causal=True, window=0, softcap=0.0,
+                    q_offset=0, kv_valid=None, q_chunk=512, kv_chunk=1024):
+    """Chunked attention with recompute-in-backward (drop-in for
+    attn_chunked; bit-identical forward, O(S*d) residuals)."""
+    kv_valid = jnp.asarray(k.shape[1] if kv_valid is None else kv_valid,
+                           jnp.int32)
+    if isinstance(window, int) and window <= 0:
+        window = 1 << 30                    # "full attention" sentinel
+    window = jnp.asarray(window, jnp.int32)
+    fa = _make_flash(float(scale), bool(causal), float(softcap),
+                     int(q_offset), int(q_chunk), int(kv_chunk))
+    return fa(q, k, v, window, kv_valid)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + attention + out)
+# ---------------------------------------------------------------------------
+def project_qkv(p, x, positions, theta, *, rope_on=True, rules=None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if rope_on:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    q = shard_act(q, ("batch", "seq", "heads", "head_dim"), rules)
+    k = shard_act(k, ("batch", "seq", "kv_heads", "head_dim"), rules)
+    v = shard_act(v, ("batch", "seq", "kv_heads", "head_dim"), rules)
+    return q, k, v
+
+
+def attention(p, x, cfg, *, window: jax.Array | int, positions,
+              causal=True, rules=None, return_kv=False, rope_on=True):
+    """Full-sequence attention (train / prefill).
+
+    `window` may be a traced per-layer scalar (scan over heterogeneous
+    layer patterns): 0 selects full attention via a huge window.
+    """
+    scale = cfg.head_dim ** -0.5
+    q, k, v = project_qkv(p, x, positions, cfg.rope_theta,
+                          rules=rules, rope_on=rope_on)
+    win = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
+    y = attn_auto(q, k, v, scale=scale, causal=causal,
+                  window=win, softcap=cfg.softcap_attn)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    out = shard_act(out, ("batch", "seq", "embed"), rules)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def cross_attention(p, x, enc_kv, cfg, *, rules=None, enc_valid=None):
+    """Decoder cross-attention over precomputed encoder k/v."""
+    scale = cfg.head_dim ** -0.5
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k, v = enc_kv
+    y = attn_auto(q, k, v, scale=scale, causal=False, window=0,
+                  softcap=0.0, kv_valid=enc_valid)
+    return jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+
+
+def encode_cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def decode_qkv(p, x, pos, cfg, *, rules=None, rope_on=True):
+    """Project the new token: x (B,1,d) -> q,k,v (B,1,·,hd) at position pos."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    return project_qkv(p, x, positions, cfg.rope_theta, rules=rules,
+                       rope_on=rope_on)
+
+
+def decode_attend(p, q, cache_k, cache_v, cfg, *, window, pos, kv_valid=None):
+    """Attend the projected new-token q over an (already updated) cache.
+
+    Splitting update/attend lets the caller write only the new (B,K,hd)
+    slot into the stacked cache (in-place on the donated buffer) instead
+    of round-tripping the whole (B,S,K,hd) layer slice."""
+    scale = cfg.head_dim ** -0.5
+    win = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
+    y = attn_direct(q, cache_k, cache_v, scale=scale, causal=True,
+                    window=win, softcap=cfg.softcap_attn, q_offset=pos,
+                    kv_valid=pos + 1 if kv_valid is None else kv_valid)
+    return jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+
+
+def decode_attention(p, x, cache_k, cache_v, cfg, *, window, pos,
+                     rules=None, rope_on=True):
+    """One-token decode: x (B,1,d); cache (B,S,K,hd); pos () current index.
+
+    Returns (out (B,1,d), new_cache_k, new_cache_v).
+    """
+    scale = cfg.head_dim ** -0.5
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = project_qkv(p, x, positions, cfg.rope_theta,
+                          rules=rules, rope_on=rope_on)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    win = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window), 1 << 30)
+    y = attn_direct(q, cache_k, cache_v, scale=scale, causal=True,
+                    window=win, softcap=cfg.softcap_attn,
+                    q_offset=pos, kv_valid=pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return out, cache_k, cache_v

@@ -1,0 +1,49 @@
+"""Modality frontend STUBS (per the assignment: [audio]/[vlm] entries
+specify the transformer backbone only; ``input_specs()`` provides
+precomputed frame/patch embeddings).
+
+The stubs are deterministic functions so smoke tests are reproducible and
+the dry-run can describe them as plain input tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+# llava-next anyres tiling: 4 high-res tiles + 1 base view, 576 patches each
+VISION_TILES = 5
+VISION_PATCHES_PER_TILE = 576
+# seamless fbank frontend: 80-dim mel frames, stride-2 conv downsample (stub)
+AUDIO_FRAME_STRIDE = 2
+
+
+def frontend_shape(cfg: ArchConfig, batch: int, seq_len: int):
+    """Shape of the precomputed embedding tensor the stub supplies."""
+    if cfg.frontend == "vision":
+        return (batch, cfg.frontend_tokens, cfg.d_model)
+    if cfg.frontend == "audio":
+        # encoder input: one embedding per (downsampled) fbank frame
+        return (batch, seq_len, cfg.d_model)
+    return None
+
+
+def vision_stub(cfg: ArchConfig, batch: int, key: jax.Array) -> jax.Array:
+    """Precomputed anyres patch embeddings (B, frontend_tokens, d)."""
+    assert cfg.frontend == "vision"
+    f = cfg.frontend_tokens
+    x = jax.random.normal(key, (batch, f, cfg.d_model), jnp.float32)
+    # tile-position offset so the 5 anyres views are distinguishable
+    tiles = max(f // VISION_PATCHES_PER_TILE, 1)
+    tile_id = jnp.arange(f) // max(f // tiles, 1)
+    return x + 0.1 * tile_id[None, :, None].astype(jnp.float32)
+
+
+def audio_stub(cfg: ArchConfig, batch: int, frames: int,
+               key: jax.Array) -> jax.Array:
+    """Precomputed fbank-frame embeddings (B, frames, d)."""
+    assert cfg.frontend == "audio"
+    x = jax.random.normal(key, (batch, frames, cfg.d_model), jnp.float32)
+    # smooth over time like a conv frontend would
+    return 0.5 * (x + jnp.roll(x, 1, axis=1))

@@ -1,0 +1,57 @@
+"""Shared layers: RMSNorm, gated MLP, embedding/head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import shard_act, spec
+
+
+def rmsnorm_spec(d: int):
+    return {"scale": spec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_spec(d: int, f: int):
+    """Gated MLP (llama-style): silu(x W1) * (x W3) @ W2."""
+    return {
+        "w1": spec((d, f), ("embed", "ffn")),
+        "w3": spec((d, f), ("embed", "ffn")),
+        "w2": spec((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp(p, x, act: str = "silu", rules=None):
+    h1 = jnp.einsum("...d,df->...f", x, p["w1"])
+    h3 = jnp.einsum("...d,df->...f", x, p["w3"])
+    a = jax.nn.silu(h1) if act == "silu" else jax.nn.gelu(h1)
+    h = shard_act(a * h3, ("batch", "seq", "ffn"), rules)
+    return jnp.einsum("...f,fd->...d", h, p["w2"])
+
+
+def embed_spec(vocab: int, d: int, tie: bool):
+    out = {"embedding": spec((vocab, d), ("vocab", "embed"), scale=1.0)}
+    if not tie:
+        out["head"] = spec((d, vocab), ("embed", "vocab"))
+    return out
+
+
+def embed(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p, x, tie: bool, softcap: float = 0.0):
+    if tie:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["head"])
+    logits = logits.astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

@@ -1,0 +1,130 @@
+"""Minimal parameter system: specs with logical axis names.
+
+Models declare their parameters as trees of ``ParamSpec`` (shape + dtype +
+logical axis names). From one spec tree we derive:
+
+  * materialized random-init arrays      (training / smoke tests)
+  * jax.ShapeDtypeStruct stand-ins       (dry-run lowering, no allocation)
+  * PartitionSpecs via ShardingRules     (pjit in/out shardings)
+
+No flax/haiku dependency — params are plain nested dicts of arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    names: tuple            # logical axis name per dim (None = unsharded)
+    dtype: Any = jnp.float32
+    init: str = "normal"    # normal | zeros | ones
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+
+
+def spec(shape, names, dtype=jnp.float32, init="normal", scale=None):
+    assert len(shape) == len(names), (shape, names)
+    return ParamSpec(tuple(shape), tuple(names), dtype, init, scale)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_paths_map(fn, tree):
+    return jax.tree_util.tree_map(fn, tree,
+                                  is_leaf=is_spec)
+
+
+def materialize(spec_tree, key: jax.Array, dtype=None):
+    """Random-init the parameter tree (deterministic per leaf path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        dt = dtype or s.dtype
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            fan_in = s.shape[0] if len(s.shape) >= 1 else 1
+            scale = s.scale if s.scale is not None else fan_in ** -0.5
+            out.append((jax.random.normal(k, s.shape, jnp.float32)
+                        * scale).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shape_structs(spec_tree, rules=None, mesh=None, dtype=None):
+    """ShapeDtypeStructs (optionally with shardings) for dry-run lowering."""
+    def mk(s: ParamSpec):
+        dt = dtype or s.dtype
+        if rules is not None and mesh is not None:
+            sh = NamedSharding(mesh, pspec_of(s, rules))
+            return jax.ShapeDtypeStruct(s.shape, dt, sharding=sh)
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return tree_paths_map(mk, spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules: logical axis name -> mesh axis (or tuple, or None)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    table: tuple  # tuple of (logical, physical) pairs; physical: str|tuple|None
+
+    def lookup(self, name) -> Any:
+        for k, v in self.table:
+            if k == name:
+                return v
+        return None
+
+    @staticmethod
+    def of(mapping: Mapping[str, Any]) -> "ShardingRules":
+        return ShardingRules(tuple(mapping.items()))
+
+
+def pspec_of(s: ParamSpec, rules: ShardingRules) -> P:
+    axes = tuple(rules.lookup(n) for n in s.names)
+    # drop trailing Nones for tidiness
+    while axes and axes[-1] is None:
+        axes = axes[:-1]
+    return P(*axes)
+
+
+def param_pspecs(spec_tree, rules: ShardingRules):
+    return tree_paths_map(lambda s: pspec_of(s, rules), spec_tree)
+
+
+def logical_pspec(names: Sequence, rules: Optional[ShardingRules]) -> P:
+    if rules is None:
+        return P()
+    axes = tuple(rules.lookup(n) for n in names)
+    while axes and axes[-1] is None:
+        axes = axes[:-1]
+    return P(*axes)
+
+
+def shard_act(x: jax.Array, names: Sequence,
+              rules: Optional[ShardingRules]) -> jax.Array:
+    """Constrain an activation's sharding by logical names (no-op w/o rules)."""
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_pspec(names, rules))
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

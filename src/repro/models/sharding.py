@@ -1,0 +1,183 @@
+"""Sharding rules: logical axis names -> mesh axes, per (arch, step kind).
+
+Two tables per rule set (the same logical name can legally map differently
+for a parameter and an activation — e.g. "embed" is FSDP-sharded on params
+but unsharded on the residual stream, whose batch axis already occupies
+the data mesh axis):
+
+  * params — consumed by ``params.param_pspecs`` (pjit in_shardings).
+    FSDP: every major param matrix carries one axis sharded over the data
+    (+pod) axes; XLA all-gathers at use and reduce-scatters grads (ZeRO-3).
+  * acts   — consumed by ``params.shard_act`` constraints inside the model.
+    TP: heads/ffn/experts live on the "model" axis.
+
+``MeshRules`` duck-types ``ShardingRules`` (``.lookup`` == activation
+lookup) so it can be passed wherever the model plumbing expects ``rules``.
+
+Axes are only mapped when the dimension is divisible by the mesh axis
+size (uneven GSPMD padding is legal but wasteful; we opt out and leave
+the dim replicated instead — e.g. kv_heads=8 on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    acts: ShardingRules
+    params: ShardingRules
+    mesh: object = None                     # for shard_map sub-regions
+
+    def lookup(self, name):                 # duck-type ShardingRules
+        return self.acts.lookup(name)
+
+
+def _axis_size(mesh, name) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+def make_rules(cfg: ArchConfig, mesh, *, kind: str = "train",
+               force_fsdp_params: Optional[bool] = None) -> MeshRules:
+    """Build FSDP+TP rules for ``cfg`` on ``mesh``.
+
+    kind: train | prefill | decode | decode_long
+    """
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    fsdp = ("pod", "data") if has_pod else ("data",)
+    fsdp_size = _prod(_axis_size(mesh, a) for a in fsdp)
+    model = "model" if "model" in names else None
+    msize = _axis_size(mesh, "model")
+
+    def div(n: int, axis, size: int):
+        return axis if (axis and n and n % size == 0) else None
+
+    vpad = cfg.vocab_padded()
+
+    # ---- parameter table --------------------------------------------------
+    # Serving keeps TP but drops FSDP when the whole model fits one chip's
+    # HBM share under TP alone (all-gathering weights every decode step is
+    # pure overhead there); training always uses FSDP. The TP-only bytes
+    # are computed EXACTLY per leaf: dims that don't divide the model axis
+    # (yi-34b's 56 heads on 16) replicate, which a param_count/msize
+    # heuristic misses by 4x.
+    if force_fsdp_params is None:
+        fsdp_params = (kind == "train"
+                       or _tp_only_bytes(cfg, msize) > 6e9)
+    else:
+        fsdp_params = force_fsdp_params
+    p_embed = (fsdp if (fsdp_params and cfg.d_model % fsdp_size == 0)
+               else None)
+
+    # MoE: experts stay unsharded on the expert axis; expert FFNs are TP
+    # over "model" on d_ff and the dispatch is LOCAL per data shard
+    # (moe_ffn_shard_map) — measured far cheaper than GSPMD expert-
+    # parallel sharding of the capacity scatter (EXPERIMENTS.md §Perf).
+    p_experts = None
+    p_ffn = div(cfg.d_ff, model, msize)
+
+    param_table = {
+        "embed": p_embed,
+        "ffn": p_ffn,
+        "heads": div(cfg.num_heads, model, msize),
+        "kv_heads": div(cfg.num_kv_heads, model, msize),
+        "head_dim": None,
+        "vocab": div(vpad, model, msize),
+        "experts": p_experts,
+        "ssm_inner": div(cfg.d_inner, model, msize),
+        "ssm_heads": div(cfg.ssm_heads, model, msize),
+        "layers": None,
+    }
+
+    # ---- activation table --------------------------------------------------
+    # KV cache sharding for decode: prefer kv_heads on the model axis;
+    # when the kv-head count doesn't divide it (GQA with few KV heads),
+    # shard head_dim instead — attention then contracts over a sharded
+    # dim (partial sums + all-reduce), which beats replicating a multi-GB
+    # cache per chip.
+    kv_axis = div(cfg.num_kv_heads, model, msize)
+    hd_axis = None if kv_axis else div(cfg.head_dim, model, msize)
+    if kind == "decode_long":
+        # batch == 1: shard the (huge) KV cache along sequence over every
+        # available axis; per-token compute is trivial -> replicate it.
+        seq_axes = (("pod",) if has_pod else ()) + ("data", "model")
+        act_table = {
+            "batch": None, "seq": seq_axes, "embed": None, "ffn": None,
+            "heads": None, "kv_heads": None, "head_dim": None,
+            "cache_hd": None, "vocab": None, "experts": None,
+            "moe_cap": None,
+            "ssm_inner": div(cfg.d_inner, model, msize),
+            "ssm_heads": div(cfg.ssm_heads, model, msize),
+            "layers": None,
+        }
+    else:
+        act_table = {
+            "batch": fsdp,
+            "seq": None,
+            "embed": None,
+            "ffn": p_ffn,
+            # decode with hd-sharded caches: q/k/v shard head_dim, so
+            # heads must stay unsharded (one mesh axis per spec)
+            "heads": (None if (kind == "decode" and hd_axis)
+                      else div(cfg.num_heads, model, msize)),
+            "kv_heads": kv_axis if kind != "train"
+            else div(cfg.num_kv_heads, model, msize),
+            # decode computes attention against the sharded cache, so the
+            # new token's q/k/v shard head_dim to match; prefill must NOT
+            # (hd-sharded RoPE/flash-attention inserts per-block
+            # collectives — measured 1163s collective on yi-34b prefill).
+            # "cache_hd" shards cache STORAGE only: prefill writes incur
+            # one resharding collective per layer, not per block.
+            "head_dim": hd_axis if kind == "decode" else None,
+            "cache_hd": hd_axis if kind in ("decode", "prefill") else None,
+            "vocab": div(vpad, model, msize),
+            "experts": p_experts,
+            "moe_cap": fsdp,          # MoE bucket capacity dim (huge at 32k)
+            "ssm_inner": div(cfg.d_inner, model, msize),
+            "ssm_heads": div(cfg.ssm_heads, model, msize),
+            "layers": None,
+        }
+    return MeshRules(acts=ShardingRules.of(act_table),
+                     params=ShardingRules.of(param_table),
+                     mesh=mesh if hasattr(mesh, "shape") else None)
+
+
+def cache_pspec_names(kind: str):
+    """Logical names for KV-cache arrays (layers, batch, seq, kv, hd)."""
+    return ("layers", "batch", "seq", "kv_heads", "head_dim")
+
+
+def _tp_only_bytes(cfg: ArchConfig, msize: int) -> float:
+    """Exact per-chip bf16 param bytes under TP-only sharding."""
+    from repro.models.params import tree_paths_map
+    from repro.models.transformer import model_spec   # lazy: avoid cycle
+
+    shardable = {"ffn": cfg.d_ff, "heads": cfg.num_heads,
+                 "kv_heads": cfg.num_kv_heads, "vocab": cfg.vocab_padded(),
+                 "ssm_inner": cfg.d_inner, "ssm_heads": cfg.ssm_heads}
+    total = [0.0]
+
+    def leaf(s):
+        n = 1.0
+        for dim, name in zip(s.shape, s.names):
+            if (name in shardable and shardable[name]
+                    and shardable[name] % msize == 0):
+                n *= dim / msize
+            else:
+                n *= dim
+        total[0] += n * 2.0
+        return s
+    tree_paths_map(leaf, model_spec(cfg))
+    return total[0]

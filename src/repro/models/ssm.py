@@ -1,0 +1,192 @@
+"""Mamba2 block — SSD (state-space duality, arXiv:2405.21060) in JAX.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside chunks (MXU-friendly) + an O(S/Q) state-passing scan
+between chunks. Decode uses the exact recurrent step (O(1) state). The two
+paths are numerically equivalent (tests/test_ssm.py).
+
+Single B/C group, head-level dt, scalar-per-head A — the standard Mamba2
+parameterization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+from repro.models.params import shard_act, spec
+
+NEG_INF = -1.0e30
+
+
+def ssm_spec(cfg):
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    return {
+        "wz": spec((d, di), ("embed", "ssm_inner")),
+        "wx": spec((d, di), ("embed", "ssm_inner")),
+        "wB": spec((d, ds), ("embed", None)),
+        "wC": spec((d, ds), ("embed", None)),
+        "wdt": spec((d, nh), ("embed", "ssm_heads")),
+        "conv_x": spec((w, di), (None, "ssm_inner"), scale=w ** -0.5),
+        "conv_B": spec((w, ds), (None, None), scale=w ** -0.5),
+        "conv_C": spec((w, ds), (None, None), scale=w ** -0.5),
+        "A_log": spec((nh,), ("ssm_heads",), init="zeros"),
+        "dt_bias": spec((nh,), ("ssm_heads",), init="zeros"),
+        "D": spec((nh,), ("ssm_heads",), init="ones"),
+        "norm": spec((di,), ("ssm_inner",), init="ones"),
+        "wo": spec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. u (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    out = u * w[W - 1]
+    for k in range(1, W):
+        shifted = jnp.pad(u, ((0, 0), (k, 0), (0, 0)))[:, : u.shape[1]]
+        out = out + shifted * w[W - 1 - k]
+    return out
+
+
+def _conv_step(conv_state: jax.Array, u_t: jax.Array, w: jax.Array):
+    """conv_state (B, W-1, C) holds previous inputs; u_t (B, 1, C)."""
+    full = jnp.concatenate([conv_state, u_t], axis=1)       # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w)[:, None]          # (B, 1, C)
+    return y, full[:, 1:]
+
+
+def _inputs(p, x, cfg):
+    """Shared projections for both paths. x (B,S,d)."""
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    px = jnp.einsum("bsd,de->bse", x, p["wx"])
+    pB = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    pC = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, px, pB, pC, dt
+
+
+def ssm_chunked(p, x, cfg, *, chunk: int = 128, rules=None,
+                initial_state=None, return_state: bool = False):
+    """Full-sequence SSD. x (B,S,d) -> (B,S,d). S % chunk need not hold."""
+    B, S, d = x.shape
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, px, pB, pC, dt = _inputs(p, x, cfg)
+    xc = jax.nn.silu(_causal_conv(px, p["conv_x"]))
+    Bc = jax.nn.silu(_causal_conv(pB, p["conv_B"]))
+    Cc = jax.nn.silu(_causal_conv(pC, p["conv_C"]))
+
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (nh,)
+    loga = dt * A[None, None, :]                            # (B,Sp,nh) <= 0
+    xh = xc.astype(jnp.float32).reshape(B, Sp, nh, hd)
+    xh = shard_act(xh, ("batch", "seq", "ssm_heads", None), rules)
+
+    def to_chunks(a, feat_shape):
+        return a.reshape((B, nc, Q) + feat_shape).swapaxes(0, 1)
+
+    xs = (to_chunks(xh, (nh, hd)), to_chunks(Bc.astype(jnp.float32), (ds,)),
+          to_chunks(Cc.astype(jnp.float32), (ds,)), to_chunks(loga, (nh,)),
+          to_chunks(dt, (nh,)))
+
+    if initial_state is None:
+        state0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    else:
+        state0 = initial_state.astype(jnp.float32)
+    iq = jnp.arange(Q)
+
+    def chunk_step(state, xs_c):
+        x_c, B_c, C_c, la_c, dt_c = xs_c          # (B,Q,nh,hd) (B,Q,ds) ...
+        La = jnp.cumsum(la_c, axis=1)             # (B,Q,nh), non-increasing
+        # intra-chunk (attention-like, masked lower-triangular):
+        # contribution of step j to output i (j<=i) decays by exp(La_i-La_j)
+        seg = La[:, :, None, :] - La[:, None, :, :]          # (B,Qi,Qj,nh)
+        seg = jnp.where((iq[:, None] >= iq[None, :])[None, :, :, None],
+                        seg, NEG_INF)
+        decay = jnp.exp(seg)
+        cb = jnp.einsum("bin,bjn->bij", C_c, B_c)
+        scores = cb[..., None] * decay * dt_c[:, None, :, :]  # (B,Qi,Qj,nh)
+        y = jnp.einsum("bijh,bjhp->bihp", scores, x_c)
+        # inter-chunk contribution from carried state
+        y = y + jnp.einsum("bin,bhpn->bihp", C_c, state) \
+            * jnp.exp(La)[..., None]
+        # state update: decay whole chunk + inject each step's B x outer-prod
+        w = dt_c * jnp.exp(La[:, -1:, :] - La)
+        state = state * jnp.exp(La[:, -1, :])[..., None, None] \
+            + jnp.einsum("bjh,bjn,bjhp->bhpn", w, B_c, x_c)
+        return state, y
+
+    # checkpoint the chunk body: backward recomputes the O(Q^2) intra-chunk
+    # decay/score blocks instead of stacking them across all S/Q chunks
+    state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, Sp, nh, hd)[:, :S]
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh[:, :S]
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": p["norm"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["wo"])
+    out = shard_act(out, ("batch", "seq", "embed"), rules)
+    if return_state:
+        conv_state = _tail_conv_state(px, pB, pC, cfg)
+        return out, (state, conv_state)
+    return out
+
+
+def _tail_conv_state(px, pB, pC, cfg):
+    """Last W-1 pre-conv inputs, concatenated channelwise, for decode."""
+    w = cfg.ssm_conv
+    cat = jnp.concatenate([px, pB, pC], axis=-1)       # (B,S,di+2ds)
+    B, S, C = cat.shape
+    padded = jnp.pad(cat, ((0, 0), (max(w - 1 - S, 0), 0), (0, 0)))
+    return padded[:, -(w - 1):]
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32):
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return (jnp.zeros((batch, nh, hd, ds), dtype),
+            jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype))
+
+
+def ssm_step(p, x, state, cfg, *, rules=None):
+    """Recurrent decode. x (B,1,d); state=(ssm (B,nh,hd,ds), conv (B,W-1,C)).
+
+    Returns (out (B,1,d), new state). Exactly equivalent to ssm_chunked
+    processed one token at a time.
+    """
+    B = x.shape[0]
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    ssm_state, conv_state = state
+    z, px, pB, pC, dt = _inputs(p, x, cfg)
+    cat = jnp.concatenate([px, pB, pC], axis=-1)
+    wcat = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    y_cat, conv_state = _conv_step(conv_state, cat, wcat)
+    y_cat = jax.nn.silu(y_cat)
+    xc = y_cat[..., :di]
+    Bc = y_cat[..., di:di + ds]
+    Cc = y_cat[..., di + ds:]
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[:, 0] * A[None, :])                        # (B,nh)
+    xh = xc.astype(jnp.float32).reshape(B, nh, hd)
+    st = ssm_state.astype(jnp.float32) * a[..., None, None] \
+        + jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0], Bc[:, 0].astype(jnp.float32),
+                     xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), st)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": p["norm"]}, y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["wo"])
+    return out, (st.astype(ssm_state.dtype), conv_state)

@@ -1,0 +1,670 @@
+"""Model assembly for all assigned architectures.
+
+One module builds every family from the shared blocks:
+
+  dense   llama3/yi/gemma2/gemma3 (GQA, RoPE, sliding-window patterns,
+          logit softcaps) and the llava backbone (vision stub prefix)
+  moe     mixtral/dbrx — dense attention + capacity-bounded MoE FFN
+  ssm     mamba2 — attention-free SSD blocks
+  hybrid  zamba2 — SSD backbone + one shared attention+MLP block applied
+          every k-th layer (weight-tied, per-application KV cache)
+  encdec  seamless — full-attention encoder (audio-stub input) + causal
+          decoder with cross-attention
+
+Three entry points per model, shared across families:
+
+  forward_hidden   full-sequence (training / scoring)  -> final hidden
+  prefill          full-sequence + cache population    -> (last logits, cache)
+  decode_step      one token against the cache         -> (logits, cache)
+
+Layers run under ``jax.lax.scan`` with stacked parameters; remat is
+configurable (none / full / dots) with optional two-level grouped scan
+(sqrt-memory activation checkpointing for the 100+ layer archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models.layers import (embed, embed_spec, mlp, mlp_spec, rmsnorm,
+                                 rmsnorm_spec, unembed)
+from repro.models.moe import moe_apply, moe_spec
+from repro.models.params import ParamSpec, is_spec, materialize, spec, \
+    tree_paths_map
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOpts:
+    """Static per-run model options (hashable: usable as a jit static arg)."""
+
+    remat: str = "full"          # none | full | dots
+    scan_groups: int = 1         # >1: two-level scan (sqrt-memory remat)
+    loss_chunk: int = 2048       # vocab-chunked xent sequence chunk
+    act_dtype: Any = jnp.float32  # residual-stream compute dtype
+    cap_factor: float = 1.25     # MoE dispatch capacity factor
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+def _stack(tree, L: int):
+    """Add a leading ("layers",) axis to every spec; preserve init scale."""
+    def f(s: ParamSpec):
+        scale = s.scale
+        if scale is None and s.init == "normal":
+            scale = (s.shape[0] ** -0.5) if len(s.shape) else 1.0
+        return ParamSpec((L,) + s.shape, ("layers",) + s.names, s.dtype,
+                         s.init, scale)
+    return tree_paths_map(f, tree)
+
+
+def attn_mlp_block_spec(cfg: ArchConfig):
+    return {"ln1": rmsnorm_spec(cfg.d_model),
+            "attn": A.attention_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def moe_block_spec(cfg: ArchConfig):
+    return {"ln1": rmsnorm_spec(cfg.d_model),
+            "attn": A.attention_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model),
+            "moe": moe_spec(cfg)}
+
+
+def ssm_block_spec(cfg: ArchConfig):
+    return {"ln1": rmsnorm_spec(cfg.d_model), "ssm": S.ssm_spec(cfg)}
+
+
+def decoder_block_spec(cfg: ArchConfig):
+    return {"ln1": rmsnorm_spec(cfg.d_model),
+            "attn": A.attention_spec(cfg),
+            "lnx": rmsnorm_spec(cfg.d_model),
+            "xattn": A.cross_attention_spec(cfg),
+            "ln2": rmsnorm_spec(cfg.d_model),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff)}
+
+
+def model_spec(cfg: ArchConfig):
+    d, L = cfg.d_model, cfg.num_layers
+    V = cfg.vocab_padded()
+    out = {"tok": embed_spec(V, d, cfg.tie_embeddings),
+           "fln": rmsnorm_spec(d)}
+    if cfg.family in ("dense", "vlm"):
+        out["blocks"] = _stack(attn_mlp_block_spec(cfg), L)
+    elif cfg.family == "moe":
+        out["blocks"] = _stack(moe_block_spec(cfg), L)
+    elif cfg.family == "ssm":
+        out["blocks"] = _stack(ssm_block_spec(cfg), L)
+    elif cfg.family == "hybrid":
+        out["blocks"] = _stack(ssm_block_spec(cfg), L)
+        out["shared"] = attn_mlp_block_spec(cfg)
+    elif cfg.family == "encdec":
+        out["enc_blocks"] = _stack(attn_mlp_block_spec(cfg), cfg.enc_layers)
+        out["eln"] = rmsnorm_spec(d)
+        out["blocks"] = _stack(decoder_block_spec(cfg), L)
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    return materialize(model_spec(cfg), key, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer-scan helper (remat + optional two-level grouping)
+# ---------------------------------------------------------------------------
+def _remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def scan_layers(body, carry, xs, *, remat: str = "full", groups: int = 1):
+    """lax.scan over stacked layer inputs with remat applied per layer
+    (and, when groups > 1, additionally per group: sqrt-memory schedule —
+    group boundaries live, per-layer boundaries recomputed per group).
+
+    The body sees its xs slice behind an optimization_barrier: without
+    it, XLA rewrites all-gather(dynamic-slice(stacked_params, i)) into
+    dynamic-slice(all-gather(stacked_params)) and hoists the gather out
+    of the loop — materializing EVERY layer's FSDP-gathered weights at
+    once (measured ~50 GiB/device on llama3-405b; EXPERIMENTS.md §Perf)."""
+    inner = body
+
+    def body(c, x):                                    # noqa: F811
+        return inner(c, jax.lax.optimization_barrier(x))
+
+    if groups > 1:
+        L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        assert L % groups == 0, (L, groups)
+        xs = jax.tree_util.tree_map(
+            lambda a: a.reshape((groups, L // groups) + a.shape[1:]), xs)
+
+        def group(c, xg):
+            return jax.lax.scan(_remat_wrap(body, remat), c, xg)
+
+        carry, ys = jax.lax.scan(_remat_wrap(group, remat), carry, xs)
+        ys = jax.tree_util.tree_map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), ys)
+        return carry, ys
+    return jax.lax.scan(_remat_wrap(body, remat), carry, xs)
+
+
+def pick_groups(L: int, want: int) -> int:
+    """Largest divisor of L that is <= want (grouped-scan helper)."""
+    g = max(1, min(want, L))
+    while L % g:
+        g -= 1
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2) topology
+# ---------------------------------------------------------------------------
+def hybrid_layout(cfg: ArchConfig):
+    """(n_groups, group_len, tail_len): the zamba2 topology — the shared
+    attention+MLP block runs after every ``hybrid_attn_every``-th SSM layer;
+    trailing layers (L mod every) are pure SSM. Expressing the model as
+    [scan over groups [scan over e SSM layers; shared block]] + tail keeps
+    the layer scan conditional-free (exact HLO cost accounting, no wasted
+    per-layer branch) and gives each application its own KV-cache row."""
+    L, e = cfg.num_layers, cfg.hybrid_attn_every
+    return L // e, e, L % e
+
+
+def _hybrid_split(blocks, cfg: ArchConfig):
+    G, e, R = hybrid_layout(cfg)
+    main = jax.tree_util.tree_map(
+        lambda a: a[:G * e].reshape((G, e) + a.shape[1:]), blocks)
+    tail = jax.tree_util.tree_map(lambda a: a[G * e:], blocks)
+    return main, tail
+
+
+def _shared_block(shared, x, cfg, positions, rules, *, window):
+    h = A.attention(shared["attn"], rmsnorm(shared["ln1"], x, cfg.norm_eps),
+                    cfg, window=window, positions=positions, rules=rules)
+    x = x + h
+    h = mlp(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps),
+            act=cfg.act, rules=rules)
+    return x + h
+
+
+# ---------------------------------------------------------------------------
+# forward_hidden — full-sequence, all families
+# ---------------------------------------------------------------------------
+def forward_hidden(params, cfg: ArchConfig, tokens, *, rules=None,
+                   opts: ModelOpts = ModelOpts(), frontend_embeds=None):
+    """tokens (B,S) -> (hidden (B,S,d) final-normed, aux dict).
+
+    frontend_embeds: vlm -> (B,F,d) patch embeddings overwriting the prompt
+    prefix; encdec -> (B,Se,d) encoder input (audio frames). Both arrive
+    precomputed (the modality frontend is a stub per the assignment).
+    """
+    B, Sq = tokens.shape
+    x = embed(params["tok"], tokens).astype(opts.act_dtype)
+    if cfg.family == "vlm" and frontend_embeds is not None:
+        fe = frontend_embeds.astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, fe, (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    aux = {}
+
+    if cfg.family in ("dense", "vlm"):
+        def body(x, xs):
+            p, win = xs
+            h = A.attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                            cfg, window=win, positions=positions, rules=rules)
+            x = x + h
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                    act=cfg.act, rules=rules)
+            return x + h, None
+        x, _ = scan_layers(body, x, (params["blocks"], windows),
+                           remat=opts.remat, groups=opts.scan_groups)
+
+    elif cfg.family == "moe":
+        def body(carry, xs):
+            x, lb, dr = carry
+            p, win = xs
+            h = A.attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                            cfg, window=win, positions=positions, rules=rules)
+            x = x + h
+            h, mx = moe_apply(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                            cfg, rules=rules, capacity_factor=opts.cap_factor,
+                            act=cfg.act)
+            return (x + h, lb + mx["lb_loss"], dr + mx["drop_frac"]), None
+        (x, lb, dr), _ = scan_layers(
+            body, (x, jnp.float32(0), jnp.float32(0)),
+            (params["blocks"], windows),
+            remat=opts.remat, groups=opts.scan_groups)
+        aux["lb_loss"] = lb / cfg.num_layers
+        aux["drop_frac"] = dr / cfg.num_layers
+
+    elif cfg.family == "ssm":
+        def body(x, p):
+            h = S.ssm_chunked(p["ssm"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                              cfg, rules=rules)
+            return x + h, None
+        x, _ = scan_layers(body, x, params["blocks"],
+                           remat=opts.remat, groups=opts.scan_groups)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        main, tail = _hybrid_split(params["blocks"], cfg)
+        _, _, R = hybrid_layout(cfg)
+
+        def ssm_body(x, p):
+            h = S.ssm_chunked(p["ssm"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                              cfg, rules=rules)
+            return x + h, None
+
+        def group_body(x, pg):
+            x, _ = jax.lax.scan(_remat_wrap(ssm_body, opts.remat), x, pg)
+            return _shared_block(shared, x, cfg, positions, rules,
+                                 window=cfg.window), None
+
+        x, _ = scan_layers(group_body, x, main, remat=opts.remat)
+        if R:
+            x, _ = scan_layers(ssm_body, x, tail, remat=opts.remat)
+
+    elif cfg.family == "encdec":
+        assert frontend_embeds is not None, "encdec needs encoder input"
+        enc = encode(params, cfg, frontend_embeds, rules=rules, opts=opts)
+
+        def body(x, p):
+            h = A.attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                            cfg, window=0, positions=positions, rules=rules)
+            x = x + h
+            ekv = A.encode_cross_kv(p["xattn"], enc)
+            h = A.cross_attention(p["xattn"],
+                                  rmsnorm(p["lnx"], x, cfg.norm_eps),
+                                  ekv, cfg, rules=rules)
+            x = x + h
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                    act=cfg.act, rules=rules)
+            return x + h, None
+        x, _ = scan_layers(body, x, params["blocks"],
+                           remat=opts.remat, groups=opts.scan_groups)
+    else:
+        raise ValueError(cfg.family)
+
+    return rmsnorm(params["fln"], x, cfg.norm_eps), aux
+
+
+def encode(params, cfg: ArchConfig, enc_input, *, rules=None,
+           opts: ModelOpts = ModelOpts()):
+    """Encoder stack (encdec family). enc_input (B,Se,d) -> (B,Se,d)."""
+    B, Se, _ = enc_input.shape
+    x = enc_input.astype(opts.act_dtype)
+    positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+
+    def body(x, p):
+        h = A.attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                        window=0, positions=positions, causal=False,
+                        rules=rules)
+        x = x + h
+        h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), act=cfg.act,
+                rules=rules)
+        return x + h, None
+    x, _ = scan_layers(body, x, params["enc_blocks"],
+                       remat=opts.remat, groups=opts.scan_groups)
+    return rmsnorm(params["eln"], x, cfg.norm_eps)
+
+
+def logits_fn(params, cfg: ArchConfig, tokens, *, rules=None,
+              opts: ModelOpts = ModelOpts(), frontend_embeds=None):
+    """Convenience full-logits path (smoke tests / tiny configs only)."""
+    h, aux = forward_hidden(params, cfg, tokens, rules=rules, opts=opts,
+                            frontend_embeds=frontend_embeds)
+    logits = unembed(params["tok"], h, cfg.tie_embeddings, cfg.softcap_final)
+    return logits[..., :cfg.vocab_size], aux
+
+
+# ---------------------------------------------------------------------------
+# Loss — vocab-chunked cross entropy (never materializes (B,S,V) at once)
+# ---------------------------------------------------------------------------
+def chunked_xent(tok_params, hidden, labels, *, tie: bool, softcap: float,
+                 chunk: int):
+    """hidden (B,S,d) final-normed, labels (B,S) i32 (-1 = ignore)."""
+    B, Sq, d = hidden.shape
+    C = min(chunk, Sq)
+    pad = (-Sq) % C
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (Sq + pad) // C
+    hs = hidden.reshape(B, n, C, d).swapaxes(0, 1)
+    ys = labels.reshape(B, n, C).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        tot, cnt, ncorrect = carry
+        h_c, y_c = xs
+        logits = unembed(tok_params, h_c, tie, softcap)      # (B,C,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(y_c, 0)[..., None], axis=-1)[..., 0]
+        mask = (y_c >= 0).astype(jnp.float32)
+        correct = (jnp.argmax(logits, -1) == y_c).astype(jnp.float32) * mask
+        return (tot + ((lse - ll) * mask).sum(), cnt + mask.sum(),
+                ncorrect + correct.sum()), None
+
+    (tot, cnt, ncorrect), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0), jnp.float32(0)), (hs, ys))
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt, {"tokens": cnt, "accuracy": ncorrect / cnt}
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, rules=None,
+            opts: ModelOpts = ModelOpts(), lb_coef: float = 0.01):
+    """batch: tokens (B,S), labels (B,S), optional frontend (B,F,d)."""
+    hidden, aux = forward_hidden(
+        params, cfg, batch["tokens"], rules=rules, opts=opts,
+        frontend_embeds=batch.get("frontend"))
+    loss, metrics = chunked_xent(
+        params["tok"], hidden, batch["labels"], tie=cfg.tie_embeddings,
+        softcap=cfg.softcap_final, chunk=opts.loss_chunk)
+    metrics["xent"] = loss
+    if "lb_loss" in aux:
+        loss = loss + lb_coef * aux["lb_loss"]
+        metrics["lb_loss"] = aux["lb_loss"]
+        metrics["drop_frac"] = aux["drop_frac"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+def cache_spec(cfg: ArchConfig, batch: int, cache_len: int, *, enc_len: int = 0,
+               dtype=jnp.bfloat16):
+    """Spec tree (ParamSpec leaves) describing the decode cache.
+
+    KV caches are LISTS of per-layer arrays (separate pytree leaves), not
+    one stacked array: per-layer leaves donate/alias cleanly through the
+    unrolled decode step, while a stacked cache threaded through a scan
+    carry (or sliced per layer) costs 2-3x the cache in temp HBM
+    (measured; see EXPERIMENTS.md §Perf)."""
+    L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    kvn = ("batch", "seq", "kv_heads", "cache_hd")
+
+    def kv_list(n, length):
+        return ([spec((batch, length, K, hd), kvn, dtype, init="zeros")
+                 for _ in range(n)],
+                [spec((batch, length, K, hd), kvn, dtype, init="zeros")
+                 for _ in range(n)])
+
+    out = {"pos": spec((), (), jnp.int32, init="zeros")}
+    if cfg.family in ("dense", "vlm", "moe"):
+        out["k"], out["v"] = kv_list(L, cache_len)
+    elif cfg.family == "ssm":
+        out.update(_ssm_cache_spec(cfg, batch, cfg.num_layers))
+    elif cfg.family == "hybrid":
+        out.update(_ssm_cache_spec(cfg, batch, cfg.num_layers))
+        n_attn = hybrid_layout(cfg)[0]
+        out["k"], out["v"] = kv_list(n_attn, cache_len)
+    elif cfg.family == "encdec":
+        out["k"], out["v"] = kv_list(L, cache_len)
+        out["xk"], out["xv"] = kv_list(L, enc_len)
+        out["enc_len"] = spec((), (), jnp.int32, init="zeros")
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+def _ssm_cache_spec(cfg, batch, L):
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": spec((L, batch, nh, hd, ds),
+                    ("layers", "batch", "ssm_heads", None, None),
+                    jnp.float32, init="zeros"),
+        "conv": spec((L, batch, cfg.ssm_conv - 1, conv_ch),
+                     ("layers", "batch", None, "ssm_inner"),
+                     jnp.float32, init="zeros"),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+               enc_len: int = 0, dtype=jnp.bfloat16):
+    return materialize(cache_spec(cfg, batch, cache_len, enc_len=enc_len,
+                                  dtype=dtype), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Prefill — full-sequence forward that also populates the cache
+# ---------------------------------------------------------------------------
+def prefill(params, cfg: ArchConfig, tokens, cache, *, rules=None,
+            opts: ModelOpts = ModelOpts(), frontend_embeds=None):
+    """tokens (B,S) with S <= cache_len. Returns (last logits (B,V), cache).
+
+    All prompts in the batch share length S (the serve driver left-pads;
+    positions are absolute)."""
+    B, Sq = tokens.shape
+    x = embed(params["tok"], tokens).astype(opts.act_dtype)
+    if cfg.family == "vlm" and frontend_embeds is not None:
+        x = jax.lax.dynamic_update_slice(
+            x, frontend_embeds.astype(x.dtype), (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    cache = dict(cache)
+
+    def to_list(stacked, lst):
+        """Write stacked (L,B,S,...) prefill K/V into the per-layer list."""
+        return [jax.lax.dynamic_update_slice(
+            lst[i], stacked[i].astype(lst[i].dtype), (0, 0, 0, 0))
+            for i in range(len(lst))]
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(x, xs):
+            p, win = xs
+            h, (k, v) = A.attention(
+                p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                window=win, positions=positions, rules=rules, return_kv=True)
+            x = x + h
+            if cfg.family == "moe":
+                h, _ = moe_apply(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                               cfg, rules=rules,
+                               capacity_factor=opts.cap_factor, act=cfg.act)
+            else:
+                h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                        act=cfg.act, rules=rules)
+            return x + h, (k, v)
+        x, (ks, vs) = scan_layers(
+            body, x, (params["blocks"], windows),
+            remat=opts.remat, groups=opts.scan_groups)
+        cache["k"] = to_list(ks, cache["k"])
+        cache["v"] = to_list(vs, cache["v"])
+
+    elif cfg.family == "ssm":
+        def body(x, p):
+            h, (st, cst) = S.ssm_chunked(
+                p["ssm"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                rules=rules, return_state=True)
+            return x + h, (st, cst)
+        x, (st, cst) = scan_layers(body, x, params["blocks"],
+                                   remat=opts.remat, groups=opts.scan_groups)
+        cache["ssm"] = st.astype(cache["ssm"].dtype)
+        cache["conv"] = cst.astype(cache["conv"].dtype)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        main, tail = _hybrid_split(params["blocks"], cfg)
+        _, _, R = hybrid_layout(cfg)
+
+        def ssm_body(x, p):
+            h, (st, cst) = S.ssm_chunked(
+                p["ssm"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                rules=rules, return_state=True)
+            return x + h, (st, cst)
+
+        def group_body(x, pg):
+            x, sts = jax.lax.scan(ssm_body, x, pg)
+            h, (k, v) = A.attention(
+                shared["attn"], rmsnorm(shared["ln1"], x, cfg.norm_eps),
+                cfg, window=cfg.window, positions=positions, rules=rules,
+                return_kv=True)
+            x = x + h
+            h = mlp(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps),
+                    act=cfg.act, rules=rules)
+            return x + h, (sts, k, v)
+
+        x, (sts_main, ks, vs) = jax.lax.scan(group_body, x, main)
+        st = jax.tree_util.tree_map(
+            lambda a: a.reshape((-1,) + a.shape[2:]), sts_main)
+        if R:
+            x, st_tail = jax.lax.scan(ssm_body, x, tail)
+            st = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), st, st_tail)
+        cache.update(k=to_list(ks, cache["k"]), v=to_list(vs, cache["v"]),
+                     ssm=st[0].astype(cache["ssm"].dtype),
+                     conv=st[1].astype(cache["conv"].dtype))
+
+    elif cfg.family == "encdec":
+        assert frontend_embeds is not None
+        enc = encode(params, cfg, frontend_embeds, rules=rules, opts=opts)
+        Se = enc.shape[1]
+
+        def xkv(p):
+            k, v = A.encode_cross_kv(p["xattn"], enc)
+            return (k.astype(cache["xk"][0].dtype),
+                    v.astype(cache["xv"][0].dtype))
+        xk, xv = jax.lax.map(xkv, params["blocks"])
+        cache["xk"] = to_list(xk, cache["xk"])
+        cache["xv"] = to_list(xv, cache["xv"])
+        cache["enc_len"] = jnp.int32(Se)
+
+        def body(x, xs):
+            p, xkl, xvl = xs
+            h, (k, v) = A.attention(
+                p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg,
+                window=0, positions=positions, rules=rules, return_kv=True)
+            x = x + h
+            h = A.cross_attention(
+                p["xattn"], rmsnorm(p["lnx"], x, cfg.norm_eps),
+                (xkl, xvl), cfg, rules=rules, enc_valid=cache["enc_len"])
+            x = x + h
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                    act=cfg.act, rules=rules)
+            return x + h, (k, v)
+        x, (ks, vs) = scan_layers(
+            body, x, (params["blocks"], xk, xv),
+            remat=opts.remat, groups=opts.scan_groups)
+        cache["k"] = to_list(ks, cache["k"])
+        cache["v"] = to_list(vs, cache["v"])
+    else:
+        raise ValueError(cfg.family)
+
+    cache["pos"] = jnp.int32(Sq)
+    h = rmsnorm(params["fln"], x[:, -1:], cfg.norm_eps)
+    logits = unembed(params["tok"], h, cfg.tie_embeddings, cfg.softcap_final)
+    return logits[:, 0, :cfg.vocab_size], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode — one token against the cache
+# ---------------------------------------------------------------------------
+def decode_step(params, cfg: ArchConfig, cache, tokens, *, rules=None,
+                opts: ModelOpts = ModelOpts()):
+    """tokens (B,1) -> (logits (B,V), new cache). pos = cache['pos'].
+
+    Layers are UNROLLED over the per-layer cache list: each layer's cache
+    is its own donated pytree leaf, the body writes only the new
+    (B,1,K,hd) slot and attends over the same array — the one structure
+    XLA reliably updates in place (stacked caches threaded through scan
+    carries/xs measured 2-3x the cache in temp HBM; see EXPERIMENTS.md
+    §Perf). Decode layer graphs are tiny, so HLO size stays bounded."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = embed(params["tok"], tokens).astype(opts.act_dtype)
+    windows = cfg.layer_windows()
+    cache = dict(cache)
+    cache["k"] = list(cache["k"]) if "k" in cache else None
+    cache["v"] = list(cache["v"]) if "v" in cache else None
+
+    def layer(i, tree):
+        return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+    def self_attn(p, x, i, win):
+        q, k, v = A.decode_qkv(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                               pos, cfg, rules=rules)
+        ck, cv = cache["k"][i], cache["v"][i]
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        cache["k"][i], cache["v"][i] = ck, cv
+        h = A.decode_attend(p["attn"], q, ck, cv, cfg, window=win, pos=pos)
+        return x + h
+
+    def ssm_block(p, x, i):
+        h, (st, cst) = S.ssm_step(
+            p["ssm"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+            (cache["ssm"][i], cache["conv"][i]), cfg, rules=rules)
+        cache["ssm"] = cache["ssm"].at[i].set(st.astype(cache["ssm"].dtype))
+        cache["conv"] = cache["conv"].at[i].set(
+            cst.astype(cache["conv"].dtype))
+        return x + h
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        for i in range(cfg.num_layers):
+            p = layer(i, params["blocks"])
+            x = self_attn(p, x, i, windows[i])
+            if cfg.family == "moe":
+                h, _ = moe_apply(p["moe"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                               cfg, rules=rules,
+                               capacity_factor=opts.cap_factor, act=cfg.act)
+            else:
+                h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                        act=cfg.act, rules=rules)
+            x = x + h
+
+    elif cfg.family == "ssm":
+        for i in range(cfg.num_layers):
+            x = ssm_block(layer(i, params["blocks"]), x, i)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+        G, e, _ = hybrid_layout(cfg)
+        for i in range(cfg.num_layers):
+            x = ssm_block(layer(i, params["blocks"]), x, i)
+            if i < G * e and i % e == e - 1:
+                x = self_attn(shared, x, i // e, cfg.window)
+                h = mlp(shared["mlp"],
+                        rmsnorm(shared["ln2"], x, cfg.norm_eps),
+                        act=cfg.act, rules=rules)
+                x = x + h
+
+    elif cfg.family == "encdec":
+        for i in range(cfg.num_layers):
+            p = layer(i, params["blocks"])
+            x = self_attn(p, x, i, 0)
+            h = A.cross_attention(
+                p["xattn"], rmsnorm(p["lnx"], x, cfg.norm_eps),
+                (cache["xk"][i], cache["xv"][i]), cfg, rules=rules,
+                enc_valid=cache["enc_len"])
+            x = x + h
+            h = mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps),
+                    act=cfg.act, rules=rules)
+            x = x + h
+    else:
+        raise ValueError(cfg.family)
+    if cache["k"] is None:
+        cache.pop("k"), cache.pop("v")
+
+    cache["pos"] = pos + 1
+    h = rmsnorm(params["fln"], x, cfg.norm_eps)
+    logits = unembed(params["tok"], h, cfg.tie_embeddings, cfg.softcap_final)
+    return logits[:, 0, :cfg.vocab_size], cache

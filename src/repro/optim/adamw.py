@@ -1,0 +1,136 @@
+"""AdamW with sharding-friendly state, configurable moment dtypes and an
+optional factored second moment (Adafactor-style) for the 100B+ archs
+whose full f32 v would not fit the per-chip HBM budget.
+
+State is a pytree shaped like ``params`` (elementwise ops only), so every
+moment inherits the parameter's NamedSharding — FSDP shards optimizer
+state for free (ZeRO-like).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedule import SCHEDULES
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr_max: float = 3e-4
+    schedule: str = "warmup_cosine"
+    warmup: int = 100
+    decay_steps: int = 10000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    m_dtype: Any = jnp.float32
+    v_dtype: Any = jnp.float32
+    factored_v: bool = False      # factored 2nd moment for ndim>=2 params
+
+    def lr_at(self, step):
+        return SCHEDULES[self.schedule](
+            step, lr_max=self.lr_max, warmup=self.warmup,
+            decay_steps=self.decay_steps, lr_min_ratio=self.lr_min_ratio)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init_opt(params, oc: OptConfig):
+    m = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, oc.m_dtype), params)
+    if oc.factored_v:
+        def vinit(p):
+            if _factored(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"f": jnp.zeros(p.shape, jnp.float32)}
+        v = jax.tree_util.tree_map(vinit, params)
+    else:
+        v = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, oc.v_dtype), params)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def _vhat_factored(v, g2, b2):
+    """Update factored stats and return the reconstructed second moment."""
+    if "f" in v:
+        f = b2 * v["f"] + (1 - b2) * g2
+        return {"f": f}, f
+    r = b2 * v["r"] + (1 - b2) * g2.mean(axis=-1)
+    c = b2 * v["c"] + (1 - b2) * g2.mean(axis=-2)
+    denom = jnp.maximum(r.mean(axis=-1, keepdims=True), 1e-30)
+    vhat = (r / denom)[..., None] * c[..., None, :]
+    return {"r": r, "c": c}, vhat
+
+
+def apply_updates(params, grads, state, oc: OptConfig, lr=None):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    if lr is None:
+        lr = oc.lr_at(step)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    if oc.factored_v:
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new, vhat = _vhat_factored(v, gf * gf, b2)
+            u = (m_new / bc1) / (jnp.sqrt(vhat / bc2) + oc.eps)
+            p_new = p.astype(jnp.float32) - lr * (
+                u + oc.weight_decay * p.astype(jnp.float32))
+            return p_new.astype(p.dtype), m_new.astype(oc.m_dtype), v_new
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        outs = [upd(p, g, m, v) for p, g, m, v
+                in zip(flat_p, flat_g, flat_m, flat_v)]
+        p_new = treedef.unflatten([o[0] for o in outs])
+        m_new = treedef.unflatten([o[1] for o in outs])
+        v_new = treedef.unflatten([o[2] for o in outs])
+        return p_new, {"m": m_new, "v": v_new, "step": step}
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + oc.eps)
+        p_new = p.astype(jnp.float32) - lr * (
+            u + oc.weight_decay * p.astype(jnp.float32))
+        return (p_new.astype(p.dtype), m_new.astype(oc.m_dtype),
+                v_new.astype(oc.v_dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v
+            in zip(flat_p, flat_g, flat_m, flat_v)]
+    p_new = treedef.unflatten([o[0] for o in outs])
+    m_new = treedef.unflatten([o[1] for o in outs])
+    v_new = treedef.unflatten([o[2] for o in outs])
+    return p_new, {"m": m_new, "v": v_new, "step": step}

@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod (DCN) synchronization.
+
+Within a pod the gradient reduce-scatter rides the fast ICI links; the
+pod-to-pod hop is the slow one (DCN). We compress exactly that hop:
+
+  * error-feedback int8 quantization — each pod quantizes (grad + carried
+    error) to int8 with one f32 scale per tensor, exchanges the int8
+    payload over the "pod" axis (all_gather: 1 byte/elem on the wire vs 4
+    for an f32 all-reduce), sums locally, and carries the quantization
+    residual into the next step. Error feedback makes the *accumulated*
+    update unbiased: the residual is never dropped, only delayed.
+
+Used by the shard_map training variant (train/dp_shard_map.py) and unit-
+tested for the error-feedback contraction property. Under plain
+jit/GSPMD the gradient reduction is implicit in backward and cannot be
+re-encoded; that path instead reduces in bf16 (2x) via ModelOpts dtypes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    err: jax.Array          # carried quantization residual, same shape
+
+
+def ef_init(x: jax.Array) -> EFState:
+    return EFState(err=jnp.zeros_like(x, jnp.float32))
+
+
+def quantize_int8(x: jax.Array):
+    """x f32 -> (q int8, scale f32 scalar). scale covers the max magnitude."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(x: jax.Array, st: EFState):
+    """Error-feedback compress: returns (q, scale, new_state)."""
+    y = x.astype(jnp.float32) + st.err
+    q, scale = quantize_int8(y)
+    return q, scale, EFState(err=y - dequantize_int8(q, scale))
+
+
+def cross_pod_grad_sync(grad: jax.Array, st: EFState, *, axis_name: str):
+    """Average ``grad`` over the (slow) ``axis_name`` mesh axis with int8
+    error-feedback compression. Call inside shard_map.
+
+    Wire payload: int8 all_gather (+ one f32 scale per shard) instead of a
+    f32 all-reduce: ~4x fewer DCN bytes (~8x vs naive f32 ring AR)."""
+    n = jax.lax.axis_size(axis_name)
+    q, scale, st = ef_compress(grad, st)
+    qs = jax.lax.all_gather(q, axis_name)                  # (n, ...) int8
+    scales = jax.lax.all_gather(scale, axis_name)          # (n,)
+    summed = jnp.tensordot(scales,
+                           qs.astype(jnp.float32), axes=((0,), (0,)))
+    return (summed / n).astype(grad.dtype), st

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step counter, so a
+restored checkpoint resumes the schedule exactly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, lr_max: float, warmup: int, decay_steps: int,
+                  lr_min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = lr_max * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(decay_steps - warmup, 1),
+                    0.0, 1.0)
+    cos = lr_max * (lr_min_ratio + (1 - lr_min_ratio)
+                    * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def constant(step, *, lr_max: float, **_):
+    return jnp.full((), lr_max, jnp.float32)
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "constant": constant}

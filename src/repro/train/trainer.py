@@ -1,0 +1,93 @@
+"""Train-step construction: gradient accumulation, clipping, NaN-guard
+skip-step, AdamW — one jit-compiled function (params/opt donated).
+
+The same builder serves the real training loop (launch/train.py), the
+smoke tests (tiny configs, 1 device) and the multi-pod dry-run (lowered
+against ShapeDtypeStructs on the production mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.ft.guard import all_finite, select_tree
+from repro.models.transformer import ModelOpts, loss_fn
+from repro.optim.adamw import (OptConfig, apply_updates, clip_by_global_norm,
+                               init_opt)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    grad_accum: int = 1
+    lb_coef: float = 0.01
+
+
+def make_train_step(cfg: ArchConfig, oc: OptConfig, tc: TrainConfig,
+                    *, rules=None, opts: ModelOpts = ModelOpts()):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch: tokens/labels (GB, S) [+ frontend (GB, F, d)]. With grad_accum
+    G > 1 the batch is split into G microbatches scanned sequentially,
+    gradients accumulated in f32 (activation memory / G)."""
+    G = tc.grad_accum
+
+    def micro_loss(params, mb):
+        return loss_fn(params, cfg, mb, rules=rules, opts=opts,
+                       lb_coef=tc.lb_coef)
+
+    def compute_grads(params, batch):
+        if G == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            return x.reshape((G, x.shape[0] // G) + x.shape[1:])
+        micro = jax.tree_util.tree_map(split, batch)
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            acc, loss_sum = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / G, acc, grads)
+            return (acc, loss_sum + loss / G), metrics
+
+        (grads, loss), metrics = jax.lax.scan(body, (g0, jnp.float32(0)),
+                                              micro)
+        metrics = jax.tree_util.tree_map(lambda m: m.mean(), metrics)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, oc.clip_norm)
+        finite = all_finite(grads) & jnp.isfinite(loss)
+        new_params, new_opt = apply_updates(params, grads, opt_state, oc)
+        # NaN-guard skip-step: identity update on non-finite steps, but the
+        # step counter still advances (schedule stays aligned with data).
+        params = select_tree(finite, new_params, params)
+        opt_state = {
+            "m": select_tree(finite, new_opt["m"], opt_state["m"]),
+            "v": select_tree(finite, new_opt["v"], opt_state["v"]),
+            "step": new_opt["step"],
+        }
+        metrics = dict(metrics)
+        metrics.update(grad_norm=gnorm, skipped=(~finite).astype(jnp.int32),
+                       lr=oc.lr_at(new_opt["step"]))
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ArchConfig, oc: OptConfig, key,
+                     param_dtype=jnp.float32):
+    from repro.models.transformer import init_params
+    params = init_params(cfg, key, dtype=param_dtype)
+    return params, init_opt(params, oc)

@@ -1,0 +1,115 @@
+"""Small shared utilities (shape math, padding, bloom-filter hashing)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large-but-finite sentinel distance. We avoid +inf so that (inf - inf) NaNs
+# can never appear in masked arithmetic.
+BIG_DIST = jnp.float32(3.0e38)
+INVALID_ID = -1
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 2 ** math.ceil(math.log2(n))
+
+
+def pad_axis(x: np.ndarray, size: int, axis: int, fill=0) -> np.ndarray:
+    """Pad numpy array along `axis` up to `size` with `fill`."""
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    assert cur < size, f"cannot pad {cur} down to {size}"
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - cur)
+    return np.pad(x, widths, constant_values=fill)
+
+
+def pad_axis_jnp(x: jax.Array, size: int, axis: int, fill=0) -> jax.Array:
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - cur)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+# ---------------------------------------------------------------------------
+# Visited-set bloom filter (the "query property table" visited bits).
+# Two multiplicative hashes; false positives only *skip* re-expansion of a
+# vertex, mildly affecting recall (measured in tests), never correctness of
+# returned distances.
+# ---------------------------------------------------------------------------
+_H1 = np.uint32(0x9E3779B1)
+_H2 = np.uint32(0x85EBCA77)
+
+
+def bloom_hashes(ids: jax.Array, num_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Two hash positions in [0, num_bits) per id. num_bits must be 2**k."""
+    u = ids.astype(jnp.uint32)
+    h1 = (u * _H1) >> jnp.uint32(7)
+    h2 = ((u + jnp.uint32(1)) * _H2) >> jnp.uint32(5)
+    mask = jnp.uint32(num_bits - 1)
+    return (h1 & mask).astype(jnp.int32), (h2 & mask).astype(jnp.int32)
+
+
+def _scatter_or(bloom: jax.Array, word: jax.Array, mask: jax.Array) -> jax.Array:
+    """OR `mask` into bloom[..., word]. bloom (..., W) u32; word/mask (..., n)."""
+    W = bloom.shape[-1]
+    onehot = word[..., None] == jnp.arange(W, dtype=word.dtype)  # (..., n, W)
+    vals = jnp.where(onehot, mask[..., None], jnp.uint32(0))
+    ored = jax.lax.reduce(vals, jnp.uint32(0), jax.lax.bitwise_or,
+                          dimensions=(vals.ndim - 2,))
+    return bloom | ored
+
+
+def bloom_insert(bloom: jax.Array, ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """bloom: (..., num_bits//32) uint32; ids/valid: (..., n)."""
+    num_bits = bloom.shape[-1] * 32
+    p1, p2 = bloom_hashes(ids, num_bits)
+    one = jnp.uint32(1)
+    m1 = jnp.where(valid, one << (p1 % 32).astype(jnp.uint32), jnp.uint32(0))
+    m2 = jnp.where(valid, one << (p2 % 32).astype(jnp.uint32), jnp.uint32(0))
+    bloom = _scatter_or(bloom, p1 // 32, m1)
+    bloom = _scatter_or(bloom, p2 // 32, m2)
+    return bloom
+
+
+def bloom_query(bloom: jax.Array, ids: jax.Array) -> jax.Array:
+    """Returns bool (..., n): True if id *possibly* visited."""
+    num_bits = bloom.shape[-1] * 32
+    p1, p2 = bloom_hashes(ids, num_bits)
+    one = jnp.uint32(1)
+    w1 = jnp.take_along_axis(bloom, p1 // 32, axis=-1)
+    w2 = jnp.take_along_axis(bloom, p2 // 32, axis=-1)
+    hit1 = (w1 >> (p1 % 32).astype(jnp.uint32)) & one
+    hit2 = (w2 >> (p2 % 32).astype(jnp.uint32)) & one
+    return (hit1 & hit2).astype(jnp.bool_)
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(tree)
+        if hasattr(l, "shape") and hasattr(l, "dtype")
+    )
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024:
+            return f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}PiB"

@@ -1,0 +1,54 @@
+"""Subprocess body for test_engine_multishard: shard_map == sim, 8 devices.
+
+Run as: XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python tests/multishard_check.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np          # noqa: E402
+import jax                  # noqa: E402
+
+from repro.core.engine import (EngineParams, pack_for_engine,      # noqa: E402
+                               search_distributed, search_sim)
+from repro.core.graph import build_vamana                          # noqa: E402
+from repro.core.luncsr import Geometry, LUNCSR, pack_index         # noqa: E402
+from repro.core.ref_search import SearchParams                     # noqa: E402
+from repro.launch.mesh import make_engine_mesh                     # noqa: E402
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    rng = np.random.default_rng(0)
+    n, d, nq, S = 2048, 32, 64, 8
+    db = rng.integers(-8, 9, size=(n, d)).astype(np.float32)
+    queries = rng.integers(-8, 9, size=(nq, d)).astype(np.float32)
+    adj, medoid = build_vamana(db, r=12, alpha=1.2, seed=0)
+    geo = Geometry(num_shards=S, page_size=32, pages_per_block=2, dim=d)
+    index = LUNCSR.from_adjacency(db, adj, geo, entry=medoid, pref_width=4)
+    packed = pack_index(index, max_degree=12)
+    consts, geom, entry = pack_for_engine(packed)
+    qsh = queries.reshape(S, nq // S, d)
+
+    mesh = make_engine_mesh()
+    for spec in (0, 4):
+        sp = SearchParams(L=16, W=2, k=10)
+        params = EngineParams.lossless(sp, qsh.shape[1], geom.max_degree,
+                                       spec_width=spec)
+        si, sd, ss = search_sim(consts, qsh, *entry, params, geom)
+        di, dd, dst = search_distributed(consts, qsh, *entry, params, geom,
+                                         mesh)
+        np.testing.assert_array_equal(np.asarray(si), np.asarray(di))
+        np.testing.assert_array_equal(np.asarray(sd), np.asarray(dd))
+        np.testing.assert_array_equal(np.asarray(ss["rounds"]),
+                                      np.asarray(dst["rounds"]))
+        np.testing.assert_array_equal(np.asarray(ss["pages_unique"]),
+                                      np.asarray(dst["pages_unique"]))
+        print(f"spec={spec}: shard_map == sim OK "
+              f"(rounds={int(np.asarray(ss['rounds']).sum())})")
+    print("MULTISHARD_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""shard_map engine driver == sim driver, on 8 simulated host devices.
+
+Runs in a subprocess so the main test session keeps a single device.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_shard_map_matches_sim_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "multishard_check.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "MULTISHARD_OK" in proc.stdout, proc.stdout

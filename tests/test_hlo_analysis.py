@@ -1,0 +1,105 @@
+"""Trip-count-aware HLO cost model: scan multiplicities, collective wire
+bytes, traffic special cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hloanalysis import analyze_hlo, parse_hlo, \
+    compute_multipliers
+
+D = 256
+DOT_FLOPS = 2 * D ** 3
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_single_dot():
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    c = _compile(lambda a, b: a @ b, x, x)
+    r = analyze_hlo(c.as_text())
+    assert abs(r["flops"] - DOT_FLOPS) / DOT_FLOPS < 0.01
+
+
+def test_scan_multiplies():
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+    def f(a, w):
+        c, _ = jax.lax.scan(lambda c, _: (c @ w, None), a, None, length=10)
+        return c
+    c = _compile(f, x, x)
+    r = analyze_hlo(c.as_text())
+    assert abs(r["flops"] - 10 * DOT_FLOPS) / DOT_FLOPS < 0.1
+    assert not r["warnings"]
+
+
+def test_nested_scan_multiplies():
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+    def f(a, w):
+        def outer(c, _):
+            c, _ = jax.lax.scan(lambda c2, _: (c2 @ w, None), c, None,
+                                length=5)
+            return c, None
+        c, _ = jax.lax.scan(outer, a, None, length=3)
+        return c
+    c = _compile(f, x, x)
+    r = analyze_hlo(c.as_text())
+    assert abs(r["flops"] - 15 * DOT_FLOPS) / DOT_FLOPS < 0.1
+
+
+def test_dynamic_while_counts_once_with_warning():
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+    def f(a):
+        def cond(c):
+            return c[0].sum() < 1e9
+        def body(c):
+            return (c[0] @ c[0],)
+        return jax.lax.while_loop(cond, body, (a,))
+    c = _compile(f, x)
+    r = analyze_hlo(c.as_text())
+    assert any("known_trip_count" in w for w in r["warnings"])
+
+
+def test_bytes_grow_with_scan():
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+    def f1(a, w):
+        return a @ w
+
+    def f10(a, w):
+        c, _ = jax.lax.scan(lambda c, _: (c @ w, None), a, None, length=10)
+        return c
+    b1 = analyze_hlo(_compile(f1, x, x).as_text())["hbm_bytes"]
+    b10 = analyze_hlo(_compile(f10, x, x).as_text())["hbm_bytes"]
+    assert b10 > 5 * b1
+
+
+def test_parse_tuple_types_with_index_comments():
+    txt = """
+HloModule m
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(%g1, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,4]{1,0}, /*index=2*/f32[4,4]{1,0}) tuple(%g0, %d, %d)
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %c = s32[] constant(0)
+  %t0 = (s32[], f32[4,4]{1,0}) tuple(%c, %a)
+  %w = (s32[], f32[4,4]{1,0}) while(%t0), condition=%body, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %r = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    comps, entry = parse_hlo(txt)
+    assert entry == "main"
+    mult = compute_multipliers(comps, entry)
+    assert mult["body"] == 14.0          # body + condition both -> 7 + 7
+    r = analyze_hlo(txt)
+    assert r["flops"] == 14 * 2 * 4 * 4 * 4

@@ -1,0 +1,77 @@
+"""Property-based kernel tests (hypothesis): invariants that must hold
+for ANY shape/content, complementing the fixed-shape sweeps."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.distance import paged_distances, paged_distances_ref
+from repro.kernels.topk import bitonic_sort, bitonic_sort_ref
+from repro.utils import bloom_insert, bloom_query
+
+
+@st.composite
+def sort_case(draw):
+    b = draw(st.integers(1, 4))
+    logm = draw(st.integers(1, 7))
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    m = 2 ** logm
+    d = rng.standard_normal((b, m)).astype(np.float32)
+    i = rng.integers(0, 2**20, size=(b, m)).astype(np.int32)
+    return d, i
+
+
+@given(sort_case())
+@settings(max_examples=25, deadline=None)
+def test_bitonic_is_permutation_and_sorted(case):
+    d, i = case
+    kd, ki = bitonic_sort(d, i, interpret=True, block_b=1)
+    kd, ki = np.asarray(kd), np.asarray(ki)
+    # sorted ascending
+    assert (np.diff(kd, axis=1) >= 0).all()
+    # a permutation of the input pairs
+    for b in range(d.shape[0]):
+        got = sorted(zip(kd[b].tolist(), ki[b].tolist()))
+        want = sorted(zip(d[b].tolist(), i[b].tolist()))
+        assert got == want
+    # matches the lax.sort oracle exactly
+    rd, ri = bitonic_sort_ref(d, i)
+    np.testing.assert_array_equal(kd, np.asarray(rd))
+    np.testing.assert_array_equal(ki, np.asarray(ri))
+
+
+@st.composite
+def dist_case(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    t = draw(st.integers(1, 5))
+    qb = draw(st.sampled_from([4, 8, 16]))
+    p = draw(st.sampled_from([16, 64, 128]))
+    d = draw(st.sampled_from([32, 64, 128]))
+    np_ = draw(st.integers(1, 4))
+    q = rng.standard_normal((t, qb, d)).astype(np.float32)
+    db = rng.standard_normal((np_, p, d)).astype(np.float32)
+    pid = rng.integers(0, np_, size=t).astype(np.int32)
+    return pid, q, db
+
+
+@given(dist_case())
+@settings(max_examples=20, deadline=None)
+def test_distance_nonnegative_and_matches_ref(case):
+    pid, q, db = case
+    qq = (q ** 2).sum(-1)
+    vnorm = (db ** 2).sum(-1)
+    out = np.asarray(paged_distances(pid, q, qq, db, vnorm, interpret=True))
+    ref = np.asarray(paged_distances_ref(pid, q, qq, db, vnorm))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
+    assert (out > -1e-3).all()          # squared distances (fp error only)
+
+
+@given(st.lists(st.integers(0, 2**30), min_size=1, max_size=64),
+       st.lists(st.integers(0, 2**30), min_size=1, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_bloom_no_false_negatives(inserted, probed):
+    """Bloom filters may false-positive but NEVER false-negative."""
+    bloom = jnp.zeros((1, 64), jnp.uint32)
+    ids = jnp.asarray(inserted, jnp.int32)[None]
+    bloom = bloom_insert(bloom, ids, jnp.ones_like(ids, bool))
+    hits = np.asarray(bloom_query(bloom, ids))[0]
+    assert hits.all()                   # everything inserted is found

@@ -1,0 +1,59 @@
+"""Prefill + decode (KV/SSM caches) must match the full forward pass."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduced
+from repro.models import (ModelOpts, decode_step, init_cache, init_params,
+                          logits_fn, prefill)
+
+B, SP, T = 2, 24, 5
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_matches_forward(arch):
+    cfg = reduced(get_config(arch))
+    opts = ModelOpts(remat="none", loss_chunk=32,
+                     cap_factor=float(max(cfg.num_experts, 1)))
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (B, SP + T), 0, cfg.vocab_size)
+    fe = None
+    if cfg.frontend == "audio":
+        fe = 0.1 * jax.random.normal(key, (B, 16, cfg.d_model))
+    elif cfg.frontend == "vision":
+        fe = 0.1 * jax.random.normal(key, (B, cfg.frontend_tokens,
+                                           cfg.d_model))
+    full, _ = logits_fn(params, cfg, toks, opts=opts, frontend_embeds=fe)
+    cache = init_cache(cfg, B, SP + T, enc_len=16, dtype=jnp.float32)
+    lg, cache = prefill(params, cfg, toks[:, :SP], cache, opts=opts,
+                        frontend_embeds=fe)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, SP - 1]),
+                               rtol=5e-3, atol=5e-3)
+    assert int(cache["pos"]) == SP
+    for t in range(T - 1):
+        lg, cache = decode_step(params, cfg, cache,
+                                toks[:, SP + t:SP + t + 1], opts=opts)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full[:, SP + t]),
+            rtol=5e-3, atol=5e-3, err_msg=f"step {t}")
+    assert int(cache["pos"]) == SP + T - 1
+
+
+def test_sliding_window_cache_semantics():
+    """Decode with a window must ignore tokens older than the window."""
+    cfg = reduced(get_config("mixtral-8x7b"))
+    assert cfg.window > 0
+    opts = ModelOpts(remat="none", loss_chunk=32,
+                     cap_factor=float(cfg.num_experts))
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    S = cfg.window + 12
+    toks = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    full, _ = logits_fn(params, cfg, toks, opts=opts)
+    cache = init_cache(cfg, 1, S, dtype=jnp.float32)
+    lg, cache = prefill(params, cfg, toks[:, :S - 1], cache, opts=opts)
+    lg2, _ = decode_step(params, cfg, cache, toks[:, S - 1:S], opts=opts)
+    np.testing.assert_allclose(np.asarray(lg2), np.asarray(full[:, -1]),
+                               rtol=5e-3, atol=5e-3)

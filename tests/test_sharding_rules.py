@@ -1,0 +1,94 @@
+"""Sharding rules: every (arch x step kind) yields PartitionSpecs whose
+mapped axes divide the corresponding dims (jit input requirement), and
+no spec uses a mesh axis twice."""
+import jax
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import transformer as T
+from repro.models.params import is_spec, pspec_of, tree_paths_map
+from repro.models.sharding import make_rules
+
+
+class FakeMesh:
+    axis_names = ("pod", "data", "model")
+
+    class _Dev:
+        shape = (2, 16, 16)
+        size = 512
+    devices = _Dev()
+
+
+def _axis_sizes():
+    return {"pod": 2, "data": 16, "model": 16}
+
+
+def _flatten_axes(entry):
+    if entry is None:
+        return []
+    if isinstance(entry, (tuple, list)):
+        out = []
+        for e in entry:
+            out.extend(_flatten_axes(e))
+        return out
+    return [entry]
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode",
+                                  "decode_long"])
+def test_param_pspecs_divide_and_no_dup(arch, kind):
+    cfg = get_config(arch)
+    mesh = FakeMesh()
+    rules = make_rules(cfg, mesh, kind=kind)
+    sizes = _axis_sizes()
+    spec_tree = T.model_spec(cfg)
+
+    def check(s):
+        ps = pspec_of(s, rules.params)
+        used = []
+        for dim, entry in zip(s.shape, tuple(ps) + (None,) * len(s.shape)):
+            axes = _flatten_axes(entry)
+            used.extend(axes)
+            factor = 1
+            for a in axes:
+                factor *= sizes[a]
+            assert dim % factor == 0, (arch, kind, s.shape, ps)
+        assert len(used) == len(set(used)), (arch, ps)
+        return s
+    tree_paths_map(check, spec_tree)
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "llama3-405b",
+                                  "mixtral-8x7b", "mamba2-780m"])
+def test_cache_pspecs_divide(arch):
+    cfg = get_config(arch)
+    mesh = FakeMesh()
+    sizes = _axis_sizes()
+    for kind, batch, seq in [("decode", 128, 32768),
+                             ("decode_long", 1, 524288)]:
+        if kind == "decode_long" and not cfg.subquadratic:
+            continue
+        rules = make_rules(cfg, mesh, kind=kind)
+        cs = T.cache_spec(cfg, batch, seq, enc_len=4096)
+
+        def check(s):
+            ps = pspec_of(s, rules.acts)
+            for dim, entry in zip(s.shape,
+                                  tuple(ps) + (None,) * len(s.shape)):
+                factor = 1
+                for a in _flatten_axes(entry):
+                    factor *= sizes[a]
+                assert dim % factor == 0, (arch, kind, s.shape, ps)
+            return s
+        tree_paths_map(check, cs)
+
+
+def test_serve_params_drop_fsdp_for_small_archs():
+    mesh = FakeMesh()
+    small = make_rules(get_config("gemma3-1b"), mesh, kind="decode")
+    big = make_rules(get_config("llama3-405b"), mesh, kind="decode")
+    # small model: replicated (TP-only) serve params on the embed axis
+    assert small.params.lookup("embed") is None
+    # 405B cannot fit TP-only: keeps FSDP sharding at serve time
+    assert big.params.lookup("embed") is not None

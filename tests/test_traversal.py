@@ -1,0 +1,85 @@
+"""JAX single-shard traversal vs the numpy lockstep oracle + recall checks."""
+import numpy as np
+import pytest
+
+from repro.core.graph import build_vamana, brute_force_topk, recall_at_k
+from repro.core.ref_search import (SearchParams, classic_beam_search,
+                                   lockstep_search_batch)
+from repro.core.traversal import search
+
+INVALID = -1
+
+
+def _int_dataset(n=512, d=32, nq=16, seed=0):
+    """Integer-valued vectors -> exact float32 arithmetic everywhere."""
+    rng = np.random.default_rng(seed)
+    db = rng.integers(-8, 9, size=(n, d)).astype(np.float32)
+    queries = rng.integers(-8, 9, size=(nq, d)).astype(np.float32)
+    adj, medoid = build_vamana(db, r=12, alpha=1.2, seed=seed)
+    return db, queries, adj, medoid
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return _int_dataset()
+
+
+@pytest.mark.parametrize("W", [1, 2, 4])
+def test_traversal_matches_oracle_bitexact(ds, W):
+    db, queries, adj, medoid = ds
+    params = SearchParams(L=16, W=W, k=10)
+    ref_i, ref_d, ref_rounds = lockstep_search_batch(
+        db, adj, queries, medoid, params)
+    vnorm = (db.astype(np.float64) ** 2).sum(-1).astype(np.float32)
+    out_i, out_d, stats = search(db, adj, vnorm, queries, medoid, params)
+    np.testing.assert_array_equal(np.asarray(out_i), ref_i)
+    np.testing.assert_array_equal(np.asarray(out_d), ref_d)
+    np.testing.assert_array_equal(np.asarray(stats["rounds"]), ref_rounds)
+
+
+def test_lockstep_recall_close_to_classic(ds):
+    db, queries, adj, medoid = ds
+    params = SearchParams(L=32, W=1, k=10)
+    true_i, _ = brute_force_topk(db, queries, k=10)
+    lock_i, _, _ = lockstep_search_batch(db, adj, queries, medoid, params)
+    cls_i = np.stack([
+        classic_beam_search(db, adj, q, medoid, L=32, k=10)[0]
+        for q in queries])
+    r_lock = recall_at_k(lock_i, true_i)
+    r_cls = recall_at_k(cls_i, true_i)
+    assert r_cls >= 0.9, f"graph too weak: classic recall {r_cls}"
+    assert r_lock >= r_cls - 0.05, (r_lock, r_cls)
+
+
+def test_search_recall_reasonable(ds):
+    db, queries, adj, medoid = ds
+    vnorm = (db.astype(np.float64) ** 2).sum(-1).astype(np.float32)
+    params = SearchParams(L=32, W=1, k=10)
+    out_i, _, _ = search(db, adj, vnorm, queries, medoid, params)
+    true_i, _ = brute_force_topk(db, queries, k=10)
+    assert recall_at_k(np.asarray(out_i), true_i) >= 0.9
+
+
+def test_speculative_widening_fewer_rounds(ds):
+    db, queries, adj, medoid = ds
+    vnorm = (db.astype(np.float64) ** 2).sum(-1).astype(np.float32)
+    p1 = SearchParams(L=16, W=1, k=10)
+    p4 = SearchParams(L=16, W=4, k=10)
+    _, _, s1 = search(db, adj, vnorm, queries, medoid, p1)
+    i4, _, s4 = search(db, adj, vnorm, queries, medoid, p4)
+    # widening trades extra distance computations for fewer serial rounds
+    assert int(s4["total_rounds"]) < int(s1["total_rounds"])
+    assert float(np.mean(np.asarray(s4["n_dist"]))) >= \
+        float(np.mean(np.asarray(s1["n_dist"]))) * 0.95
+    true_i, _ = brute_force_topk(db, queries, k=10)
+    assert recall_at_k(np.asarray(i4), true_i) >= 0.85
+
+
+def test_no_nans_and_valid_ids(ds):
+    db, queries, adj, medoid = ds
+    vnorm = (db.astype(np.float64) ** 2).sum(-1).astype(np.float32)
+    out_i, out_d, _ = search(db, adj, vnorm, queries, medoid,
+                             SearchParams(L=16, W=2, k=10))
+    out_i, out_d = np.asarray(out_i), np.asarray(out_d)
+    assert np.isfinite(out_d[out_i != INVALID]).all()
+    assert ((out_i >= 0) & (out_i < db.shape[0])).all() | (out_i == INVALID).all()
