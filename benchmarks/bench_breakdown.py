@@ -20,7 +20,7 @@ from benchmarks.common import (build_packed, dataset, emit, graph_for,
 NAME, N, SHARDS = "sift-1b", 8192, 8
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, kernel_mode: str = "jnp"):
     db0, adj0, medoid0 = graph_for(NAME, N if not quick else 4096)
     db, adj, medoid = reorder_graph(db0, adj0, medoid0, "ours")
     packed = build_packed(db, adj, medoid, shards=SHARDS)
@@ -28,7 +28,7 @@ def run(quick: bool = False):
     d = packed.db.shape[-1]
     R = packed.max_degree
 
-    nd = run_engine(db, packed, queries)
+    nd = run_engine(db, packed, queries, kernel_mode=kernel_mode)
     rows = []
     # interconnect bytes per mode (per computed distance)
     io_nd = nd.n_dist * (8 + d * 4 / R)

@@ -16,7 +16,7 @@ DATASETS = [("glove-100", 4096), ("fashion-mnist", 4096), ("sift-1b", 8192),
 SHARDS = 8
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, kernel_mode: str = "jnp"):
     rows = []
     for name, n in DATASETS[:2 if quick else None]:
         db0, adj0, medoid0 = graph_for(name, n)
@@ -26,8 +26,10 @@ def run(quick: bool = False):
         d = packed.db.shape[-1]
         R = packed.max_degree
 
-        nd = run_engine(db, packed, queries, gather_vectors=False)
-        gv = run_engine(db, packed, queries, gather_vectors=True)
+        nd = run_engine(db, packed, queries, gather_vectors=False,
+                        kernel_mode=kernel_mode)
+        gv = run_engine(db, packed, queries, gather_vectors=True,
+                        kernel_mode=kernel_mode)
         # bytes over the interconnect per computed distance
         nd_bytes = d * 4 + 8            # query vec amortized + dist+id
         gv_bytes = d * 4 + 4            # full feature vector + id

@@ -10,13 +10,13 @@ from benchmarks.common import (build_packed, dataset, emit, graph_for,
 NAME, N, SHARDS = "spacev-1b", 8192, 8
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, kernel_mode: str = "jnp"):
     db0, adj0, medoid0 = graph_for(NAME, N if not quick else 4096)
     queries = dataset(NAME, N if not quick else 4096).queries(128)
     rows = []
 
     def add(label, db, packed, **kw):
-        res = run_engine(db, packed, queries, **kw)
+        res = run_engine(db, packed, queries, kernel_mode=kernel_mode, **kw)
         rows.append([label, res.page_reads, res.item_reads, res.rounds,
                      round(res.wall_s, 3), round(res.recall, 3)])
         return res

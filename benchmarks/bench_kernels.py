@@ -1,0 +1,91 @@
+"""Hot-kernel microbenchmark: distance + merge throughput per backend mode.
+
+Times the two kernels the engine routes through core/backend.py —
+
+  * paged SiN distance: (T, QB, d) query tiles against a paged (NP, P, d)
+    store, page ids sorted (the dynamic-allocating fast path), and
+  * bitonic merge: lexicographic (dist, id) row sort with one payload
+    lane (the candidate-list merge shape: L + W*R wide).
+
+Reported per mode so Fig. 15/18-style runs can be read against the raw
+kernel cost. ``interpret`` runs the Pallas kernel without a TPU and is
+expected to be slow — it is a correctness tier, not a speed tier.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.backend import MODES, KernelBackend
+
+
+def _time(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)           # compile outside the timed region
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False, kernel_mode: str = ""):
+    if kernel_mode:
+        modes = [kernel_mode]
+    else:
+        modes = [m for m in MODES if m not in ("auto", "pallas")]
+        if jax.default_backend() == "tpu":
+            modes.append("pallas")
+
+    rng = np.random.default_rng(0)
+    T, QB, P, d, NP = (64, 8, 64, 128, 16) if quick else (256, 8, 64, 128, 32)
+    q = jnp.asarray(rng.standard_normal((T, QB, d)), jnp.float32)
+    qq = jnp.sum(q * q, axis=-1)
+    db = jnp.asarray(rng.standard_normal((NP, P, d)), jnp.float32)
+    vnorm = jnp.sum(db * db, axis=-1)
+    pids = jnp.sort(jnp.asarray(rng.integers(0, NP, T), jnp.int32))
+
+    B, M = (64, 128) if quick else (256, 512)    # merge rows: Q x (L + W*R)
+    md = jnp.asarray(rng.standard_normal((B, M)), jnp.float32)
+    mi = jnp.asarray(rng.integers(0, 2**20, (B, M)), jnp.int32)
+    me = jnp.asarray(rng.integers(0, 2, (B, M)), jnp.int32)
+
+    rows = []
+    for mode in modes:
+        be = KernelBackend(mode=mode)
+        dist_f = jax.jit(be.paged_distance)
+        sort_f = jax.jit(be.sort_pairs)
+        t_dist = _time(dist_f, pids, q, qq, db, vnorm)
+        t_sort = _time(sort_f, md, mi, me)
+        rows.append([
+            mode if mode != "auto" else f"auto({be.resolved})",
+            round(t_dist * 1e3, 3),
+            round(T * QB * P / t_dist / 1e6, 1),
+            round(t_sort * 1e3, 3),
+            round(B * M / t_sort / 1e6, 1),
+        ])
+    emit(rows, ["mode", "distance_ms", "Mdist/s", "merge_ms", "Melem/s"],
+         f"kernel microbenchmark (T={T} QB={QB} P={P} d={d}; "
+         f"merge {B}x{M}+payload)")
+    # sanity: every mode computes the same math
+    ref = KernelBackend(mode="ref")
+    for mode in modes:
+        be = KernelBackend(mode=mode)
+        np.testing.assert_allclose(
+            np.asarray(be.paged_distance(pids, q, qq, db, vnorm)),
+            np.asarray(ref.paged_distance(pids, q, qq, db, vnorm)),
+            rtol=1e-5, atol=1e-4)
+        assert float(jnp.max(jnp.abs(
+            be.sort_pairs(md, mi, me)[0] - ref.sort_pairs(md, mi, me)[0]
+        ))) == 0.0
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -75,7 +75,8 @@ class RunResult:
 
 
 def run_engine(db, packed, queries, *, L=32, W=1, k=10, spec=0,
-               gather_vectors=False, repeats=2, max_rounds=0) -> RunResult:
+               gather_vectors=False, repeats=2, max_rounds=0,
+               kernel_mode="jnp") -> RunResult:
     consts, geom, entry = pack_for_engine(packed)
     S = packed.geometry.num_shards
     nq = queries.shape[0] - queries.shape[0] % S or S
@@ -83,7 +84,8 @@ def run_engine(db, packed, queries, *, L=32, W=1, k=10, spec=0,
     sp = SearchParams(L=L, W=W, k=k, max_rounds=max_rounds)
     params = EngineParams.lossless(sp, nq // S, packed.max_degree,
                                    spec_width=spec,
-                                   gather_vectors=gather_vectors)
+                                   gather_vectors=gather_vectors,
+                                   kernel_mode=kernel_mode)
     ids = dists = stats = None
     t_best = float("inf")
     for _ in range(repeats):

@@ -15,12 +15,18 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma-separated bench substrings")
+    ap.add_argument("--kernel-mode", default="",
+                    choices=["", "auto", "pallas", "interpret", "ref", "jnp"],
+                    help="hot-path backend for benches that accept it "
+                         "(A/B the inline jnp path vs the Pallas kernels)")
     args = ap.parse_args(argv)
+
+    import inspect
 
     from benchmarks import (bench_breakdown, bench_fig15_throughput,
                             bench_fig16_reorder, bench_fig17_dynamic,
                             bench_fig18_ablation, bench_fig21_batch,
-                            bench_table1_stats, roofline)
+                            bench_kernels, bench_table1_stats, roofline)
     benches = [
         ("fig15_throughput", bench_fig15_throughput.run),
         ("fig16_reorder", bench_fig16_reorder.run),
@@ -29,6 +35,7 @@ def main(argv=None):
         ("fig21_batch", bench_fig21_batch.run),
         ("table1_stats", bench_table1_stats.run),
         ("breakdown_fig2_19", bench_breakdown.run),
+        ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]
     only = [s for s in args.only.split(",") if s]
@@ -36,9 +43,13 @@ def main(argv=None):
     for name, fn in benches:
         if only and not any(s in name for s in only):
             continue
+        kw = {}
+        if (args.kernel_mode
+                and "kernel_mode" in inspect.signature(fn).parameters):
+            kw["kernel_mode"] = args.kernel_mode
         t0 = time.time()
         try:
-            fn(quick=args.quick)
+            fn(quick=args.quick, **kw)
             print(f"[bench {name}: {time.time() - t0:.1f}s]")
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))

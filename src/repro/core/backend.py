@@ -1,0 +1,163 @@
+"""Pluggable kernel backend for the engine's two hot paths.
+
+Every distance computation and every candidate merge in the repo funnels
+through a :class:`KernelBackend`, which owns
+
+  * **mode selection** — ``auto | pallas | interpret | ref | jnp``.
+    ``auto`` resolves to ``pallas`` on TPU and ``ref`` elsewhere; the
+    remaining modes pin a layer of the kernel stack explicitly:
+
+        oracle (core/ref_search.py, numpy)       — pure-python semantics
+          -> ``jnp``        inline XLA ops       — the fused fast path on
+                                                   CPU/GPU (gather + dot,
+                                                   lax.sort)
+          -> ``ref``        kernels/*/ref.py     — the kernels' jnp
+                                                   oracles behind the same
+                                                   tiling/padding as Pallas
+          -> ``interpret``  Pallas, interpreted  — kernel code, no TPU
+          -> ``pallas``     Pallas, compiled     — the SiN/SSD-FPGA analogue
+
+    All five produce bit-identical results on integer-valued vectors
+    (proven in tests/test_backend_dispatch.py and tests/test_engine*.py).
+
+  * **tile padding** — queries pad to hardware-friendly tiles
+    (kernels/distance/ops.py::pad_tiles), sort widths pad to the next
+    power of two with (BIG_DIST, ID_SENTINEL) filler that lexicographically
+    sorts after every real entry (kernels/topk/ops.py::sort_op).
+
+  * **dispatch** for the two kernels:
+      - paged SiN distance  (kernels/distance) — one grid step = one NAND
+        page read; assignments are regrouped by physical page first so
+        consecutive steps hit the Pallas copy-elision fast path (the
+        paper's ``pageLocBit``).
+      - lexicographic bitonic sort (kernels/topk) — (dist, id) 2-key sort
+        with payload lanes, used for the candidate-list merge. Bool
+        payloads (the ``expanded`` flags) are packed to i32 for the VPU.
+
+The dataclass is frozen + hashable so it can live inside jit-static
+arguments (EngineParams carries one as ``kernel_mode``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance.ops import paged_distance_op
+from repro.kernels.topk.ops import sort_op
+from repro.kernels.topk.ref import bitonic_sort_ref
+from repro.utils import BIG_DIST, cdiv
+
+MODES = ("auto", "pallas", "interpret", "ref", "jnp")
+
+
+def resolve_mode(mode: str) -> str:
+    """'auto' -> 'pallas' on TPU, 'ref' elsewhere; other modes unchanged."""
+    if mode not in MODES:
+        raise ValueError(f"kernel mode {mode!r} not in {MODES}")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBackend:
+    """Mode selection + padding + dispatch for the hot kernels.
+
+    mode         : see :data:`MODES`; resolved lazily so a config built on
+                   the host applies to whatever backend jit runs on.
+    sort_block_b : rows per Pallas grid step of the bitonic network.
+    """
+
+    mode: str = "auto"
+    sort_block_b: int = 1
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"kernel mode {self.mode!r} not in {MODES}")
+
+    @property
+    def resolved(self) -> str:
+        return resolve_mode(self.mode)
+
+    @property
+    def inline(self) -> bool:
+        """True when hot paths use inline jnp ops instead of the kernels."""
+        return self.resolved == "jnp"
+
+    # -- merge/sort ---------------------------------------------------------
+    def sort_pairs(self, dists: jax.Array, ids: jax.Array,
+                   *payload: jax.Array):
+        """Ascending lexicographic (dist, id) row sort, payload carried.
+
+        The payload lanes follow their (dist, id) pair through the sort.
+        Ties — identical (dist, id) — must carry identical payloads for
+        the unstable bitonic network to agree with stable lax.sort; the
+        engine guarantees this (duplicate ids never survive dedup, and
+        sentinel slots are never marked expanded).
+        """
+        mode = self.resolved
+        if mode == "jnp":
+            return bitonic_sort_ref(dists, ids, *payload)
+        packed = tuple(p.astype(jnp.int32) if p.dtype == jnp.bool_ else p
+                       for p in payload)
+        out = sort_op(dists, ids, *packed, mode=mode,
+                      block_b=self.sort_block_b)
+        restored = tuple(o.astype(p.dtype) for o, p in zip(out[2:], payload))
+        return (out[0], out[1]) + restored
+
+    # -- distance -----------------------------------------------------------
+    def paged_distance(self, page_ids, queries, qq, db, vnorm) -> jax.Array:
+        """(T, QB, d) query tiles x (NP, P, d) paged db -> (T, QB, P)."""
+        mode = self.resolved
+        return paged_distance_op(page_ids, queries, qq, db, vnorm,
+                                 mode="ref" if mode == "jnp" else mode)
+
+    def item_distances(self, ppage, slot, mask, qvec, qq, db, vnorm):
+        """Per-assignment squared-L2 distances where the vectors live.
+
+        ppage/slot/mask/qq : (I,) physical page, slot-in-page, validity,
+                             per-item query self-dot
+        qvec               : (I, d) per-item query payload
+        db, vnorm          : (NP, P, d), (NP, P) shard-resident store
+        returns            : (I,) f32; masked items get BIG_DIST.
+
+        Kernel modes regroup the assignments by physical page (the
+        Allocator's dynamic scheduling) and issue one (1, d) x (d, P)
+        page read per item through the paged kernel — consecutive items
+        on the same page reuse the page buffer via Pallas copy elision —
+        then pick each item's slot lane and undo the regrouping.
+        """
+        if self.inline:
+            v = db[ppage, slot].astype(jnp.float32)
+            vn = vnorm[ppage, slot]
+            qv = jnp.sum(qvec.astype(jnp.float32) * v, axis=-1)
+            dist = qq - 2.0 * qv + vn
+            return jnp.where(mask, dist, BIG_DIST)
+        npages = db.shape[0]
+        # masked items key after every real page so they tile together
+        key = jnp.where(mask, ppage, jnp.int32(npages))
+        order = jnp.argsort(key, stable=True)
+        inv = jnp.argsort(order, stable=True)
+        pids = jnp.clip(key[order], 0, npages - 1)
+        tiles = qvec[order][:, None, :]                    # (I, 1, d)
+        qqt = qq[order][:, None]                           # (I, 1)
+        out = self.paged_distance(pids, tiles, qqt, db, vnorm)  # (I, 1, P)
+        picked = jnp.take_along_axis(out[:, 0, :], slot[order][:, None],
+                                     axis=1)[:, 0]
+        dist = picked[inv]
+        return jnp.where(mask, dist, BIG_DIST)
+
+
+def paged_view(db: jax.Array, vnorm: jax.Array, page_size: int):
+    """Reshape a flat (N, d) store into the paged (NP, P, d) layout the
+    SiN kernel reads, zero-padding the tail page."""
+    n, d = db.shape
+    npages = cdiv(n, page_size)
+    pad = npages * page_size - n
+    if pad:
+        db = jnp.concatenate([db, jnp.zeros((pad, d), db.dtype)], axis=0)
+        vnorm = jnp.concatenate([vnorm, jnp.zeros((pad,), vnorm.dtype)])
+    return (db.reshape(npages, page_size, d),
+            vnorm.reshape(npages, page_size))

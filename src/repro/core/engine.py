@@ -28,6 +28,13 @@ Two drivers share the same stage functions bit-for-bit:
 
 Equality sim == distributed == single-shard traversal (lossless capacity,
 spec off) is tested in tests/test_engine*.py.
+
+Hot paths dispatch through ``EngineParams.kernel_mode`` (a
+:class:`repro.core.backend.KernelBackend`): phase-B distances become
+paged SiN kernel reads grouped by physical page, and the merge runs the
+bitonic network — or the inline jnp equivalents in ``jnp`` mode. All
+modes are bit-identical on integer-valued vectors
+(tests/test_backend_dispatch.py).
 """
 from __future__ import annotations
 
@@ -38,6 +45,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import KernelBackend
 from repro.core.dispatch import (bucket_mask, compute_ranks,
                                  gather_from_buckets, scatter_to_buckets)
 from repro.core.luncsr import PackedIndex
@@ -107,6 +115,12 @@ class EngineParams:
     spec_width: int = 0             # 2nd-order speculative prefetch width
     gather_vectors: bool = False    # baseline: move vectors, not distances
     payload_bf16: bool = False      # halve a2a bytes: bf16 query payloads
+    kernel_mode: str = "jnp"        # hot-path backend: auto|pallas|interpret
+                                    # |ref|jnp (core/backend.py)
+
+    @property
+    def backend(self) -> KernelBackend:
+        return KernelBackend(mode=self.kernel_mode)
 
     @staticmethod
     def lossless(search: SearchParams, queries_per_shard: int,
@@ -261,8 +275,6 @@ def _fd_distance(recv, db, vnorm, blk_perm, params: EngineParams,
     ppage = geom.phys_page(flat_vid, blk_perm)
     ppage = jnp.clip(ppage, 0, db.shape[0] - 1)
     slot = flat_vid % geom.page_size
-    v = db[ppage, slot].astype(jnp.float32)        # (S*C, d)
-    vn = vnorm[ppage, slot]
 
     items = flat_mask.sum().astype(jnp.int32)
     sorted_pages = jnp.sort(jnp.where(flat_mask, ppage, jnp.int32(2**30)))
@@ -271,13 +283,14 @@ def _fd_distance(recv, db, vnorm, blk_perm, params: EngineParams,
     uniq = (first & (sorted_pages != 2**30)).sum().astype(jnp.int32)
 
     if params.gather_vectors:
+        v = db[ppage, slot].astype(jnp.float32)    # (S*C, d)
+        vn = vnorm[ppage, slot]
         send = {"vec": jnp.where(flat_mask[:, None], v, 0.0).reshape(S, C, -1),
                 "vn": jnp.where(flat_mask, vn, 0.0).reshape(S, C)}
     else:
-        qv = jnp.sum(recv["qvec"].reshape(S * C, -1).astype(jnp.float32) * v,
-                     axis=-1)
-        dist = recv["qq"].reshape(-1) - 2.0 * qv + vn
-        dist = jnp.where(flat_mask, dist, BIG_DIST)
+        dist = params.backend.item_distances(
+            ppage, slot, flat_mask, recv["qvec"].reshape(S * C, -1),
+            recv["qq"].reshape(-1), db, vnorm)
         send = {"dist": dist.reshape(S, C)}
     return send, items, uniq
 
@@ -308,7 +321,7 @@ def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
     bloom = bloom_insert(state.bloom, props, accepted)
     cand_d, cand_i, cand_e = merge_candidates(
         state.cand_d, state.cand_i, keep_a["cand_e2"], dist, props,
-        accepted, L)
+        accepted, L, backend=params.backend)
     worked = ~state.done
     keep = state.done
     cand_d = jnp.where(keep[:, None], state.cand_d, cand_d)
@@ -468,13 +481,16 @@ def search_distributed(consts, queries, entry_vec, entry_norm, entry_id,
         stats["total_rounds"] = t[None]
         return out_i[None], out_d[None], stats
 
-    f = jax.shard_map(
-        local_fn, mesh=mesh,
-        in_specs=(P(axis_name), P(axis_name), P(axis_name), P(axis_name),
-                  P(axis_name), P(axis_name), P(), P(), P()),
-        out_specs=(P(axis_name), P(axis_name), P(axis_name)),
-        check_vma=False,
-    )
+    in_specs = (P(axis_name), P(axis_name), P(axis_name), P(axis_name),
+                P(axis_name), P(axis_name), P(), P(), P())
+    out_specs = (P(axis_name), P(axis_name), P(axis_name))
+    if hasattr(jax, "shard_map"):
+        f = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    else:  # jax < 0.6: shard_map lives in experimental, check_rep spelling
+        from jax.experimental.shard_map import shard_map as _shard_map
+        f = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
     return jax.jit(f)(consts["db"], consts["vnorm"], consts["adj"],
                       consts["pref"], consts["blk_perm"], queries,
                       entry_vec, entry_norm, entry_id)

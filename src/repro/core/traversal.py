@@ -10,6 +10,12 @@ identical round semantics, batched over queries, jittable. It doubles as
 
 The distributed engine (core/engine.py) reuses the per-query primitives
 exported here: ``select_expand``, ``dedup_in_round``, ``merge_candidates``.
+
+Hot paths (distance + merge) dispatch through a
+:class:`repro.core.backend.KernelBackend`: the default inline-jnp mode is
+the fused XLA path, while ``ref``/``interpret``/``pallas`` route the same
+math through the paged SiN distance and bitonic merge kernels
+(kernels/{distance,topk}) — bit-identical on integer-valued vectors.
 """
 from __future__ import annotations
 
@@ -19,8 +25,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import KernelBackend, paged_view
 from repro.core.ref_search import SearchParams
 from repro.utils import BIG_DIST, bloom_insert, bloom_query
+
+_JNP = KernelBackend(mode="jnp")
 
 INVALID = -1
 ID_SENTINEL = jnp.int32(2**31 - 1)
@@ -41,10 +50,23 @@ class TraversalState(NamedTuple):
 # ---------------------------------------------------------------------------
 # Shared per-query primitives (also used by core/engine.py)
 # ---------------------------------------------------------------------------
-def sort_by_dist_id(d: jax.Array, i: jax.Array, *others: jax.Array):
-    """Ascending lexicographic (dist, id) sort along the last axis."""
-    res = jax.lax.sort((d, i) + others, num_keys=2)
-    return res
+def sort_by_dist_id(d: jax.Array, i: jax.Array, *others: jax.Array,
+                    backend: KernelBackend | None = None):
+    """Ascending lexicographic (dist, id) sort along the last axis.
+
+    ``others`` ride along as payload lanes. With no backend (or inline
+    mode) this is lax.sort(num_keys=2); kernel modes run the bitonic
+    sorting network on power-of-two padded rows.
+    """
+    backend = backend or _JNP
+    if backend.inline:
+        return jax.lax.sort((d, i) + others, num_keys=2)
+    lead = d.shape[:-1]
+    m = d.shape[-1]
+    flat = backend.sort_pairs(
+        d.reshape(-1, m), i.reshape(-1, m),
+        *(o.reshape(-1, m) for o in others))
+    return tuple(x.reshape(lead + (m,)) for x in flat)
 
 
 def select_expand(cand_d, cand_i, cand_e, W: int):
@@ -80,15 +102,19 @@ def dedup_in_round(ids: jax.Array, valid: jax.Array) -> jax.Array:
     return valid & ~dup
 
 
-def merge_candidates(cand_d, cand_i, cand_e, new_d, new_i, new_valid, L: int):
-    """Merge proposals into the candidate list; keep best L by (dist, id)."""
+def merge_candidates(cand_d, cand_i, cand_e, new_d, new_i, new_valid, L: int,
+                     backend: KernelBackend | None = None):
+    """Merge proposals into the candidate list; keep best L by (dist, id).
+
+    The ``expanded`` flags travel through the 2-key sort as a payload
+    lane (kernel modes run the bitonic network with an extra operand)."""
     new_d = jnp.where(new_valid, new_d, BIG_DIST)
     new_i = jnp.where(new_valid, new_i, ID_SENTINEL)
     new_e = jnp.zeros(new_i.shape, dtype=bool)
     d = jnp.concatenate([cand_d, new_d], axis=-1)
     i = jnp.concatenate([cand_i, new_i], axis=-1)
     e = jnp.concatenate([cand_e, new_e], axis=-1)
-    d, i, e = sort_by_dist_id(d, i, e)
+    d, i, e = sort_by_dist_id(d, i, e, backend=backend)
     return d[..., :L], i[..., :L], e[..., :L]
 
 
@@ -102,11 +128,24 @@ def count_unique_pages(ids, valid, page_size: int):
     return (first & (pages != ID_SENTINEL)).sum(axis=-1).astype(jnp.int32)
 
 
-def squared_dists(queries, qq, vecs, vnorm):
-    """q.q - 2 q.v + v.v ; queries (Q,d), vecs (Q,M,d), vnorm (Q,M)."""
-    qv = jnp.einsum("qd,qmd->qm", queries, vecs,
-                    preferred_element_type=jnp.float32)
-    return qq[:, None] - 2.0 * qv + vnorm
+def squared_dists(queries, qq, vecs, vnorm,
+                  backend: KernelBackend | None = None):
+    """q.q - 2 q.v + v.v ; queries (Q,d), vecs (Q,M,d), vnorm (Q,M).
+
+    Kernel modes treat each query's gathered candidate set as one "page"
+    ((Q, M, d) is a (NP=Q, P=M, d) paged store) and run the SiN distance
+    kernel over it; inline mode is the fused einsum. Compiled ``pallas``
+    mode inherits the kernel's TPU lane-alignment requirements on M/d."""
+    backend = backend or _JNP
+    if backend.inline:
+        qv = jnp.einsum("qd,qmd->qm", queries, vecs,
+                        preferred_element_type=jnp.float32)
+        return qq[:, None] - 2.0 * qv + vnorm
+    Q = queries.shape[0]
+    out = backend.paged_distance(
+        jnp.arange(Q, dtype=jnp.int32), queries[:, None, :], qq[:, None],
+        vecs, vnorm)                                       # (Q, 1, M)
+    return out[:, 0, :]
 
 
 # ---------------------------------------------------------------------------
@@ -130,19 +169,28 @@ def init_state(db, vnorm, queries, entry, params: SearchParams) -> TraversalStat
                           zeros, zeros, zeros, jnp.int32(0))
 
 
-@functools.partial(jax.jit, static_argnames=("params", "page_size"))
+@functools.partial(jax.jit,
+                   static_argnames=("params", "page_size", "kernel_mode"))
 def search(db: jax.Array, adj: jax.Array, vnorm: jax.Array,
            queries: jax.Array, entry, params: SearchParams,
-           page_size: int = 256):
+           page_size: int = 256, kernel_mode: str = "jnp"):
     """Batched best-first search on a single shard.
 
     db (N,d) f32 | adj (N,R) i32 INVALID-padded | vnorm (N,) f32 | queries
     (Q,d) f32. Returns (ids (Q,k) i32, dists (Q,k) f32, stats dict).
+
+    ``kernel_mode`` selects the backend for the distance + merge hot
+    paths: the default inline ``jnp`` path, or the SiN/bitonic kernels
+    (``ref``/``interpret``/``pallas``/``auto``) on the page-granular view
+    of ``db`` — identical results, proven bit-exact on integer vectors.
     """
+    backend = KernelBackend(mode=kernel_mode)
     Q, d = queries.shape
     L, W, R = params.L, params.W, adj.shape[1]
     qq = jnp.sum(queries * queries, axis=-1)
     n = db.shape[0]
+    if not backend.inline:
+        db_pg, vnorm_pg = paged_view(db, vnorm, page_size)
 
     def round_fn(state: TraversalState) -> TraversalState:
         sel_ids, sel_valid, cand_e = select_expand(
@@ -156,13 +204,23 @@ def search(db: jax.Array, adj: jax.Array, vnorm: jax.Array,
         valid = (nbrs != INVALID) & jnp.repeat(sel_valid, R, axis=1)
         valid = dedup_in_round(nbrs, valid)
         valid &= ~bloom_query(state.bloom, nbrs)
-        # distance computation (the "SiN" kernel point; here: local gather)
+        # distance computation — the SiN kernel point. Inline mode is the
+        # local gather + dot; kernel modes issue page reads on the paged
+        # view of db (one grid step per assignment, page-sorted).
         safe = jnp.clip(nbrs, 0, n - 1)
-        dists = squared_dists(queries, qq, db[safe], vnorm[safe])
+        if backend.inline:
+            dists = squared_dists(queries, qq, db[safe], vnorm[safe])
+        else:
+            qidx = jnp.repeat(jnp.arange(Q, dtype=jnp.int32), nbrs.shape[1])
+            flat = safe.reshape(-1)
+            dists = backend.item_distances(
+                flat // page_size, flat % page_size, valid.reshape(-1),
+                queries[qidx], qq[qidx], db_pg, vnorm_pg).reshape(nbrs.shape)
         dists = jnp.where(valid, dists, BIG_DIST)
         bloom = bloom_insert(state.bloom, nbrs, valid)
         cand_d, cand_i, cand_e = merge_candidates(
-            state.cand_d, state.cand_i, cand_e, dists, nbrs, valid, L)
+            state.cand_d, state.cand_i, cand_e, dists, nbrs, valid, L,
+            backend=backend)
         # freeze finished queries
         keep = state.done
         cand_d = jnp.where(keep[:, None], state.cand_d, cand_d)

@@ -2,6 +2,10 @@
 
 Pads tiles to hardware-aligned shapes, dispatches to the Pallas kernel on
 TPU and to the jnp oracle elsewhere (interpret mode available for tests).
+This is the dispatch point :mod:`repro.core.backend` routes the engine's
+phase-B distance stage through; callers that need per-assignment
+distances on physical pages should use
+``KernelBackend.item_distances`` rather than calling this directly.
 """
 from __future__ import annotations
 

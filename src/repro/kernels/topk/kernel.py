@@ -8,6 +8,12 @@ pairs, fully vectorized — each compare-exchange stage is a reshape + flip
 Lexicographic (dist, then id) ordering makes the network deterministic and
 bit-identical to ``jax.lax.sort(num_keys=2)`` (the ref oracle).
 
+The sort keys are always the (dist, id) pair; any number of extra
+*payload* lanes ride along through the same compare-exchange network (the
+engine uses one to keep the candidate lists' ``expanded`` flags aligned
+with their (dist, id) entries). Payloads must be VPU-friendly dtypes
+(i32/f32); the backend layer packs bools.
+
 Shapes: (B, M) with M a power of two; grid over B tiles so arbitrarily
 many lists sort in one launch.
 """
@@ -21,54 +27,68 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _cmp_exchange(d, i, j: int, k: int):
-    """One bitonic stage: partner = idx ^ (1<<j); ascending iff bit k unset."""
-    m = d.shape[-1]
+def _partner(x, stride: int):
+    """Value at index idx ^ stride (contiguous stride -> reshape + flip)."""
+    return x.reshape(-1, 2, stride)[:, ::-1, :].reshape(x.shape)
+
+
+def _cmp_exchange(d, i, pay, j: int, k: int):
+    """One bitonic stage: partner = idx ^ (1<<j); ascending iff bit k unset.
+
+    ``pay`` is a tuple of payload arrays swapped with the (d, i) keys.
+    """
     stride = 1 << j
-    # partner values via reshape+flip (idx ^ stride for contiguous stride)
-    dp = d.reshape(-1, 2, stride)[:, ::-1, :].reshape(d.shape)
-    ip = i.reshape(-1, 2, stride)[:, ::-1, :].reshape(i.shape)
+    dp = _partner(d, stride)
+    ip = _partner(i, stride)
     idx = jax.lax.broadcasted_iota(jnp.int32, d.shape, len(d.shape) - 1)
     is_lower = (idx & stride) == 0
     asc = (idx & (1 << k)) == 0
     partner_less = (dp < d) | ((dp == d) & (ip < i))
     # ascending half keeps min in the lower slot; descending the max
     take_partner = jnp.where(asc == is_lower, partner_less, ~partner_less)
-    return jnp.where(take_partner, dp, d), jnp.where(take_partner, ip, i)
+    d = jnp.where(take_partner, dp, d)
+    i = jnp.where(take_partner, ip, i)
+    pay = tuple(jnp.where(take_partner, _partner(p, stride), p) for p in pay)
+    return d, i, pay
 
 
-def _bitonic_body(d_ref, i_ref, od_ref, oi_ref):
-    d = d_ref[...]
-    i = i_ref[...]
+def _bitonic_body(*refs):
+    n = len(refs) // 2
+    ins, outs = refs[:n], refs[n:]
+    d = ins[0][...]
+    i = ins[1][...]
+    pay = tuple(r[...] for r in ins[2:])
     m = d.shape[-1]
     stages = int(math.log2(m))
     for k in range(1, stages + 1):
         for j in range(k - 1, -1, -1):
-            d, i = _cmp_exchange(d, i, j, k)
-    od_ref[...] = d
-    oi_ref[...] = i
+            d, i, pay = _cmp_exchange(d, i, pay, j, k)
+    outs[0][...] = d
+    outs[1][...] = i
+    for r, p in zip(outs[2:], pay):
+        r[...] = p
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
-def bitonic_sort(dists: jax.Array, ids: jax.Array, interpret: bool = True,
-                 block_b: int = 8):
+def bitonic_sort(dists: jax.Array, ids: jax.Array, *payload: jax.Array,
+                 interpret: bool = True, block_b: int = 8):
     """Ascending lexicographic (dist, id) sort of each row.
 
     dists: (B, M) f32, ids: (B, M) i32, M a power of two, B % block_b == 0.
+    Extra ``payload`` arrays (same shape) are permuted alongside the keys.
     """
     B, M = dists.shape
     assert M & (M - 1) == 0, f"M={M} must be a power of two"
     assert B % block_b == 0, (B, block_b)
+    operands = (dists, ids) + payload
     grid = (B // block_b,)
+    spec = pl.BlockSpec((block_b, M), lambda b: (b, 0))
     out = pl.pallas_call(
         _bitonic_body,
         grid=grid,
-        in_specs=[pl.BlockSpec((block_b, M), lambda b: (b, 0)),
-                  pl.BlockSpec((block_b, M), lambda b: (b, 0))],
-        out_specs=[pl.BlockSpec((block_b, M), lambda b: (b, 0)),
-                   pl.BlockSpec((block_b, M), lambda b: (b, 0))],
-        out_shape=[jax.ShapeDtypeStruct((B, M), dists.dtype),
-                   jax.ShapeDtypeStruct((B, M), ids.dtype)],
+        in_specs=[spec] * len(operands),
+        out_specs=[spec] * len(operands),
+        out_shape=[jax.ShapeDtypeStruct((B, M), x.dtype) for x in operands],
         interpret=interpret,
-    )(dists, ids)
-    return out[0], out[1]
+    )(*operands)
+    return tuple(out) if payload else (out[0], out[1])

@@ -1,4 +1,10 @@
-"""jit'd public wrappers: padding to power-of-two, top-k slicing."""
+"""jit'd public wrappers: padding to power-of-two, top-k slicing.
+
+``sort_op`` is the dispatch point the :mod:`repro.core.backend` layer
+calls: it owns the pad-to-power-of-two discipline ((BIG_DIST,
+ID_SENTINEL) filler sorts after every real entry, payload lanes pad with
+zeros) and routes to the Pallas network or the lax.sort oracle by mode.
+"""
 from __future__ import annotations
 
 import jax
@@ -15,9 +21,15 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def sort_op(dists: jax.Array, ids: jax.Array, mode: str = "auto",
-            block_b: int = 1):
-    """Lexicographic sort rows of (dists, ids); pads M to a power of two."""
+def sort_op(dists: jax.Array, ids: jax.Array, *payload: jax.Array,
+            mode: str = "auto", block_b: int = 1):
+    """Lexicographic sort rows of (dists, ids); pads M to a power of two.
+
+    Payload lanes (same (B, M) shape, i32/f32) ride along unsorted-key;
+    they pad with zeros — padded entries sort after all real ones because
+    the key filler is (BIG_DIST, ID_SENTINEL), so the padding never mixes
+    into the returned M-prefix.
+    """
     B, M = dists.shape
     m2 = next_pow2(M)
     if m2 != M:
@@ -25,14 +37,17 @@ def sort_op(dists: jax.Array, ids: jax.Array, mode: str = "auto",
         pad_i = jnp.full((B, m2 - M), ID_SENTINEL, ids.dtype)
         dists = jnp.concatenate([dists, pad_d], axis=1)
         ids = jnp.concatenate([ids, pad_i], axis=1)
+        payload = tuple(
+            jnp.concatenate([p, jnp.zeros((B, m2 - M), p.dtype)], axis=1)
+            for p in payload)
     if mode == "auto":
         mode = "pallas" if _on_tpu() else "ref"
     if mode == "ref":
-        d, i = bitonic_sort_ref(dists, ids)
+        out = bitonic_sort_ref(dists, ids, *payload)
     else:
-        d, i = bitonic_sort(dists, ids, interpret=(mode == "interpret"),
-                            block_b=block_b)
-    return d[:, :M], i[:, :M]
+        out = bitonic_sort(dists, ids, *payload,
+                           interpret=(mode == "interpret"), block_b=block_b)
+    return tuple(x[:, :M] for x in out)
 
 
 def topk_op(dists: jax.Array, ids: jax.Array, k: int, mode: str = "auto"):

@@ -6,9 +6,14 @@ import jax.numpy as jnp
 
 
 @jax.jit
-def bitonic_sort_ref(dists: jax.Array, ids: jax.Array):
-    """Ascending lexicographic (dist, id) sort of each row."""
-    return jax.lax.sort((dists, ids), num_keys=2)
+def bitonic_sort_ref(dists: jax.Array, ids: jax.Array, *payload: jax.Array):
+    """Ascending lexicographic (dist, id) sort of each row.
+
+    Extra ``payload`` operands are permuted alongside the (dist, id) keys,
+    mirroring the kernel's payload lanes.
+    """
+    out = jax.lax.sort((dists, ids) + payload, num_keys=2)
+    return tuple(out) if payload else (out[0], out[1])
 
 
 def topk_ref(dists: jax.Array, ids: jax.Array, k: int):

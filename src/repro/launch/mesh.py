@@ -2,19 +2,32 @@
 jax device state (required so smoke tests/benches see a single device)."""
 from __future__ import annotations
 
+import inspect
+
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - older jax has no axis types
+    AxisType = None
+
+_HAS_AXIS_TYPES = (AxisType is not None
+                   and "axis_types" in inspect.signature(
+                       jax.make_mesh).parameters)
 
 
-def _auto(n: int):
-    return (AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    if _HAS_AXIS_TYPES:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """The target deployment mesh: 16x16 per pod, 2 pods multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_engine_mesh(axis_name: str = "lun", num: int | None = None):
@@ -24,10 +37,9 @@ def make_engine_mesh(axis_name: str = "lun", num: int | None = None):
     flattens pod x data x model into a single shard axis.
     """
     n = num or jax.device_count()
-    return jax.make_mesh((n,), (axis_name,), axis_types=_auto(1))
+    return _make_mesh((n,), (axis_name,))
 
 
 def make_mesh_for(num_devices: int, shape, axes):
     assert len(shape) == len(axes)
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=_auto(len(axes)))
+    return _make_mesh(tuple(shape), tuple(axes))

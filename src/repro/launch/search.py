@@ -54,6 +54,10 @@ def main(argv=None):
     ap.add_argument("--spec", type=int, default=0,
                     help="speculative 2nd-order prefetch width")
     ap.add_argument("--reorder", default="ours", choices=["ours", "none"])
+    ap.add_argument("--kernel-mode", default="jnp",
+                    choices=["auto", "pallas", "interpret", "ref", "jnp"],
+                    help="hot-path backend: inline jnp vs the SiN/bitonic "
+                         "kernels (auto = pallas on TPU, ref elsewhere)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
@@ -80,7 +84,7 @@ def main(argv=None):
     sp = SearchParams(L=args.L, W=args.W, k=args.k)
     params = EngineParams.lossless(
         sp, -(-args.queries // args.shards), args.degree,
-        spec_width=args.spec)
+        spec_width=args.spec, kernel_mode=args.kernel_mode)
     S = args.shards
     qs = args.queries - args.queries % S or S
     qsh = jnp.asarray(queries[:qs].reshape(S, qs // S, -1))
@@ -92,7 +96,8 @@ def main(argv=None):
     true_ids, _ = brute_force_topk(db, queries[:qs], args.k)
     rec = recall_at_k(ids, true_ids)
     res = {
-        "dataset": ds.name, "n": int(db.shape[0]), "queries": qs,
+        "dataset": ds.name, "kernel_mode": args.kernel_mode,
+        "n": int(db.shape[0]), "queries": qs,
         "recall@k": round(float(rec), 4), "qps": round(qs / dt, 1),
         "rounds": int(np.asarray(stats["total_rounds"]).max()),
         "mean_dists_per_query": float(np.asarray(stats["n_dist"]).mean()),

@@ -37,12 +37,14 @@ def greedy_generate(params, cfg, tokens, *, gen: int, opts,
 
 
 def soft_prompt_from_retrieval(cfg, queries: np.ndarray, k: int = 4,
-                               seed: int = 0):
+                               seed: int = 0, kernel_mode: str = "jnp"):
     """Two-stage pipeline: NDSearch retrieval -> soft-prompt embeddings.
 
     Builds a small vector index, retrieves top-k neighbors of each query
     embedding with the distributed engine (single-shard sim here), and
-    projects them into the model's embedding space."""
+    projects them into the model's embedding space. ``kernel_mode``
+    selects the retrieval hot-path backend (core/backend.py): inline jnp
+    or the paged SiN distance + bitonic merge kernels."""
     from repro.core.engine import EngineParams, pack_for_engine, search_sim
     from repro.core.luncsr import Geometry, LUNCSR, pack_index
     from repro.core.graph import build_vamana
@@ -58,7 +60,7 @@ def soft_prompt_from_retrieval(cfg, queries: np.ndarray, k: int = 4,
     packed = pack_index(idx, max_degree=16)
     consts, egeom, entry = pack_for_engine(packed)
     sp = SearchParams(L=16, W=1, k=k)
-    params = EngineParams.lossless(sp, B, 16)
+    params = EngineParams.lossless(sp, B, 16, kernel_mode=kernel_mode)
     ids, dists, _ = search_sim(
         consts, jnp.asarray(queries, jnp.float32)[None], *entry, params,
         egeom)
@@ -76,6 +78,9 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--rag", action="store_true",
                     help="two-stage: retrieve soft prompts via NDSearch")
+    ap.add_argument("--kernel-mode", default="jnp",
+                    choices=["auto", "pallas", "interpret", "ref", "jnp"],
+                    help="retrieval hot-path backend (core/backend.py)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -99,7 +104,8 @@ def main(argv=None):
         enc_len = args.prompt_len
     elif args.rag:
         q = np.asarray(jax.random.normal(key, (args.batch, 32)))
-        vecs, ids, dists = soft_prompt_from_retrieval(cfg, q)
+        vecs, ids, dists = soft_prompt_from_retrieval(
+            cfg, q, kernel_mode=args.kernel_mode)
         print("retrieved neighbor ids:", ids[:, :4].tolist())
         proj = np.asarray(jax.random.normal(
             jax.random.PRNGKey(7), (vecs.shape[-1], cfg.d_model))) * 0.02

@@ -123,6 +123,24 @@ def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
 # ---------------------------------------------------------------------------
 # Layer-scan helper (remat + optional two-level grouping)
 # ---------------------------------------------------------------------------
+@jax.custom_jvp
+def _diff_barrier(xs):
+    """optimization_barrier that is transparent to differentiation.
+
+    jax.lax.optimization_barrier has no AD rule, so applying it inside a
+    differentiated scan body raises NotImplementedError. The custom_jvp
+    keeps the primal barrier (the scheduling constraint we need) while
+    passing tangents straight through — the barrier carries no
+    mathematical content, its derivative is the identity."""
+    return jax.lax.optimization_barrier(xs)
+
+
+@_diff_barrier.defjvp
+def _diff_barrier_jvp(primals, tangents):
+    (xs,), (dxs,) = primals, tangents
+    return jax.lax.optimization_barrier(xs), dxs
+
+
 def _remat_wrap(fn, remat: str):
     if remat == "none":
         return fn
@@ -145,7 +163,7 @@ def scan_layers(body, carry, xs, *, remat: str = "full", groups: int = 1):
     inner = body
 
     def body(c, x):                                    # noqa: F811
-        return inner(c, jax.lax.optimization_barrier(x))
+        return inner(c, _diff_barrier(x))
 
     if groups > 1:
         L = jax.tree_util.tree_leaves(xs)[0].shape[0]

@@ -32,10 +32,13 @@ def main():
     qsh = queries.reshape(S, nq // S, d)
 
     mesh = make_engine_mesh()
-    for spec in (0, 4):
+    # (spec_width, kernel_mode): the ref leg drives distance + merge
+    # through the kernel backend's paged/bitonic path under shard_map
+    for spec, kernel_mode in ((0, "jnp"), (4, "jnp"), (4, "ref")):
         sp = SearchParams(L=16, W=2, k=10)
         params = EngineParams.lossless(sp, qsh.shape[1], geom.max_degree,
-                                       spec_width=spec)
+                                       spec_width=spec,
+                                       kernel_mode=kernel_mode)
         si, sd, ss = search_sim(consts, qsh, *entry, params, geom)
         di, dd, dst = search_distributed(consts, qsh, *entry, params, geom,
                                          mesh)
@@ -45,7 +48,7 @@ def main():
                                       np.asarray(dst["rounds"]))
         np.testing.assert_array_equal(np.asarray(ss["pages_unique"]),
                                       np.asarray(dst["pages_unique"]))
-        print(f"spec={spec}: shard_map == sim OK "
+        print(f"spec={spec} kernel_mode={kernel_mode}: shard_map == sim OK "
               f"(rounds={int(np.asarray(ss['rounds']).sum())})")
     print("MULTISHARD_OK")
 

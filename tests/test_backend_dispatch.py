@@ -1,0 +1,221 @@
+"""KernelBackend: mode resolution, padding discipline, jit-staticness,
+and end-to-end equivalence of the kernel modes across all three drivers
+(single-shard ``search``, ``search_sim``, ``search_distributed``).
+
+Equivalence is asserted bit-exactly on integer-valued vectors: the
+inline-jnp path (the pre-backend implementation), the kernels' jnp
+oracles (``ref``) and the Pallas kernels in interpret mode must agree to
+the last bit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backend import (MODES, KernelBackend, paged_view,
+                                resolve_mode)
+from repro.core.engine import EngineParams, pack_for_engine, search_sim
+from repro.core.graph import build_vamana
+from repro.core.luncsr import Geometry, LUNCSR, pack_index
+from repro.core.ref_search import SearchParams
+from repro.core.traversal import ID_SENTINEL, search
+from repro.kernels.distance.ops import pad_tiles
+from repro.kernels.topk.ops import sort_op
+from repro.utils import BIG_DIST, next_pow2
+
+CHECK_MODES = ("jnp", "ref", "interpret")   # pallas needs a real TPU
+
+
+# ---------------------------------------------------------------------------
+# Mode resolution + config plumbing
+# ---------------------------------------------------------------------------
+def test_auto_resolves_to_ref_off_tpu():
+    assume_cpu = jax.default_backend() != "tpu"
+    assert resolve_mode("auto") == ("ref" if assume_cpu else "pallas")
+    assert KernelBackend(mode="auto").resolved == resolve_mode("auto")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_known_modes_construct(mode):
+    be = KernelBackend(mode=mode)
+    assert be.resolved in ("pallas", "interpret", "ref", "jnp")
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError):
+        KernelBackend(mode="cuda")
+    with pytest.raises(ValueError):
+        resolve_mode("fast")
+
+
+def test_engine_params_hashable_and_jit_static():
+    sp = SearchParams(L=8, W=1, k=4)
+    p1 = EngineParams(search=sp, capacity_a=4, capacity_b=16,
+                      kernel_mode="ref")
+    p2 = EngineParams(search=sp, capacity_a=4, capacity_b=16,
+                      kernel_mode="ref")
+    assert hash(p1) == hash(p2) and p1 == p2
+    assert p1.backend == KernelBackend(mode="ref")
+
+    f = jax.jit(lambda x, params: x + len(params.kernel_mode),
+                static_argnames="params")
+    out = f(jnp.zeros(()), p1)
+    out2 = f(jnp.zeros(()), p2)          # cache hit: same static value
+    assert float(out) == float(out2) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# Padding round-trips
+# ---------------------------------------------------------------------------
+def test_pad_tiles_roundtrip():
+    q = jnp.ones((3, 5, 16), jnp.float32)
+    qq = jnp.full((3, 5), 2.0, jnp.float32)
+    q2, qq2 = pad_tiles(q, qq, qb=8)
+    assert q2.shape == (3, 8, 16) and qq2.shape == (3, 8)
+    np.testing.assert_array_equal(np.asarray(q2[:, :5]), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(qq2[:, :5]), np.asarray(qq))
+    assert float(jnp.abs(q2[:, 5:]).sum()) == 0.0
+    # already aligned: no copy, identical objects pass through
+    q3, qq3 = pad_tiles(q2, qq2, qb=8)
+    assert q3 is q2 and qq3 is qq2
+
+
+@pytest.mark.parametrize("m", [5, 12, 100])
+def test_sort_padding_fill_sorts_after_real_entries(m):
+    rng = np.random.default_rng(m)
+    d = jnp.asarray(rng.standard_normal((4, m)), jnp.float32)
+    i = jnp.asarray(rng.integers(0, 1000, (4, m)), jnp.int32)
+    assert next_pow2(m) > m
+    sd, si = sort_op(d, i, mode="ref")
+    # the (BIG_DIST, ID_SENTINEL) filler never displaces a real entry:
+    # the returned M-prefix is exactly the sorted real rows
+    rd, ri = jax.lax.sort((d, i), num_keys=2)
+    np.testing.assert_array_equal(np.asarray(sd), np.asarray(rd))
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+    assert BIG_DIST > float(jnp.max(d)) and int(ID_SENTINEL) > 1000
+
+
+def test_paged_view_roundtrip():
+    db = jnp.arange(7 * 3, dtype=jnp.float32).reshape(7, 3)
+    vnorm = jnp.sum(db * db, axis=-1)
+    pg, vg = paged_view(db, vnorm, page_size=4)
+    assert pg.shape == (2, 4, 3) and vg.shape == (2, 4)
+    np.testing.assert_array_equal(
+        np.asarray(pg.reshape(-1, 3)[:7]), np.asarray(db))
+    assert float(jnp.abs(pg.reshape(-1, 3)[7:]).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level equivalence (payload lane included)
+# ---------------------------------------------------------------------------
+def test_sort_pairs_payload_lane_matches_across_modes():
+    rng = np.random.default_rng(0)
+    d = jnp.asarray(rng.integers(0, 6, (5, 24)), jnp.float32)
+    i = jnp.asarray(rng.permutation(5 * 24).reshape(5, 24), jnp.int32)
+    e = jnp.asarray(rng.integers(0, 2, (5, 24)), bool)
+    ref = KernelBackend(mode="jnp").sort_pairs(d, i, e)
+    for mode in ("ref", "interpret"):
+        out = KernelBackend(mode=mode).sort_pairs(d, i, e)
+        assert out[2].dtype == jnp.bool_
+        for a, b in zip(ref, out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_item_distances_matches_across_modes():
+    rng = np.random.default_rng(1)
+    npages, p, d, items = 6, 8, 16, 40
+    db = jnp.asarray(rng.integers(-8, 9, (npages, p, d)), jnp.float32)
+    vnorm = jnp.sum(db * db, axis=-1)
+    pp = jnp.asarray(rng.integers(0, npages, items), jnp.int32)
+    sl = jnp.asarray(rng.integers(0, p, items), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, items), bool)
+    qv = jnp.asarray(rng.integers(-8, 9, (items, d)), jnp.float32)
+    qq = jnp.sum(qv * qv, axis=-1)
+    ref = np.asarray(KernelBackend(mode="jnp").item_distances(
+        pp, sl, mask, qv, qq, db, vnorm))
+    assert (ref[np.asarray(mask)] < BIG_DIST).all()
+    for mode in ("ref", "interpret"):
+        out = np.asarray(KernelBackend(mode=mode).item_distances(
+            pp, sl, mask, qv, qq, db, vnorm))
+        np.testing.assert_array_equal(ref, out)
+
+
+# ---------------------------------------------------------------------------
+# Driver-level equivalence: search / search_sim / search_distributed
+# ---------------------------------------------------------------------------
+def _int_dataset(n=256, d=16, nq=4, seed=0):
+    rng = np.random.default_rng(seed)
+    db = rng.integers(-8, 9, size=(n, d)).astype(np.float32)
+    queries = rng.integers(-8, 9, size=(nq, d)).astype(np.float32)
+    adj, medoid = build_vamana(db, r=8, alpha=1.2, seed=seed)
+    return db, queries, adj, medoid
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return _int_dataset()
+
+
+def test_single_shard_search_equivalent_across_modes(ds):
+    db, queries, adj, medoid = ds
+    vnorm = (db.astype(np.float64) ** 2).sum(-1).astype(np.float32)
+    sp = SearchParams(L=8, W=2, k=5)
+    outs = {m: search(db, adj, vnorm, queries, medoid, sp, page_size=32,
+                      kernel_mode=m) for m in CHECK_MODES}
+    for m in CHECK_MODES[1:]:
+        for a, b in zip(outs["jnp"][:2], outs[m][:2]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(outs["jnp"][2]["rounds"]),
+            np.asarray(outs[m][2]["rounds"]))
+
+
+def _packed(ds, S=2, page=16, pref_width=4):
+    db, queries, adj, medoid = ds
+    geo = Geometry(num_shards=S, page_size=page, pages_per_block=2,
+                   dim=db.shape[1])
+    idx = LUNCSR.from_adjacency(db, adj, geo, entry=medoid,
+                                pref_width=pref_width)
+    return pack_index(idx, max_degree=8)
+
+
+def test_search_sim_equivalent_across_modes(ds):
+    db, queries, adj, medoid = ds
+    packed = _packed(ds)
+    consts, geom, entry = pack_for_engine(packed)
+    S = geom.num_shards
+    qsh = jnp.asarray(queries.reshape(S, -1, queries.shape[1]))
+    sp = SearchParams(L=8, W=2, k=5)
+    base = EngineParams.lossless(sp, qsh.shape[1], geom.max_degree,
+                                 spec_width=4)
+    outs = {}
+    for m in CHECK_MODES:
+        p = dataclasses.replace(base, kernel_mode=m)
+        i, dd, st = search_sim(consts, qsh, *entry, p, geom)
+        outs[m] = (np.asarray(i), np.asarray(dd), np.asarray(st["rounds"]))
+    for m in CHECK_MODES[1:]:
+        for a, b in zip(outs["jnp"], outs[m]):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_search_distributed_equivalent_across_modes(ds):
+    """shard_map driver on a 1-device mesh: kernel modes == inline jnp."""
+    from repro.core.engine import search_distributed
+    from repro.launch.mesh import make_engine_mesh
+
+    db, queries, adj, medoid = ds
+    packed = _packed(ds, S=1)
+    consts, geom, entry = pack_for_engine(packed)
+    qsh = jnp.asarray(queries[None])
+    sp = SearchParams(L=8, W=1, k=5)
+    base = EngineParams.lossless(sp, qsh.shape[1], geom.max_degree)
+    mesh = make_engine_mesh(num=1)
+    outs = {}
+    for m in ("jnp", "ref"):
+        p = dataclasses.replace(base, kernel_mode=m)
+        i, dd, st = search_distributed(consts, qsh, *entry, p, geom, mesh)
+        outs[m] = (np.asarray(i), np.asarray(dd), np.asarray(st["rounds"]))
+    for a, b in zip(outs["jnp"], outs["ref"]):
+        np.testing.assert_array_equal(a, b)

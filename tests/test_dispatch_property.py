@@ -2,7 +2,10 @@
 the shared dispatch machinery of the ANNS engine and the MoE layer."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.dispatch import (bucket_mask, compute_ranks, dispatch_stats,
                                  gather_from_buckets, scatter_to_buckets)

@@ -2,7 +2,10 @@
 for ANY shape/content, complementing the fixed-shape sweeps."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.distance import paged_distances, paged_distances_ref
 from repro.kernels.topk import bitonic_sort, bitonic_sort_ref

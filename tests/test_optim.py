@@ -3,7 +3,10 @@ int8 error-feedback compression properties (hypothesis)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.optim.adamw import OptConfig, apply_updates, init_opt
 from repro.optim.compress import (EFState, dequantize_int8, ef_compress,
