@@ -1,18 +1,30 @@
-"""Hot-kernel microbenchmark: distance + merge throughput per backend mode.
+"""Hot-kernel microbenchmark: distance + merge cost per backend mode.
 
-Times the two kernels the engine routes through core/backend.py —
+Three sections, all written to a machine-readable ``BENCH_kernels.json``
+so the perf trajectory is tracked across PRs:
 
-  * paged SiN distance: (T, QB, d) query tiles against a paged (NP, P, d)
-    store, page ids sorted (the dynamic-allocating fast path), and
-  * bitonic merge: lexicographic (dist, id) row sort with one payload
-    lane (the candidate-list merge shape: L + W*R wide).
+  * tile-level throughput of the two kernels the engine routes through
+    core/backend.py (paged SiN distance, bitonic merge with payload);
+  * the **duplicate-page sweep**: per-assignment distances at 1/4/16
+    assignments per page, per-item path (``coalesce_qb=0``, one grid
+    step = one assignment) vs the coalesced path (one grid step = one
+    page read serving up to qb assignments). Reports grid steps — the
+    modeled NAND page-read count — and throughput per mode;
+  * merge-vs-resort: the Gather stage's single bitonic merge pass over
+    two sorted lists vs re-sorting the whole row, with the comparator
+    stage counts of each network.
 
-Reported per mode so Fig. 15/18-style runs can be read against the raw
-kernel cost. ``interpret`` runs the Pallas kernel without a TPU and is
-expected to be slow — it is a correctness tier, not a speed tier.
+``--smoke`` runs a tiny sweep and *asserts* the coalescing invariants
+(grid steps scale with unique pages; >= 4x fewer steps than per-item at
+16 assignments/page; bit-identical distances) so CI fails loudly on a
+regression. ``interpret`` runs the Pallas kernels without a TPU and is a
+correctness tier, not a speed tier — it only joins small sweeps.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import math
 import time
 
 import jax
@@ -21,6 +33,10 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core.backend import MODES, KernelBackend
+from repro.kernels.distance.ops import coalesce_num_tiles
+from repro.utils import next_pow2
+
+INTERPRET_MAX_ITEMS = 256   # interpret unrolls the grid; keep it small
 
 
 def _time(fn, *args, repeats=3):
@@ -35,44 +51,30 @@ def _time(fn, *args, repeats=3):
     return best
 
 
-def run(quick: bool = False, kernel_mode: str = ""):
+def _modes(kernel_mode: str):
     if kernel_mode:
-        modes = [kernel_mode]
-    else:
-        modes = [m for m in MODES if m not in ("auto", "pallas")]
-        if jax.default_backend() == "tpu":
-            modes.append("pallas")
+        return [kernel_mode]
+    modes = [m for m in MODES if m not in ("auto", "pallas")]
+    if jax.default_backend() == "tpu":
+        modes.append("pallas")
+    return modes
 
+
+def _bench_distance_tiles(modes, T, QB, P, d, NP):
+    """Raw (T, QB, d) x paged-db throughput + sort rows (legacy section)."""
     rng = np.random.default_rng(0)
-    T, QB, P, d, NP = (64, 8, 64, 128, 16) if quick else (256, 8, 64, 128, 32)
     q = jnp.asarray(rng.standard_normal((T, QB, d)), jnp.float32)
     qq = jnp.sum(q * q, axis=-1)
     db = jnp.asarray(rng.standard_normal((NP, P, d)), jnp.float32)
     vnorm = jnp.sum(db * db, axis=-1)
     pids = jnp.sort(jnp.asarray(rng.integers(0, NP, T), jnp.int32))
-
-    B, M = (64, 128) if quick else (256, 512)    # merge rows: Q x (L + W*R)
-    md = jnp.asarray(rng.standard_normal((B, M)), jnp.float32)
-    mi = jnp.asarray(rng.integers(0, 2**20, (B, M)), jnp.int32)
-    me = jnp.asarray(rng.integers(0, 2, (B, M)), jnp.int32)
-
     rows = []
     for mode in modes:
         be = KernelBackend(mode=mode)
-        dist_f = jax.jit(be.paged_distance)
-        sort_f = jax.jit(be.sort_pairs)
-        t_dist = _time(dist_f, pids, q, qq, db, vnorm)
-        t_sort = _time(sort_f, md, mi, me)
-        rows.append([
-            mode if mode != "auto" else f"auto({be.resolved})",
-            round(t_dist * 1e3, 3),
-            round(T * QB * P / t_dist / 1e6, 1),
-            round(t_sort * 1e3, 3),
-            round(B * M / t_sort / 1e6, 1),
-        ])
-    emit(rows, ["mode", "distance_ms", "Mdist/s", "merge_ms", "Melem/s"],
-         f"kernel microbenchmark (T={T} QB={QB} P={P} d={d}; "
-         f"merge {B}x{M}+payload)")
+        t_dist = _time(jax.jit(be.paged_distance), pids, q, qq, db, vnorm)
+        rows.append({"mode": mode, "T": T, "QB": QB, "P": P, "d": d,
+                     "ms": round(t_dist * 1e3, 3),
+                     "Mdist_s": round(T * QB * P / t_dist / 1e6, 1)})
     # sanity: every mode computes the same math
     ref = KernelBackend(mode="ref")
     for mode in modes:
@@ -81,11 +83,207 @@ def run(quick: bool = False, kernel_mode: str = ""):
             np.asarray(be.paged_distance(pids, q, qq, db, vnorm)),
             np.asarray(ref.paged_distance(pids, q, qq, db, vnorm)),
             rtol=1e-5, atol=1e-4)
-        assert float(jnp.max(jnp.abs(
-            be.sort_pairs(md, mi, me)[0] - ref.sort_pairs(md, mi, me)[0]
-        ))) == 0.0
     return rows
 
 
+def _dup_workload(items, dup, P, d, seed=0):
+    """Integer-valued assignment workload with `dup` assignments/page."""
+    rng = np.random.default_rng(seed)
+    npages = max(1, items // dup)
+    pp = np.repeat(np.arange(npages, dtype=np.int32),
+                   -(-items // npages))[:items]
+    rng.shuffle(pp)
+    db = jnp.asarray(rng.integers(-8, 9, (npages, P, d)), jnp.float32)
+    return (jnp.asarray(pp), jnp.asarray(rng.integers(0, P, items), jnp.int32),
+            jnp.ones((items,), bool),
+            jnp.asarray(rng.integers(-8, 9, (items, d)), jnp.float32),
+            db, jnp.sum(db * db, axis=-1), npages)
+
+
+def _bench_dup_sweep(modes, items, P, d, qb):
+    """The tentpole measurement: grid steps + throughput vs page reuse."""
+    rows = []
+    cases = {}           # (dup, n_items) -> workload (+ jnp oracle output)
+    for dup in (1, 4, 16):
+        for mode in modes:
+            n = items
+            if mode == "interpret" and items > INTERPRET_MAX_ITEMS:
+                n = INTERPRET_MAX_ITEMS
+            if (dup, n) not in cases:
+                pp, sl, mask, qv, db, vnorm, npages = _dup_workload(
+                    n, dup, P, d)
+                qq = jnp.sum(qv * qv, axis=-1)
+                want = np.asarray(KernelBackend(mode="jnp").item_distances(
+                    pp, sl, mask, qv, qq, db, vnorm))
+                cases[(dup, n)] = ((pp, sl, mask, qv, qq, db, vnorm),
+                                   npages, want)
+            args, npages, want = cases[(dup, n)]
+            # inline jnp ignores the knob — one row instead of duplicates
+            for cqb in ((0,) if mode == "jnp" else (0, qb)):
+                be = KernelBackend(mode=mode, coalesce_qb=cqb)
+                steps = n if be.inline else be.distance_grid_steps(n, npages)
+                t = _time(jax.jit(be.item_distances), *args)
+                rows.append({
+                    "dup": dup, "mode": mode, "coalesce_qb": cqb,
+                    "items": n, "unique_pages": npages,
+                    "grid_steps": steps,
+                    "ms": round(t * 1e3, 3),
+                    "Mitems_s": round(n / t / 1e6, 2)})
+                got = np.asarray(be.item_distances(*args))
+                np.testing.assert_array_equal(got, want)
+    return rows
+
+
+def _merge_shapes(L, M):
+    """Static comparator work (row width x network stages) of the two
+    Gather-stage strategies: re-sort everything vs sort-M-then-merge."""
+    nf, nm = next_pow2(L + M), next_pow2(M)
+    s_full, s_prop = int(math.log2(nf)), int(math.log2(nm))
+    resort = nf * s_full * (s_full + 1) // 2
+    merge = nm * s_prop * (s_prop + 1) // 2 + nf * s_full
+    return {"resort_work": resort, "merge_work": merge,
+            "work_ratio": round(resort / merge, 2)}
+
+
+def _bench_merge(modes, B, L, M):
+    """Gather stage: single merge pass vs re-sorting sorted data."""
+    rng = np.random.default_rng(3)
+    cd = jnp.asarray(rng.integers(0, 50, (B, L)), jnp.float32)
+    ci = jnp.asarray(rng.permutation(B * L).reshape(B, L), jnp.int32)
+    cd, ci = jax.lax.sort((cd, ci), num_keys=2)
+    ce = jnp.zeros((B, L), bool)
+    nd = jnp.asarray(rng.integers(0, 50, (B, M)), jnp.float32)
+    ni = jnp.asarray(B * L + rng.permutation(B * M).reshape(B, M), jnp.int32)
+    ne = jnp.zeros((B, M), bool)
+    stages = _merge_shapes(L, M)
+    rows = []
+    for mode in modes:
+        be = KernelBackend(mode=mode)
+
+        def resort(cd, ci, ce, nd, ni, ne):
+            d = jnp.concatenate([cd, nd], axis=1)
+            i = jnp.concatenate([ci, ni], axis=1)
+            e = jnp.concatenate([ce, ne], axis=1)
+            return be.sort_pairs(d, i, e)
+
+        def merge(cd, ci, ce, nd, ni, ne):
+            sd, si = be.sort_pairs(nd, ni)
+            return be.merge_pairs(cd, ci, sd, si, pay_a=(ce,), pay_b=(ne,))
+
+        t_resort = _time(jax.jit(resort), cd, ci, ce, nd, ni, ne)
+        t_merge = _time(jax.jit(merge), cd, ci, ce, nd, ni, ne)
+        a = jax.jit(resort)(cd, ci, ce, nd, ni, ne)
+        b = jax.jit(merge)(cd, ci, ce, nd, ni, ne)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        rows.append({"mode": mode, "B": B, "L": L, "M": M,
+                     "resort_ms": round(t_resort * 1e3, 3),
+                     "merge_ms": round(t_merge * 1e3, 3),
+                     "speedup": round(t_resort / t_merge, 2),
+                     **({} if be.inline else stages)})
+    return rows
+
+
+def run(quick: bool = False, kernel_mode: str = "", smoke: bool = False,
+        coalesce_qb: int = 16, out_json: str = "BENCH_kernels.json"):
+    modes = _modes(kernel_mode)
+    if smoke:
+        modes = [m for m in modes if m != "interpret"] or modes
+        T, QB, P, d, NP = 16, 8, 32, 32, 8
+        items, B, L, M = 256, 16, 32, 64
+    elif quick:
+        T, QB, P, d, NP = 64, 8, 64, 128, 16
+        items, B, L, M = 1024, 64, 64, 128
+    else:
+        T, QB, P, d, NP = 256, 8, 64, 128, 32
+        items, B, L, M = 4096, 256, 128, 512
+
+    tiles = _bench_distance_tiles(modes, T, QB, P, d, NP)
+    sweep = _bench_dup_sweep(modes, items, P, d, coalesce_qb)
+    merge = _bench_merge(modes, B, L, M)
+
+    emit([[r["mode"], r["ms"], r["Mdist_s"]] for r in tiles],
+         ["mode", "distance_ms", "Mdist/s"],
+         f"paged SiN tiles (T={T} QB={QB} P={P} d={d})")
+    emit([[r["dup"], r["mode"], r["coalesce_qb"], r["grid_steps"],
+           r["ms"], r["Mitems_s"]] for r in sweep],
+         ["assignments/page", "mode", "qb", "grid_steps", "ms", "Mitems/s"],
+         f"duplicate-page sweep (items={items} P={P} d={d}; "
+         f"coalesce_qb={coalesce_qb})")
+    emit([[r["mode"], r["resort_ms"], r["merge_ms"], r["speedup"]]
+          for r in merge],
+         ["mode", "resort_ms", "merge_ms", "speedup"],
+         f"gather merge: re-sort vs bitonic merge pass ({B}x({L}+{M}); "
+         f"network stages {_merge_shapes(L, M)})")
+
+    # coalescing health numbers, reported in every run
+    kmodes = [m for m in modes if m != "jnp"]
+    checks = {}
+    if kmodes:
+        by = {(r["dup"], r["mode"], r["coalesce_qb"]): r for r in sweep}
+        m0 = "ref" if "ref" in kmodes else kmodes[0]
+        per_item = by[(16, m0, 0)]
+        coal = by[(16, m0, coalesce_qb)]
+        checks["grid_step_ratio_at_16"] = round(
+            per_item["grid_steps"] / coal["grid_steps"], 2)
+        checks["throughput_ratio_at_16"] = round(
+            coal["Mitems_s"] / per_item["Mitems_s"], 2)
+        checks["per_item_steps_at_16"] = per_item["grid_steps"]
+        checks["coal_steps_at_16"] = coal["grid_steps"]
+        checks["steps_by_dup"] = [
+            by[(f, m0, coalesce_qb)]["grid_steps"] for f in (1, 4, 16)]
+
+    results = {
+        "config": {"quick": quick, "smoke": smoke, "kernel_mode": kernel_mode,
+                   "coalesce_qb": coalesce_qb,
+                   "backend": jax.default_backend(),
+                   "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
+        "distance_tiles": tiles,
+        "dup_sweep": sweep,
+        "merge": merge,
+        "checks": checks,
+    }
+    if out_json:
+        # written before the smoke asserts so a regression still leaves
+        # the per-mode numbers behind for diagnosis
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[wrote {out_json}]")
+
+    if smoke:
+        # the CI regression gate — fail loudly if coalescing stops
+        # cutting grid steps. The required ratio scales with the tile
+        # width (a qb-wide tile can share at most qb assignments).
+        assert checks, ("--smoke verifies the kernel-mode coalescing "
+                        "invariants; run it with a kernel mode, not "
+                        "jnp-only")
+        steps = checks["steps_by_dup"]
+        assert steps[0] >= steps[1] >= steps[2], (
+            f"grid steps must scale with unique pages, got {steps}")
+        want = min(4.0, coalesce_qb / 4)
+        assert (checks["per_item_steps_at_16"]
+                >= want * checks["coal_steps_at_16"]), (
+            f"coalescing at 16 assignments/page must cut grid steps "
+            f">={want}x: {checks['per_item_steps_at_16']} vs "
+            f"{checks['coal_steps_at_16']}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep + hard asserts on the coalescing "
+                         "invariants (the CI regression gate)")
+    ap.add_argument("--kernel-mode", default="",
+                    choices=["", "auto", "pallas", "interpret", "ref", "jnp"])
+    ap.add_argument("--coalesce-qb", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, kernel_mode=args.kernel_mode, smoke=args.smoke,
+        coalesce_qb=args.coalesce_qb, out_json=args.out)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

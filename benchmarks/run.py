@@ -2,6 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run            # full
   PYTHONPATH=src python -m benchmarks.run --quick    # reduced sweep
+
+The kernel microbenchmark also writes machine-readable
+``BENCH_kernels.json`` (grid steps + throughput per mode) so the perf
+trajectory is tracked across PRs; ``python -m benchmarks.bench_kernels
+--smoke`` is the CI regression gate on the coalescing invariants.
 """
 from __future__ import annotations
 
@@ -19,6 +24,10 @@ def main(argv=None):
                     choices=["", "auto", "pallas", "interpret", "ref", "jnp"],
                     help="hot-path backend for benches that accept it "
                          "(A/B the inline jnp path vs the Pallas kernels)")
+    ap.add_argument("--coalesce-qb", type=int, default=None,
+                    help="kernel modes: per-page query-tile width for "
+                         "benches that accept it (0 = per-item path; "
+                         "omit for each bench's default)")
     args = ap.parse_args(argv)
 
     import inspect
@@ -44,9 +53,11 @@ def main(argv=None):
         if only and not any(s in name for s in only):
             continue
         kw = {}
-        if (args.kernel_mode
-                and "kernel_mode" in inspect.signature(fn).parameters):
+        fn_params = inspect.signature(fn).parameters
+        if args.kernel_mode and "kernel_mode" in fn_params:
             kw["kernel_mode"] = args.kernel_mode
+        if args.coalesce_qb is not None and "coalesce_qb" in fn_params:
+            kw["coalesce_qb"] = args.coalesce_qb
         t0 = time.time()
         try:
             fn(quick=args.quick, **kw)

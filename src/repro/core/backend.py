@@ -29,13 +29,20 @@ through a :class:`KernelBackend`, which owns
       - paged SiN distance  (kernels/distance) — one grid step = one NAND
         page read; assignments are regrouped by physical page first so
         consecutive steps hit the Pallas copy-elision fast path (the
-        paper's ``pageLocBit``).
-      - lexicographic bitonic sort (kernels/topk) — (dist, id) 2-key sort
-        with payload lanes, used for the candidate-list merge. Bool
+        paper's ``pageLocBit``). With ``coalesce_qb > 0`` the regrouped
+        assignments are further packed into per-page query tiles of
+        width ``coalesce_qb``: one page read serves up to that many
+        same-page assignments (the Allocator's two-level scheduling),
+        shrinking the grid from #assignments to
+        ``coalesce_num_tiles(...)`` steps.
+      - lexicographic bitonic sort + merge (kernels/topk) — (dist, id)
+        2-key networks with payload lanes, used for the candidate-list
+        merge. ``merge_pairs`` runs a single merge pass over two
+        already-sorted lists instead of re-sorting sorted data. Bool
         payloads (the ``expanded`` flags) are packed to i32 for the VPU.
 
 The dataclass is frozen + hashable so it can live inside jit-static
-arguments (EngineParams carries one as ``kernel_mode``).
+arguments (EngineParams carries one as ``kernel_mode``/``coalesce_qb``).
 """
 from __future__ import annotations
 
@@ -44,8 +51,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.distance.ops import paged_distance_op
-from repro.kernels.topk.ops import sort_op
+from repro.kernels.distance.ops import (coalesce_num_tiles,
+                                        coalesced_distance_op,
+                                        paged_distance_op)
+from repro.kernels.topk.ops import merge_sorted_op, sort_op
 from repro.kernels.topk.ref import bitonic_sort_ref
 from repro.utils import BIG_DIST, cdiv
 
@@ -68,14 +77,22 @@ class KernelBackend:
     mode         : see :data:`MODES`; resolved lazily so a config built on
                    the host applies to whatever backend jit runs on.
     sort_block_b : rows per Pallas grid step of the bitonic network.
+    coalesce_qb  : per-page query-tile width for ``item_distances``:
+                   up to this many same-page assignments share one page
+                   read. 0 keeps the per-item path (one grid step per
+                   assignment). Use a multiple of 8 on TPU (f32 sublane).
     """
 
     mode: str = "auto"
     sort_block_b: int = 1
+    coalesce_qb: int = 8
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"kernel mode {self.mode!r} not in {MODES}")
+        if self.coalesce_qb < 0:
+            raise ValueError(
+                f"coalesce_qb must be >= 0, got {self.coalesce_qb}")
 
     @property
     def resolved(self) -> str:
@@ -107,7 +124,44 @@ class KernelBackend:
         restored = tuple(o.astype(p.dtype) for o, p in zip(out[2:], payload))
         return (out[0], out[1]) + restored
 
+    def merge_pairs(self, d_a: jax.Array, i_a: jax.Array,
+                    d_b: jax.Array, i_b: jax.Array,
+                    pay_a: tuple = (), pay_b: tuple = ()):
+        """Merge two already (dist, id)-sorted row sets into sorted rows.
+
+        The Gather-stage fast path: a single bitonic merge pass
+        (O(n log n) comparators) over concat(A, reversed B) instead of
+        re-running the full sorting network on data that is already
+        sorted. Payload lanes pair up across the two sides (the
+        candidate list's ``expanded`` flags on the A side, zeros for the
+        fresh proposals on the B side). Same tie discipline as
+        :meth:`sort_pairs`: equal (dist, id) pairs carry equal payloads.
+        """
+        mode = self.resolved
+        if mode == "jnp":
+            cat = tuple(jnp.concatenate([a, b], axis=-1)
+                        for a, b in zip((d_a, i_a) + tuple(pay_a),
+                                        (d_b, i_b) + tuple(pay_b)))
+            return bitonic_sort_ref(*cat)
+        packed_a = tuple(p.astype(jnp.int32) if p.dtype == jnp.bool_ else p
+                         for p in pay_a)
+        packed_b = tuple(p.astype(jnp.int32) if p.dtype == jnp.bool_ else p
+                         for p in pay_b)
+        out = merge_sorted_op(d_a, i_a, d_b, i_b, pay_a=packed_a,
+                              pay_b=packed_b, mode=mode,
+                              block_b=self.sort_block_b)
+        restored = tuple(o.astype(p.dtype) for o, p in zip(out[2:], pay_a))
+        return (out[0], out[1]) + restored
+
     # -- distance -----------------------------------------------------------
+    def distance_grid_steps(self, items: int, npages: int) -> int:
+        """Static grid-step (page-read) count ``item_distances`` launches
+        in kernel modes for ``items`` assignments over ``npages`` pages —
+        the perf metric the duplicate-page benchmark sweeps."""
+        if self.coalesce_qb > 0:
+            return coalesce_num_tiles(items, npages, self.coalesce_qb)
+        return items
+
     def paged_distance(self, page_ids, queries, qq, db, vnorm) -> jax.Array:
         """(T, QB, d) query tiles x (NP, P, d) paged db -> (T, QB, P)."""
         mode = self.resolved
@@ -124,10 +178,16 @@ class KernelBackend:
         returns            : (I,) f32; masked items get BIG_DIST.
 
         Kernel modes regroup the assignments by physical page (the
-        Allocator's dynamic scheduling) and issue one (1, d) x (d, P)
-        page read per item through the paged kernel — consecutive items
-        on the same page reuse the page buffer via Pallas copy elision —
-        then pick each item's slot lane and undo the regrouping.
+        Allocator's dynamic scheduling), segment the regrouped stream
+        into per-page query tiles of width ``coalesce_qb``, and one
+        (qb, d) x (d, P) grid step serves the whole tile — one page read
+        for up to qb assignments (two-level scheduling). A direct
+        scatter of the original positions undoes the regrouping (one
+        sort total — no argsort-of-argsort inverse permutation).
+        ``coalesce_qb == 0`` is the per-item path: width-1 tiles, one
+        (1, d) x (d, P) page read per assignment — consecutive items on
+        the same page still reuse the page buffer via Pallas copy
+        elision.
         """
         if self.inline:
             v = db[ppage, slot].astype(jnp.float32)
@@ -135,19 +195,9 @@ class KernelBackend:
             qv = jnp.sum(qvec.astype(jnp.float32) * v, axis=-1)
             dist = qq - 2.0 * qv + vn
             return jnp.where(mask, dist, BIG_DIST)
-        npages = db.shape[0]
-        # masked items key after every real page so they tile together
-        key = jnp.where(mask, ppage, jnp.int32(npages))
-        order = jnp.argsort(key, stable=True)
-        inv = jnp.argsort(order, stable=True)
-        pids = jnp.clip(key[order], 0, npages - 1)
-        tiles = qvec[order][:, None, :]                    # (I, 1, d)
-        qqt = qq[order][:, None]                           # (I, 1)
-        out = self.paged_distance(pids, tiles, qqt, db, vnorm)  # (I, 1, P)
-        picked = jnp.take_along_axis(out[:, 0, :], slot[order][:, None],
-                                     axis=1)[:, 0]
-        dist = picked[inv]
-        return jnp.where(mask, dist, BIG_DIST)
+        return coalesced_distance_op(
+            ppage, slot, mask, qvec, qq, db, vnorm,
+            qb=max(1, self.coalesce_qb), mode=self.resolved)
 
 
 def paged_view(db: jax.Array, vnorm: jax.Array, page_size: int):

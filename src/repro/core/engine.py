@@ -117,10 +117,14 @@ class EngineParams:
     payload_bf16: bool = False      # halve a2a bytes: bf16 query payloads
     kernel_mode: str = "jnp"        # hot-path backend: auto|pallas|interpret
                                     # |ref|jnp (core/backend.py)
+    coalesce_qb: int = 8            # per-page query-tile width in kernel
+                                    # modes: one page read serves up to
+                                    # this many assignments (0 = per-item)
 
     @property
     def backend(self) -> KernelBackend:
-        return KernelBackend(mode=self.kernel_mode)
+        return KernelBackend(mode=self.kernel_mode,
+                             coalesce_qb=self.coalesce_qb)
 
     @staticmethod
     def lossless(search: SearchParams, queries_per_shard: int,

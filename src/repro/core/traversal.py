@@ -106,16 +106,32 @@ def merge_candidates(cand_d, cand_i, cand_e, new_d, new_i, new_valid, L: int,
                      backend: KernelBackend | None = None):
     """Merge proposals into the candidate list; keep best L by (dist, id).
 
-    The ``expanded`` flags travel through the 2-key sort as a payload
-    lane (kernel modes run the bitonic network with an extra operand)."""
+    The candidate list is always sorted (established at init, preserved
+    here), so kernel modes top-L-sort only the M fresh proposals and run
+    a single bitonic *merge* pass against the sorted list — the Gather
+    stage never re-sorts sorted data. Inline mode keeps the fused
+    concat + lax.sort. The ``expanded`` flags travel through as a
+    payload lane (zeros on the proposal side)."""
+    backend = backend or _JNP
     new_d = jnp.where(new_valid, new_d, BIG_DIST)
     new_i = jnp.where(new_valid, new_i, ID_SENTINEL)
     new_e = jnp.zeros(new_i.shape, dtype=bool)
-    d = jnp.concatenate([cand_d, new_d], axis=-1)
-    i = jnp.concatenate([cand_i, new_i], axis=-1)
-    e = jnp.concatenate([cand_e, new_e], axis=-1)
-    d, i, e = sort_by_dist_id(d, i, e, backend=backend)
-    return d[..., :L], i[..., :L], e[..., :L]
+    if backend.inline:
+        d = jnp.concatenate([cand_d, new_d], axis=-1)
+        i = jnp.concatenate([cand_i, new_i], axis=-1)
+        e = jnp.concatenate([cand_e, new_e], axis=-1)
+        d, i, e = sort_by_dist_id(d, i, e, backend=backend)
+        return d[..., :L], i[..., :L], e[..., :L]
+    lead = cand_d.shape[:-1]
+    lc, m = cand_d.shape[-1], new_d.shape[-1]
+    nd, ni = backend.sort_pairs(new_d.reshape(-1, m), new_i.reshape(-1, m))
+    d, i, e = backend.merge_pairs(
+        cand_d.reshape(-1, lc), cand_i.reshape(-1, lc), nd, ni,
+        pay_a=(cand_e.reshape(-1, lc),),
+        pay_b=(new_e.reshape(-1, m),))
+    return (d.reshape(lead + (lc + m,))[..., :L],
+            i.reshape(lead + (lc + m,))[..., :L],
+            e.reshape(lead + (lc + m,))[..., :L])
 
 
 def count_unique_pages(ids, valid, page_size: int):
@@ -170,10 +186,12 @@ def init_state(db, vnorm, queries, entry, params: SearchParams) -> TraversalStat
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("params", "page_size", "kernel_mode"))
+                   static_argnames=("params", "page_size", "kernel_mode",
+                                    "coalesce_qb"))
 def search(db: jax.Array, adj: jax.Array, vnorm: jax.Array,
            queries: jax.Array, entry, params: SearchParams,
-           page_size: int = 256, kernel_mode: str = "jnp"):
+           page_size: int = 256, kernel_mode: str = "jnp",
+           coalesce_qb: int = 8):
     """Batched best-first search on a single shard.
 
     db (N,d) f32 | adj (N,R) i32 INVALID-padded | vnorm (N,) f32 | queries
@@ -183,8 +201,10 @@ def search(db: jax.Array, adj: jax.Array, vnorm: jax.Array,
     paths: the default inline ``jnp`` path, or the SiN/bitonic kernels
     (``ref``/``interpret``/``pallas``/``auto``) on the page-granular view
     of ``db`` — identical results, proven bit-exact on integer vectors.
+    ``coalesce_qb`` sets the per-page query-tile width in kernel modes
+    (0 = one page read per assignment; see KernelBackend).
     """
-    backend = KernelBackend(mode=kernel_mode)
+    backend = KernelBackend(mode=kernel_mode, coalesce_qb=coalesce_qb)
     Q, d = queries.shape
     L, W, R = params.L, params.W, adj.shape[1]
     qq = jnp.sum(queries * queries, axis=-1)
@@ -206,7 +226,7 @@ def search(db: jax.Array, adj: jax.Array, vnorm: jax.Array,
         valid &= ~bloom_query(state.bloom, nbrs)
         # distance computation — the SiN kernel point. Inline mode is the
         # local gather + dot; kernel modes issue page reads on the paged
-        # view of db (one grid step per assignment, page-sorted).
+        # view of db (page-sorted, coalesced into per-page query tiles).
         safe = jnp.clip(nbrs, 0, n - 1)
         if backend.inline:
             dists = squared_dists(queries, qq, db[safe], vnorm[safe])

@@ -1,5 +1,8 @@
 from repro.kernels.distance.kernel import paged_distances
-from repro.kernels.distance.ops import paged_distance_op
+from repro.kernels.distance.ops import (coalesce_num_tiles,
+                                        coalesced_distance_op,
+                                        paged_distance_op)
 from repro.kernels.distance.ref import paged_distances_ref
 
-__all__ = ["paged_distances", "paged_distance_op", "paged_distances_ref"]
+__all__ = ["paged_distances", "paged_distance_op", "coalesce_num_tiles",
+           "coalesced_distance_op", "paged_distances_ref"]

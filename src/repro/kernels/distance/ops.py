@@ -1,11 +1,15 @@
-"""jit'd public wrapper for the SiN distance kernel.
+"""jit'd public wrappers for the SiN distance kernel.
 
 Pads tiles to hardware-aligned shapes, dispatches to the Pallas kernel on
 TPU and to the jnp oracle elsewhere (interpret mode available for tests).
-This is the dispatch point :mod:`repro.core.backend` routes the engine's
-phase-B distance stage through; callers that need per-assignment
-distances on physical pages should use
-``KernelBackend.item_distances`` rather than calling this directly.
+``paged_distance_op`` is the raw tile-level dispatch point;
+``coalesced_distance_op`` is the two-level-scheduled form the engine's
+phase-B distance stage routes through: it regroups per-assignment work by
+physical page and packs up to ``qb`` same-page assignments into one
+(qb, d) x (d, P) grid step, so one page read serves many assignments
+(the paper's Allocator batching same-page queries against the LUN page
+buffer). Callers should normally go through
+``KernelBackend.item_distances`` rather than calling these directly.
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels.distance.kernel import paged_distances
 from repro.kernels.distance.ref import paged_distances_ref
-from repro.utils import round_up
+from repro.utils import BIG_DIST, round_up
 
 LANE = 128      # TPU minor-dim tile
 SUBLANE = 8     # f32 second-minor tile
@@ -34,6 +38,65 @@ def paged_distance_op(page_ids: jax.Array, queries: jax.Array,
         return paged_distances_ref(page_ids, queries, qq, db, vnorm)
     return paged_distances(page_ids, queries, qq, db, vnorm,
                            interpret=(mode == "interpret"))
+
+
+def coalesce_num_tiles(items: int, npages: int, qb: int) -> int:
+    """Static (page, tile) grid-step bound after coalescing ``items``
+    assignments into per-page query tiles of width ``qb``.
+
+    Each page key contributes ``ceil(c_p / qb)`` tiles, which summed over
+    pages is at most ``floor(items/qb)`` full tiles plus one partial tile
+    per distinct key; the masked-item sentinel adds one more key. Every
+    tile holds at least one assignment, so the count never exceeds
+    ``items`` (the per-item path's grid).
+    """
+    if qb <= 0:
+        raise ValueError(f"qb must be positive, got {qb}")
+    return max(1, min(items, items // qb + min(npages + 1, items)))
+
+
+def coalesced_distance_op(ppage: jax.Array, slot: jax.Array,
+                          mask: jax.Array, qvec: jax.Array, qq: jax.Array,
+                          db: jax.Array, vnorm: jax.Array,
+                          qb: int, mode: str = "auto") -> jax.Array:
+    """Per-assignment distances with one page read per up-to-``qb`` group.
+
+    ppage/slot/mask/qq : (I,) physical page, slot-in-page, validity,
+                         per-assignment query self-dot
+    qvec               : (I, d) per-assignment query payload
+    db, vnorm          : (NP, P, d), (NP, P) shard-resident paged store
+    returns            : (I,) f32; masked assignments get BIG_DIST.
+
+    Two-level scheduling: assignments sort by physical page (masked ones
+    key after every real page), each page's run is segmented into tiles
+    of static width ``qb``, and one (qb, d) x (d, P) grid step serves the
+    whole tile — so the grid is ``coalesce_num_tiles(I, NP, qb)`` steps
+    instead of I. A scatter of the original positions undoes the
+    regrouping on the way out.
+    """
+    items, d = qvec.shape
+    npages = db.shape[0]
+    T = coalesce_num_tiles(items, npages, qb)
+    key = jnp.where(mask, ppage, jnp.int32(npages))
+    order = jnp.argsort(key, stable=True)
+    key_s = key[order]
+    idx = jnp.arange(items, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), key_s[1:] != key_s[:-1]])
+    run_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    rank_in_page = idx - run_start
+    tile_id = jnp.cumsum((rank_in_page % qb == 0).astype(jnp.int32)) - 1
+    lane = rank_in_page % qb
+    # pack the sorted assignments into (T, qb) tiles; empty trailing
+    # tiles keep page 0 so consecutive grid steps elide the fetch
+    q_t = jnp.zeros((T, qb, d), qvec.dtype).at[tile_id, lane].set(qvec[order])
+    qq_t = jnp.zeros((T, qb), qq.dtype).at[tile_id, lane].set(qq[order])
+    pid_t = jnp.zeros((T,), jnp.int32).at[tile_id].max(key_s)
+    pid_t = jnp.clip(pid_t, 0, npages - 1)
+    out = paged_distance_op(pid_t, q_t, qq_t, db, vnorm, mode=mode)
+    picked = out[tile_id, lane, slot[order]]                 # (I,)
+    dist = jnp.zeros((items,), jnp.float32).at[order].set(picked)
+    return jnp.where(mask, dist, BIG_DIST)
 
 
 def pad_tiles(queries: jax.Array, qq: jax.Array, qb: int = 16):

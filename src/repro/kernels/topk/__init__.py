@@ -1,5 +1,7 @@
-from repro.kernels.topk.kernel import bitonic_sort
-from repro.kernels.topk.ops import sort_op, topk_op
-from repro.kernels.topk.ref import bitonic_sort_ref, topk_ref
+from repro.kernels.topk.kernel import bitonic_merge, bitonic_sort
+from repro.kernels.topk.ops import merge_sorted_op, sort_op, topk_op
+from repro.kernels.topk.ref import (bitonic_merge_ref, bitonic_sort_ref,
+                                    topk_ref)
 
-__all__ = ["bitonic_sort", "sort_op", "topk_op", "bitonic_sort_ref", "topk_ref"]
+__all__ = ["bitonic_merge", "bitonic_sort", "merge_sorted_op", "sort_op",
+           "topk_op", "bitonic_merge_ref", "bitonic_sort_ref", "topk_ref"]

@@ -69,6 +69,51 @@ def _bitonic_body(*refs):
         r[...] = p
 
 
+def merge_network(d, i, pay):
+    """The final merge pass alone: sorts any *bitonic* row ascending.
+
+    With k = log2(m), bit k is never set inside a row, so every
+    compare-exchange runs ascending — exactly the last k-loop iteration
+    of ``_bitonic_body``: log2(m) stages instead of the full network's
+    log2(m)*(log2(m)+1)/2. Pure jnp, shared by the Pallas body and the
+    ref oracle so both tiers run the same comparator count.
+    """
+    m = d.shape[-1]
+    stages = int(math.log2(m))
+    for j in range(stages - 1, -1, -1):
+        d, i, pay = _cmp_exchange(d, i, pay, j, stages)
+    return d, i, pay
+
+
+def _merge_body(*refs):
+    n = len(refs) // 2
+    ins, outs = refs[:n], refs[n:]
+    d, i, pay = merge_network(ins[0][...], ins[1][...],
+                              tuple(r[...] for r in ins[2:]))
+    outs[0][...] = d
+    outs[1][...] = i
+    for r, p in zip(outs[2:], pay):
+        r[...] = p
+
+
+def _launch_rows(body, dists, ids, payload, interpret: bool, block_b: int):
+    B, M = dists.shape
+    assert M & (M - 1) == 0, f"M={M} must be a power of two"
+    assert B % block_b == 0, (B, block_b)
+    operands = (dists, ids) + payload
+    grid = (B // block_b,)
+    spec = pl.BlockSpec((block_b, M), lambda b: (b, 0))
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[spec] * len(operands),
+        out_specs=[spec] * len(operands),
+        out_shape=[jax.ShapeDtypeStruct((B, M), x.dtype) for x in operands],
+        interpret=interpret,
+    )(*operands)
+    return tuple(out) if payload else (out[0], out[1])
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
 def bitonic_sort(dists: jax.Array, ids: jax.Array, *payload: jax.Array,
                  interpret: bool = True, block_b: int = 8):
@@ -77,18 +122,20 @@ def bitonic_sort(dists: jax.Array, ids: jax.Array, *payload: jax.Array,
     dists: (B, M) f32, ids: (B, M) i32, M a power of two, B % block_b == 0.
     Extra ``payload`` arrays (same shape) are permuted alongside the keys.
     """
-    B, M = dists.shape
-    assert M & (M - 1) == 0, f"M={M} must be a power of two"
-    assert B % block_b == 0, (B, block_b)
-    operands = (dists, ids) + payload
-    grid = (B // block_b,)
-    spec = pl.BlockSpec((block_b, M), lambda b: (b, 0))
-    out = pl.pallas_call(
-        _bitonic_body,
-        grid=grid,
-        in_specs=[spec] * len(operands),
-        out_specs=[spec] * len(operands),
-        out_shape=[jax.ShapeDtypeStruct((B, M), x.dtype) for x in operands],
-        interpret=interpret,
-    )(*operands)
-    return tuple(out) if payload else (out[0], out[1])
+    return _launch_rows(_bitonic_body, dists, ids, payload, interpret,
+                        block_b)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def bitonic_merge(dists: jax.Array, ids: jax.Array, *payload: jax.Array,
+                  interpret: bool = True, block_b: int = 8):
+    """Single merge pass over rows that are already *bitonic* in
+    lexicographic (dist, id) order (ascending run then descending run).
+
+    Same shapes/contract as :func:`bitonic_sort`, but only the final
+    log2(M) compare-exchange stages run — O(M log M) comparators instead
+    of the full network's O(M log^2 M). The caller (kernels.topk.ops.
+    ``merge_sorted_op``) builds the bitonic row from two sorted lists.
+    """
+    return _launch_rows(_merge_body, dists, ids, payload, interpret,
+                        block_b)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the bitonic sort/top-k kernel."""
+"""Pure-jnp oracle for the bitonic sort/top-k/merge kernels."""
 from __future__ import annotations
 
 import jax
@@ -19,3 +19,18 @@ def bitonic_sort_ref(dists: jax.Array, ids: jax.Array, *payload: jax.Array):
 def topk_ref(dists: jax.Array, ids: jax.Array, k: int):
     d, i = bitonic_sort_ref(dists, ids)
     return d[..., :k], i[..., :k]
+
+
+@jax.jit
+def bitonic_merge_ref(dists: jax.Array, ids: jax.Array,
+                      *payload: jax.Array):
+    """jnp oracle for the single merge pass over a bitonic row.
+
+    Runs the same vectorized log2(M)-stage compare-exchange network as
+    the Pallas kernel (outside Pallas), keeping ref's cost model faithful
+    — a full ``lax.sort`` would produce the identical result (ties carry
+    equal payloads by the engine's invariant, so the sorted output is
+    unique) but would re-sort sorted data."""
+    from repro.kernels.topk.kernel import merge_network  # pure-jnp helper
+    d, i, pay = merge_network(dists, ids, payload)
+    return (d, i) + tuple(pay) if payload else (d, i)

@@ -58,6 +58,10 @@ def main(argv=None):
                     choices=["auto", "pallas", "interpret", "ref", "jnp"],
                     help="hot-path backend: inline jnp vs the SiN/bitonic "
                          "kernels (auto = pallas on TPU, ref elsewhere)")
+    ap.add_argument("--coalesce-qb", type=int, default=8,
+                    help="per-page query-tile width in kernel modes: one "
+                         "page read serves up to this many assignments "
+                         "(0 = one page read per assignment)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
@@ -84,7 +88,8 @@ def main(argv=None):
     sp = SearchParams(L=args.L, W=args.W, k=args.k)
     params = EngineParams.lossless(
         sp, -(-args.queries // args.shards), args.degree,
-        spec_width=args.spec, kernel_mode=args.kernel_mode)
+        spec_width=args.spec, kernel_mode=args.kernel_mode,
+        coalesce_qb=args.coalesce_qb)
     S = args.shards
     qs = args.queries - args.queries % S or S
     qsh = jnp.asarray(queries[:qs].reshape(S, qs // S, -1))
@@ -97,6 +102,7 @@ def main(argv=None):
     rec = recall_at_k(ids, true_ids)
     res = {
         "dataset": ds.name, "kernel_mode": args.kernel_mode,
+        "coalesce_qb": args.coalesce_qb,
         "n": int(db.shape[0]), "queries": qs,
         "recall@k": round(float(rec), 4), "qps": round(qs / dt, 1),
         "rounds": int(np.asarray(stats["total_rounds"]).max()),

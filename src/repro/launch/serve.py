@@ -37,14 +37,16 @@ def greedy_generate(params, cfg, tokens, *, gen: int, opts,
 
 
 def soft_prompt_from_retrieval(cfg, queries: np.ndarray, k: int = 4,
-                               seed: int = 0, kernel_mode: str = "jnp"):
+                               seed: int = 0, kernel_mode: str = "jnp",
+                               coalesce_qb: int = 8):
     """Two-stage pipeline: NDSearch retrieval -> soft-prompt embeddings.
 
     Builds a small vector index, retrieves top-k neighbors of each query
     embedding with the distributed engine (single-shard sim here), and
     projects them into the model's embedding space. ``kernel_mode``
     selects the retrieval hot-path backend (core/backend.py): inline jnp
-    or the paged SiN distance + bitonic merge kernels."""
+    or the paged SiN distance + bitonic merge kernels; ``coalesce_qb``
+    is the kernel modes' per-page query-tile width."""
     from repro.core.engine import EngineParams, pack_for_engine, search_sim
     from repro.core.luncsr import Geometry, LUNCSR, pack_index
     from repro.core.graph import build_vamana
@@ -60,7 +62,8 @@ def soft_prompt_from_retrieval(cfg, queries: np.ndarray, k: int = 4,
     packed = pack_index(idx, max_degree=16)
     consts, egeom, entry = pack_for_engine(packed)
     sp = SearchParams(L=16, W=1, k=k)
-    params = EngineParams.lossless(sp, B, 16, kernel_mode=kernel_mode)
+    params = EngineParams.lossless(sp, B, 16, kernel_mode=kernel_mode,
+                                   coalesce_qb=coalesce_qb)
     ids, dists, _ = search_sim(
         consts, jnp.asarray(queries, jnp.float32)[None], *entry, params,
         egeom)
@@ -81,6 +84,9 @@ def main(argv=None):
     ap.add_argument("--kernel-mode", default="jnp",
                     choices=["auto", "pallas", "interpret", "ref", "jnp"],
                     help="retrieval hot-path backend (core/backend.py)")
+    ap.add_argument("--coalesce-qb", type=int, default=8,
+                    help="kernel modes: per-page query-tile width for the "
+                         "retrieval distance stage (0 = per-item)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -104,22 +110,21 @@ def main(argv=None):
         enc_len = args.prompt_len
     elif args.rag:
         q = np.asarray(jax.random.normal(key, (args.batch, 32)))
+        # the soft prompt can't be wider than the prompt it overwrites
         vecs, ids, dists = soft_prompt_from_retrieval(
-            cfg, q, kernel_mode=args.kernel_mode)
+            cfg, q, k=max(1, min(4, args.prompt_len)),
+            kernel_mode=args.kernel_mode, coalesce_qb=args.coalesce_qb)
         print("retrieved neighbor ids:", ids[:, :4].tolist())
         proj = np.asarray(jax.random.normal(
             jax.random.PRNGKey(7), (vecs.shape[-1], cfg.d_model))) * 0.02
+        # soft prompt: the projected neighbor embeddings occupy the first
+        # k prompt positions (decoder-only families included — prefill
+        # overwrites the token embeddings for every non-encdec family)
         fe = jnp.asarray(vecs @ proj)                     # (B, k, d_model)
-        if cfg.family != "vlm":
-            # prepend as soft prompt: overwrite the first k embeddings
-            cfg_family_note = "soft prompt occupies the first k positions"
-            del cfg_family_note
 
     t0 = time.time()
     out = greedy_generate(params, cfg, tokens, gen=args.gen, opts=opts,
-                          frontend_embeds=fe if cfg.family in ("vlm",
-                                                               "encdec")
-                          else None, enc_len=enc_len)
+                          frontend_embeds=fe, enc_len=enc_len)
     dt = time.time() - t0
     out = np.asarray(out)
     print(f"generated {out.shape} tokens in {dt:.2f}s "

@@ -227,13 +227,15 @@ def forward_hidden(params, cfg: ArchConfig, tokens, *, rules=None,
                    opts: ModelOpts = ModelOpts(), frontend_embeds=None):
     """tokens (B,S) -> (hidden (B,S,d) final-normed, aux dict).
 
-    frontend_embeds: vlm -> (B,F,d) patch embeddings overwriting the prompt
-    prefix; encdec -> (B,Se,d) encoder input (audio frames). Both arrive
-    precomputed (the modality frontend is a stub per the assignment).
+    frontend_embeds: decoder-only/vlm -> (B,F,d) embeddings (patch
+    embeddings or retrieved soft prompts) overwriting the first F prompt
+    positions; encdec -> (B,Se,d) encoder input (audio frames). All
+    arrive precomputed (the modality frontend is a stub per the
+    assignment).
     """
     B, Sq = tokens.shape
     x = embed(params["tok"], tokens).astype(opts.act_dtype)
-    if cfg.family == "vlm" and frontend_embeds is not None:
+    if cfg.family != "encdec" and frontend_embeds is not None:
         fe = frontend_embeds.astype(x.dtype)
         x = jax.lax.dynamic_update_slice(x, fe, (0, 0, 0))
     positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
@@ -472,7 +474,7 @@ def prefill(params, cfg: ArchConfig, tokens, cache, *, rules=None,
     positions are absolute)."""
     B, Sq = tokens.shape
     x = embed(params["tok"], tokens).astype(opts.act_dtype)
-    if cfg.family == "vlm" and frontend_embeds is not None:
+    if cfg.family != "encdec" and frontend_embeds is not None:
         x = jax.lax.dynamic_update_slice(
             x, frontend_embeds.astype(x.dtype), (0, 0, 0))
     positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))

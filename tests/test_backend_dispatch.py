@@ -5,7 +5,9 @@ and end-to-end equivalence of the kernel modes across all three drivers
 Equivalence is asserted bit-exactly on integer-valued vectors: the
 inline-jnp path (the pre-backend implementation), the kernels' jnp
 oracles (``ref``) and the Pallas kernels in interpret mode must agree to
-the last bit.
+the last bit — including the two-level-scheduled paths (coalesced
+per-page query tiles at every ``coalesce_qb``, and the Gather stage's
+single bitonic merge pass over already-sorted lists).
 """
 import dataclasses
 
@@ -21,7 +23,7 @@ from repro.core.graph import build_vamana
 from repro.core.luncsr import Geometry, LUNCSR, pack_index
 from repro.core.ref_search import SearchParams
 from repro.core.traversal import ID_SENTINEL, search
-from repro.kernels.distance.ops import pad_tiles
+from repro.kernels.distance.ops import coalesce_num_tiles, pad_tiles
 from repro.kernels.topk.ops import sort_op
 from repro.utils import BIG_DIST, next_pow2
 
@@ -123,16 +125,27 @@ def test_sort_pairs_payload_lane_matches_across_modes():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_item_distances_matches_across_modes():
-    rng = np.random.default_rng(1)
-    npages, p, d, items = 6, 8, 16, 40
+def _item_case(npages=6, p=8, d=16, items=40, seed=1, ragged=False):
+    rng = np.random.default_rng(seed)
     db = jnp.asarray(rng.integers(-8, 9, (npages, p, d)), jnp.float32)
     vnorm = jnp.sum(db * db, axis=-1)
-    pp = jnp.asarray(rng.integers(0, npages, items), jnp.int32)
+    if ragged:
+        # wildly uneven assignments-per-page: 1, a few, most-of-the-rest
+        counts = [1, 3, items - 4 - 7, 7]
+        pp = np.repeat(np.arange(4, dtype=np.int32), counts)
+        rng.shuffle(pp)
+        pp = jnp.asarray(pp)
+    else:
+        pp = jnp.asarray(rng.integers(0, npages, items), jnp.int32)
     sl = jnp.asarray(rng.integers(0, p, items), jnp.int32)
     mask = jnp.asarray(rng.integers(0, 2, items), bool)
     qv = jnp.asarray(rng.integers(-8, 9, (items, d)), jnp.float32)
     qq = jnp.sum(qv * qv, axis=-1)
+    return pp, sl, mask, qv, qq, db, vnorm
+
+
+def test_item_distances_matches_across_modes():
+    pp, sl, mask, qv, qq, db, vnorm = _item_case()
     ref = np.asarray(KernelBackend(mode="jnp").item_distances(
         pp, sl, mask, qv, qq, db, vnorm))
     assert (ref[np.asarray(mask)] < BIG_DIST).all()
@@ -140,6 +153,90 @@ def test_item_distances_matches_across_modes():
         out = np.asarray(KernelBackend(mode=mode).item_distances(
             pp, sl, mask, qv, qq, db, vnorm))
         np.testing.assert_array_equal(ref, out)
+
+
+@pytest.mark.parametrize("ragged", [False, True])
+@pytest.mark.parametrize("qb", [0, 1, 3, 8, 64])
+def test_item_distances_coalesced_matches_jnp(qb, ragged):
+    """One page read serving up to qb assignments is bit-identical to the
+    per-item and inline paths, including ragged per-page counts."""
+    pp, sl, mask, qv, qq, db, vnorm = _item_case(ragged=ragged, seed=7)
+    ref = np.asarray(KernelBackend(mode="jnp").item_distances(
+        pp, sl, mask, qv, qq, db, vnorm))
+    for mode in ("ref", "interpret"):
+        be = KernelBackend(mode=mode, coalesce_qb=qb)
+        out = np.asarray(be.item_distances(pp, sl, mask, qv, qq, db, vnorm))
+        np.testing.assert_array_equal(ref, out)
+
+
+def test_item_distances_all_masked_tiles():
+    pp, sl, _, qv, qq, db, vnorm = _item_case(seed=11)
+    mask = jnp.zeros(pp.shape, bool)
+    for mode in ("jnp", "ref", "interpret"):
+        out = np.asarray(KernelBackend(mode=mode, coalesce_qb=4)
+                         .item_distances(pp, sl, mask, qv, qq, db, vnorm))
+        np.testing.assert_array_equal(out, np.float32(BIG_DIST))
+
+
+def test_coalesce_num_tiles_bounds():
+    # never more grid steps than assignments
+    for items, npages, qb in [(1, 1, 1), (40, 6, 3), (1024, 64, 16),
+                              (7, 100, 16), (256, 2, 8)]:
+        t = coalesce_num_tiles(items, npages, qb)
+        assert 1 <= t <= items
+    # and the sweep's headline claim: 16 assignments/page at qb=16 cuts
+    # the grid by >= 4x
+    items, npages = 1024, 64
+    assert coalesce_num_tiles(items, npages, 16) * 4 <= items
+    with pytest.raises(ValueError):
+        coalesce_num_tiles(8, 2, 0)
+
+
+@pytest.mark.parametrize("la,lb", [(8, 8), (11, 7), (5, 16), (1, 1)])
+def test_merge_pairs_matches_full_sort(la, lb):
+    """merge(sorted, sorted) == full sort of the concatenation, for
+    non-power-of-two widths too, payload lane included."""
+    rng = np.random.default_rng(la * 100 + lb)
+    B = 5
+    da, ia = jax.lax.sort(
+        (jnp.asarray(rng.integers(0, 6, (B, la)), jnp.float32),
+         jnp.asarray(rng.permutation(B * la).reshape(B, la), jnp.int32)),
+        num_keys=2)
+    db_, ib = jax.lax.sort(
+        (jnp.asarray(rng.integers(0, 6, (B, lb)), jnp.float32),
+         jnp.asarray(B * la + rng.permutation(B * lb).reshape(B, lb),
+                     jnp.int32)), num_keys=2)
+    ea = jnp.asarray(rng.integers(0, 2, (B, la)), bool)
+    eb = jnp.zeros((B, lb), bool)
+    want = jax.lax.sort(
+        (jnp.concatenate([da, db_], 1), jnp.concatenate([ia, ib], 1),
+         jnp.concatenate([ea, eb], 1)), num_keys=2)
+    for mode in ("jnp", "ref", "interpret"):
+        got = KernelBackend(mode=mode).merge_pairs(
+            da, ia, db_, ib, pay_a=(ea,), pay_b=(eb,))
+        assert got[2].dtype == jnp.bool_
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_merge_pairs_with_sentinel_padding_rows():
+    """Candidate lists full of (BIG_DIST, ID_SENTINEL) slots merge
+    cleanly — the padding never displaces a real entry."""
+    B, la, lb = 3, 6, 3
+    da = jnp.full((B, la), BIG_DIST, jnp.float32).at[:, 0].set(1.0)
+    ia = jnp.full((B, la), ID_SENTINEL, jnp.int32).at[:, 0].set(5)
+    ea = jnp.zeros((B, la), bool).at[:, 0].set(True)
+    db_ = jnp.asarray([[0.0, 2.0, BIG_DIST]] * B, jnp.float32)
+    ib = jnp.asarray([[9, 10, int(ID_SENTINEL)]] * B, jnp.int32)
+    eb = jnp.zeros((B, lb), bool)
+    want = jax.lax.sort(
+        (jnp.concatenate([da, db_], 1), jnp.concatenate([ia, ib], 1),
+         jnp.concatenate([ea, eb], 1)), num_keys=2)
+    for mode in ("jnp", "ref", "interpret"):
+        got = KernelBackend(mode=mode).merge_pairs(
+            da, ia, db_, ib, pay_a=(ea,), pay_b=(eb,))
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
 # ---------------------------------------------------------------------------
@@ -158,12 +255,13 @@ def ds():
     return _int_dataset()
 
 
-def test_single_shard_search_equivalent_across_modes(ds):
+@pytest.mark.parametrize("qb", [0, 3, 8])
+def test_single_shard_search_equivalent_across_modes(ds, qb):
     db, queries, adj, medoid = ds
     vnorm = (db.astype(np.float64) ** 2).sum(-1).astype(np.float32)
     sp = SearchParams(L=8, W=2, k=5)
     outs = {m: search(db, adj, vnorm, queries, medoid, sp, page_size=32,
-                      kernel_mode=m) for m in CHECK_MODES}
+                      kernel_mode=m, coalesce_qb=qb) for m in CHECK_MODES}
     for m in CHECK_MODES[1:]:
         for a, b in zip(outs["jnp"][:2], outs[m][:2]):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -181,7 +279,8 @@ def _packed(ds, S=2, page=16, pref_width=4):
     return pack_index(idx, max_degree=8)
 
 
-def test_search_sim_equivalent_across_modes(ds):
+@pytest.mark.parametrize("qb", [0, 8])
+def test_search_sim_equivalent_across_modes(ds, qb):
     db, queries, adj, medoid = ds
     packed = _packed(ds)
     consts, geom, entry = pack_for_engine(packed)
@@ -192,7 +291,7 @@ def test_search_sim_equivalent_across_modes(ds):
                                  spec_width=4)
     outs = {}
     for m in CHECK_MODES:
-        p = dataclasses.replace(base, kernel_mode=m)
+        p = dataclasses.replace(base, kernel_mode=m, coalesce_qb=qb)
         i, dd, st = search_sim(consts, qsh, *entry, p, geom)
         outs[m] = (np.asarray(i), np.asarray(dd), np.asarray(st["rounds"]))
     for m in CHECK_MODES[1:]:

@@ -8,7 +8,7 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels.distance import paged_distances, paged_distances_ref
-from repro.kernels.topk import bitonic_sort, bitonic_sort_ref
+from repro.kernels.topk import bitonic_sort, bitonic_sort_ref, merge_sorted_op
 from repro.utils import bloom_insert, bloom_query
 
 
@@ -66,6 +66,40 @@ def test_distance_nonnegative_and_matches_ref(case):
     ref = np.asarray(paged_distances_ref(pid, q, qq, db, vnorm))
     np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
     assert (out > -1e-3).all()          # squared distances (fp error only)
+
+
+@st.composite
+def merge_case(draw):
+    b = draw(st.integers(1, 4))
+    la = draw(st.integers(1, 40))
+    lb = draw(st.integers(1, 40))
+    rng = np.random.default_rng(draw(st.integers(0, 2**16)))
+    da = np.sort(rng.standard_normal((b, la)).astype(np.float32), axis=1)
+    dbb = np.sort(rng.standard_normal((b, lb)).astype(np.float32), axis=1)
+    ia = np.sort(rng.choice(2**20, size=(b, la), replace=False), axis=1)
+    ib = np.sort(2**20 + rng.choice(2**20, size=(b, lb), replace=False),
+                 axis=1)
+    return da, ia.astype(np.int32), dbb, ib.astype(np.int32)
+
+
+@given(merge_case())
+@settings(max_examples=25, deadline=None)
+def test_merge_of_sorted_lists_is_full_sort(case):
+    """The merge invariant: a single bitonic merge pass over two
+    already-sorted lists equals a full sort of their concatenation —
+    for ANY widths (power-of-two or not) and any contents."""
+    import jax
+
+    da, ia, dbb, ib = case
+    # rows must be (dist, id) lex-sorted, not just dist-sorted
+    da, ia = jax.lax.sort((jnp.asarray(da), jnp.asarray(ia)), num_keys=2)
+    dbb, ib = jax.lax.sort((jnp.asarray(dbb), jnp.asarray(ib)), num_keys=2)
+    want = jax.lax.sort((jnp.concatenate([da, dbb], axis=1),
+                         jnp.concatenate([ia, ib], axis=1)), num_keys=2)
+    for mode in ("ref", "interpret"):
+        got = merge_sorted_op(da, ia, dbb, ib, mode=mode)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
 @given(st.lists(st.integers(0, 2**30), min_size=1, max_size=64),
