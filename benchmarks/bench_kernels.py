@@ -122,11 +122,13 @@ def _bench_dup_sweep(modes, items, P, d, qb):
             for cqb in ((0,) if mode == "jnp" else (0, qb)):
                 be = KernelBackend(mode=mode, coalesce_qb=cqb)
                 steps = n if be.inline else be.distance_grid_steps(n, npages)
+                occ = 1.0 if be.inline else be.coalesce_occupancy(n, npages)
                 t = _time(jax.jit(be.item_distances), *args)
                 rows.append({
                     "dup": dup, "mode": mode, "coalesce_qb": cqb,
                     "items": n, "unique_pages": npages,
                     "grid_steps": steps,
+                    "coalesce_occupancy": round(occ, 3),
                     "ms": round(t * 1e3, 3),
                     "Mitems_s": round(n / t / 1e6, 2)})
                 got = np.asarray(be.item_distances(*args))
@@ -206,8 +208,9 @@ def run(quick: bool = False, kernel_mode: str = "", smoke: bool = False,
          ["mode", "distance_ms", "Mdist/s"],
          f"paged SiN tiles (T={T} QB={QB} P={P} d={d})")
     emit([[r["dup"], r["mode"], r["coalesce_qb"], r["grid_steps"],
-           r["ms"], r["Mitems_s"]] for r in sweep],
-         ["assignments/page", "mode", "qb", "grid_steps", "ms", "Mitems/s"],
+           r["coalesce_occupancy"], r["ms"], r["Mitems_s"]] for r in sweep],
+         ["assignments/page", "mode", "qb", "grid_steps", "occupancy",
+          "ms", "Mitems/s"],
          f"duplicate-page sweep (items={items} P={P} d={d}; "
          f"coalesce_qb={coalesce_qb})")
     emit([[r["mode"], r["resort_ms"], r["merge_ms"], r["speedup"]]
@@ -232,6 +235,11 @@ def run(quick: bool = False, kernel_mode: str = "", smoke: bool = False,
         checks["coal_steps_at_16"] = coal["grid_steps"]
         checks["steps_by_dup"] = [
             by[(f, m0, coalesce_qb)]["grid_steps"] for f in (1, 4, 16)]
+        # tile-lane occupancy of the coalesced path per reuse level —
+        # the ROADMAP two-pass-packing lever's measured baseline
+        checks["coalesce_occupancy_by_dup"] = [
+            by[(f, m0, coalesce_qb)]["coalesce_occupancy"]
+            for f in (1, 4, 16)]
 
     results = {
         "config": {"quick": quick, "smoke": smoke, "kernel_mode": kernel_mode,

@@ -1,0 +1,228 @@
+"""Open-loop streaming-serving benchmark: what query-level scheduling
+buys over frozen batches, and what hit-rate speculation saves.
+
+Poisson arrivals drive the streaming scheduler (core/scheduler.py) over
+a deliberately *skewed* query mix — half the queries are near-duplicates
+of database points (converge in a handful of rounds), half are far
+uniform-random points (run to the round cap) — the regime where a frozen
+batch wastes the most: its fast queries sit done, occupying rows of
+every remaining round's distance/merge/a2a work until the slowest
+straggler finishes. Three disciplines are measured on identical
+workloads:
+
+  * ``frozen``  — admit only into an all-free pool (the host-issued
+    synchronous batches of the computational-storage baseline, Kim et
+    al. arXiv:2207.05241);
+  * ``refill``  — continuous admission: retire finished queries each
+    round, refill freed slots immediately (NDSEARCH's query-level
+    scheduling, §V);
+  * ``dynamic`` — refill + the per-query hit-rate speculation
+    controller (§V-B) on top of the same static ``spec_max``.
+
+Reported per discipline: slot occupancy, round-normalized throughput
+(queries/round), sustained wall QPS, p50/p95/p99 latency, unique page
+reads, recall. A static ``spec_width`` sweep rides along so the
+controller has a best-static baseline to beat on page reads. Results
+land in machine-readable ``BENCH_serving.json``.
+
+``--smoke`` shrinks the workload and *asserts* the streaming
+invariants — refill occupancy/throughput above frozen, controller page
+reads at or below controller-off at equal recall — so CI fails loudly
+on a scheduling regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.engine import EngineParams, pack_for_engine
+from repro.core.graph import brute_force_topk, build_vamana, recall_at_k
+from repro.core.luncsr import Geometry, LUNCSR, pack_index
+from repro.core.metrics import stream_summary
+from repro.core.ref_search import SearchParams
+from repro.core.scheduler import poisson_arrivals, stream_search
+from repro.data.vectors import VectorDataset
+
+
+def skewed_queries(db: np.ndarray, nq: int, seed: int = 1):
+    """Half near-duplicates of db rows (fast queries), half uniform
+    random in the data's bounding box (stragglers) — maximally skewed
+    per-query round counts, interleaved so every admission wave mixes
+    both kinds."""
+    rng = np.random.default_rng(seed)
+    d = db.shape[1]
+    n_fast = nq // 2                       # even slots get the stragglers
+    rows = rng.integers(0, db.shape[0], n_fast)
+    fast = db[rows] + 0.01 * rng.standard_normal((n_fast, d))
+    lo, hi = db.min(axis=0), db.max(axis=0)
+    slow = rng.uniform(lo, hi, (nq - n_fast, d))
+    q = np.empty((nq, d), np.float32)
+    q[0::2] = slow                         # ceil(nq/2) rows — exact fit
+    q[1::2] = fast                         # floor(nq/2) rows
+    return q
+
+
+def build_workload(*, n, d, nq, shards, page_size, r, spec_max, seed):
+    ds = VectorDataset("serve-bench", n=n, dim=d, clusters=max(8, n // 128),
+                       seed=seed)
+    db = ds.materialize()
+    adj, medoid = build_vamana(db, r=r, seed=seed)
+    geo = Geometry(num_shards=shards, page_size=page_size,
+                   pages_per_block=4, dim=d)
+    packed = pack_index(
+        LUNCSR.from_adjacency(db, adj, geo, entry=medoid,
+                              pref_width=spec_max), max_degree=r)
+    queries = skewed_queries(db, nq, seed=seed + 1)
+    return db, packed, queries
+
+
+def _scenario(consts, geom, params, entry, queries, *, slots, arrivals,
+              dynamic_spec, refill, true_ids, k):
+    # untimed warmup on a slice so sustained_qps excludes jit compiles
+    stream_search(consts, geom, params, entry, queries[:4],
+                  num_slots=slots, dynamic_spec=dynamic_spec,
+                  refill=refill)
+    ids, _, st = stream_search(
+        consts, geom, params, entry, queries, num_slots=slots,
+        arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill)
+    row = stream_summary(st)
+    row["recall"] = round(float(recall_at_k(ids[:, :k], true_ids)), 4)
+    return row
+
+
+def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
+        spec_max=8, L=32, rate=2.0, kernel_mode="jnp", seed=0,
+        smoke=False, out_json="BENCH_serving.json"):
+    if smoke:
+        nq, n, slots, rate = 64, 2048, 4, 0.0
+    db, packed, queries = build_workload(
+        n=n, d=d, nq=nq, shards=shards, page_size=page_size, r=r,
+        spec_max=spec_max, seed=seed)
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=L, W=1, k=10)
+    true_ids, _ = brute_force_topk(db, queries, 10)
+
+    arrivals = poisson_arrivals(rate, nq, seed + 2)
+
+    def params_for(spec):
+        return EngineParams.lossless(sp, slots, packed.max_degree,
+                                     spec_width=spec,
+                                     kernel_mode=kernel_mode)
+
+    p_max = params_for(spec_max)
+    kw = dict(slots=slots, arrivals=arrivals, true_ids=true_ids, k=10)
+    scenarios = {}
+    t0 = time.time()
+    scenarios["frozen"] = _scenario(
+        consts, geom, p_max, entry, queries, dynamic_spec=False,
+        refill=False, **kw)
+    scenarios["refill"] = _scenario(
+        consts, geom, p_max, entry, queries, dynamic_spec=False,
+        refill=True, **kw)
+    scenarios["dynamic"] = _scenario(
+        consts, geom, p_max, entry, queries, dynamic_spec=True,
+        refill=True, **kw)
+
+    # static spec sweep (refill on): the controller's best-static bar
+    sweep = []
+    for spec in sorted({0, spec_max // 2, spec_max}):
+        row = _scenario(consts, geom, params_for(spec), entry, queries,
+                        dynamic_spec=False, refill=True, **kw)
+        row["spec"] = spec
+        sweep.append(row)
+
+    emit([[name, s["occupancy"], s["queries_per_round"],
+           s["sustained_qps"], s["latency_rounds"]["p50"],
+           s["latency_rounds"]["p99"], s["pages_unique"], s["recall"]]
+          for name, s in scenarios.items()],
+         ["discipline", "occupancy", "q/round", "qps", "p50_rounds",
+          "p99_rounds", "pages", "recall"],
+         f"streaming disciplines (nq={nq} slots={shards}x{slots} "
+         f"rate={rate} spec_max={spec_max})")
+    emit([[row["spec"], row["pages_unique"], row["recall"],
+           row["queries_per_round"]] for row in sweep],
+         ["spec_width", "pages", "recall", "q/round"],
+         "static speculation sweep (refill on)")
+
+    checks = {
+        "occupancy_gain": round(scenarios["refill"]["occupancy"]
+                                / max(scenarios["frozen"]["occupancy"],
+                                      1e-9), 3),
+        "throughput_gain": round(
+            scenarios["refill"]["queries_per_round"]
+            / max(scenarios["frozen"]["queries_per_round"], 1e-9), 3),
+        "dynamic_vs_static_pages": round(
+            scenarios["dynamic"]["pages_unique"]
+            / max(scenarios["refill"]["pages_unique"], 1), 4),
+        "dynamic_vs_best_static_pages": round(
+            scenarios["dynamic"]["pages_unique"]
+            / max(min(r["pages_unique"] for r in sweep), 1), 4),
+        "dynamic_recall_delta": round(
+            scenarios["dynamic"]["recall"]
+            - scenarios["refill"]["recall"], 4),
+    }
+    results = {
+        "config": {"nq": nq, "n": n, "d": d, "shards": shards,
+                   "slots": slots, "rate": rate, "spec_max": spec_max,
+                   "L": L, "kernel_mode": kernel_mode, "smoke": smoke,
+                   "wall_s": round(time.time() - t0, 1),
+                   "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
+        "scenarios": scenarios,
+        "static_spec_sweep": sweep,
+        "checks": checks,
+    }
+    if out_json:
+        # written before the smoke asserts so a regression still leaves
+        # the per-discipline numbers behind for diagnosis
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[wrote {out_json}]")
+
+    if smoke:
+        fr, re_, dy = (scenarios[s] for s in ("frozen", "refill",
+                                              "dynamic"))
+        assert re_["occupancy"] > fr["occupancy"], (
+            f"refill must beat frozen-batch occupancy: "
+            f"{re_['occupancy']} vs {fr['occupancy']}")
+        assert re_["queries_per_round"] > fr["queries_per_round"], (
+            f"refill must beat frozen-batch round-throughput: "
+            f"{re_['queries_per_round']} vs {fr['queries_per_round']}")
+        assert dy["pages_unique"] <= re_["pages_unique"], (
+            f"controller-on must not read more pages than controller-off "
+            f"at the same spec_max: {dy['pages_unique']} vs "
+            f"{re_['pages_unique']}")
+        assert dy["recall"] >= re_["recall"] - 0.02, (
+            f"controller must hold recall within 2pt of controller-off: "
+            f"{dy['recall']} vs {re_['recall']}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run + hard asserts on the streaming "
+                         "invariants (the CI regression gate)")
+    ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--spec-max", type=int, default=8)
+    ap.add_argument("--kernel-mode", default="jnp",
+                    choices=["auto", "pallas", "interpret", "ref", "jnp"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    run(nq=args.queries, n=args.n, shards=args.shards, slots=args.slots,
+        rate=args.rate, spec_max=args.spec_max,
+        kernel_mode=args.kernel_mode, seed=args.seed, smoke=args.smoke,
+        out_json=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

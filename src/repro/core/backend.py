@@ -162,6 +162,19 @@ class KernelBackend:
             return coalesce_num_tiles(items, npages, self.coalesce_qb)
         return items
 
+    def coalesce_occupancy(self, items: int, npages: int) -> float:
+        """Fraction of coalesced-tile query lanes holding a real
+        assignment: ``items / (grid_steps * qb)``. 1.0 means every page
+        read serves a full qb-wide tile; low values mean the static
+        tile bound is paying for mostly-empty partial tiles (the
+        ROADMAP two-pass-packing lever's headroom metric). The per-item
+        path (qb == 0) is width-1 tiles, occupancy 1.0 by construction.
+        """
+        qb = self.coalesce_qb
+        if qb <= 0 or items <= 0:
+            return 1.0
+        return items / (self.distance_grid_steps(items, npages) * qb)
+
     def paged_distance(self, page_ids, queries, qq, db, vnorm) -> jax.Array:
         """(T, QB, d) query tiles x (NP, P, d) paged db -> (T, QB, P)."""
         mode = self.resolved

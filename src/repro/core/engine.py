@@ -214,9 +214,18 @@ def _fb_adjacency(recv, adj, pref, params: EngineParams, geom: EngineGeom):
     return send
 
 
-def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq,
+def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq, spec_w,
                 params: EngineParams, geom: EngineGeom):
-    """Build proposals, dedup + bloom-filter, bucket phase-B assignments."""
+    """Build proposals, dedup + bloom-filter, bucket phase-B assignments.
+
+    ``spec_w`` is the *dynamic* speculation width — a traced i32, scalar
+    or per-query (Qs,), in [0, params.spec_width]. Shapes stay static at
+    the configured maximum; prefetch columns at or beyond a query's
+    width are masked to INVALID, which is bit-identical to running that
+    query at the smaller static width (masked proposals never survive
+    dedup/bucketing). The streaming scheduler's controller shrinks each
+    query's width as its own hit rate decays, without recompiling.
+    """
     sp = params.search
     Qs = queries.shape[0]
     W, R = sp.W, geom.max_degree
@@ -230,8 +239,13 @@ def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq,
                                  keep_a["rank"], keep_a["valid"],
                                  params.capacity_a)
         pr = jnp.where(keep_a["valid"][:, None], pr, INVALID)
+        pr = pr.reshape(Qs, W * params.spec_width)
+        col = (jnp.arange(W * params.spec_width, dtype=jnp.int32)
+               % params.spec_width)                     # col within group
+        keep_col = col[None, :] < jnp.broadcast_to(
+            jnp.asarray(spec_w, jnp.int32), (Qs,))[:, None]
         props = jnp.concatenate(
-            [props, pr.reshape(Qs, W * params.spec_width)], axis=1)
+            [props, jnp.where(keep_col, pr, INVALID)], axis=1)
     M = props.shape[1]
     valid = props != INVALID
     valid = dedup_in_round(props, valid)
@@ -346,14 +360,17 @@ def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
 # ---------------------------------------------------------------------------
 # Round body, parameterized by the communication primitive.
 # ---------------------------------------------------------------------------
-def _round(state, consts, params: EngineParams, geom: EngineGeom, a2a):
+def _round(state, consts, params: EngineParams, geom: EngineGeom, a2a,
+           spec_w=None):
+    if spec_w is None:
+        spec_w = jnp.int32(params.spec_width)
     send_a, keep_a = _fa_select(state, params, geom)
     recv_a = a2a(send_a)
     send_b = _fb_adjacency(recv_a, consts["adj"], consts["pref"],
                            params, geom)
     recv_b = a2a(send_b)
     send_c, keep_c = _fc_propose(state, keep_a, recv_b, consts["queries"],
-                                 consts["qq"], params, geom)
+                                 consts["qq"], spec_w, params, geom)
     recv_c = a2a(send_c)
     send_d, items, uniq = _fd_distance(recv_c, consts["db"], consts["vnorm"],
                                        consts["blk_perm"], params, geom)
@@ -398,6 +415,39 @@ def pack_for_engine(packed: PackedIndex):
                           jnp.int32(packed.entry))
 
 
+def _sim_round(state, consts, queries, qq, spec_w, params: EngineParams,
+               geom: EngineGeom):
+    """One engine round in sim comm: vmapped stages, all_to_all == swapaxes.
+
+    The shard axis leads every array. Shared by the one-shot
+    ``search_sim`` while_loop and the streaming stepper's
+    :func:`engine_round`."""
+
+    def a2a(tree):
+        return jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), tree)
+
+    vfa = jax.vmap(functools.partial(_fa_select, params=params, geom=geom))
+    vfb = jax.vmap(functools.partial(_fb_adjacency, params=params, geom=geom),
+                   in_axes=(0, 0, 0))
+    vfc = jax.vmap(functools.partial(_fc_propose, params=params, geom=geom),
+                   in_axes=(0, 0, 0, 0, 0, 0))
+    vfd = jax.vmap(functools.partial(_fd_distance, params=params, geom=geom),
+                   in_axes=(0, 0, 0, 0))
+    vfe = jax.vmap(functools.partial(_fe_merge, params=params, geom=geom),
+                   in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
+
+    send_a, keep_a = vfa(state)
+    recv_a = a2a(send_a)
+    send_b = vfb(recv_a, consts["adj"], consts["pref"])
+    recv_b = a2a(send_b)
+    send_c, keep_c = vfc(state, keep_a, recv_b, queries, qq, spec_w)
+    recv_c = a2a(send_c)
+    send_d, items, uniq = vfd(recv_c, consts["db"], consts["vnorm"],
+                              consts["blk_perm"])
+    recv_d = a2a(send_d)
+    return vfe(state, keep_a, keep_c, recv_d, items, uniq, queries, qq)
+
+
 @functools.partial(jax.jit, static_argnames=("params", "geom"))
 def search_sim(consts, queries, entry_vec, entry_norm, entry_id,
                params: EngineParams, geom: EngineGeom):
@@ -407,33 +457,11 @@ def search_sim(consts, queries, entry_vec, entry_norm, entry_id,
     state0 = jax.vmap(
         lambda q, qn: _init_state(q, qn, entry_vec, entry_norm, entry_id,
                                   params))(queries, qq)
-
-    def a2a(tree):
-        return jax.tree_util.tree_map(lambda x: jnp.swapaxes(x, 0, 1), tree)
-
-    # vmapped stages with communication interleaved
-    vfa = jax.vmap(functools.partial(_fa_select, params=params, geom=geom))
-    vfb = jax.vmap(functools.partial(_fb_adjacency, params=params, geom=geom),
-                   in_axes=(0, 0, 0))
-    vfc = jax.vmap(functools.partial(_fc_propose, params=params, geom=geom),
-                   in_axes=(0, 0, 0, 0, 0))
-    vfd = jax.vmap(functools.partial(_fd_distance, params=params, geom=geom),
-                   in_axes=(0, 0, 0, 0))
-    vfe = jax.vmap(functools.partial(_fe_merge, params=params, geom=geom),
-                   in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
+    spec_w = jnp.full(queries.shape[:2], params.spec_width, jnp.int32)
 
     def body(carry):
         state, t = carry
-        send_a, keep_a = vfa(state)
-        recv_a = a2a(send_a)
-        send_b = vfb(recv_a, consts["adj"], consts["pref"])
-        recv_b = a2a(send_b)
-        send_c, keep_c = vfc(state, keep_a, recv_b, queries, qq)
-        recv_c = a2a(send_c)
-        send_d, items, uniq = vfd(recv_c, consts["db"], consts["vnorm"],
-                                  consts["blk_perm"])
-        recv_d = a2a(send_d)
-        state = vfe(state, keep_a, keep_c, recv_d, items, uniq, queries, qq)
+        state = _sim_round(state, consts, queries, qq, spec_w, params, geom)
         return state, t + 1
 
     def cond(carry):
@@ -443,8 +471,152 @@ def search_sim(consts, queries, entry_vec, entry_norm, entry_id,
     state, t = jax.lax.while_loop(cond, body, (state0, jnp.int32(0)))
     out_i, out_d, stats = jax.vmap(lambda s: _finalize(s, params.search.k)
                                    )(state)
-    stats["total_rounds"] = t
+    # per-shard like the distributed driver (all shards step in lockstep,
+    # so the broadcast is exact) — consumers never special-case the driver
+    stats["total_rounds"] = jnp.broadcast_to(t, (queries.shape[0],))
     return out_i, out_d, stats
+
+
+# ---------------------------------------------------------------------------
+# Round-stepper API — the streaming scheduler's engine surface.
+#
+# ``engine_init`` / ``engine_round`` / ``engine_admit`` / ``engine_retire``
+# operate on an EngineState whose shard axis leads every leaf, so the
+# state can persist across jitted calls: a host-side loop owns the round
+# counter, retires finished slot rows and refills them with fresh queries
+# between rounds (core/scheduler.py). ``make_stepper`` bundles them, and
+# swaps the round's communication for shard_map lax.all_to_all when given
+# a mesh — the sim and distributed paths step through the same stages.
+# ---------------------------------------------------------------------------
+class EngineStepper(NamedTuple):
+    """(init, round, admit, retire) closures over static params/geom."""
+
+    init: callable     # (consts, queries, evec, enorm, eid) -> EngineState
+    round: callable    # (consts, state, queries, spec_w) -> EngineState
+    admit: callable    # (state, queries, admit_mask, new_q, evec, enorm,
+                       #  eid) -> (EngineState, queries')
+    retire: callable   # (state) -> (ids, dists, per-slot stats)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "geom"))
+def engine_init(consts, queries, entry_vec, entry_norm, entry_id,
+                params: EngineParams, geom: EngineGeom) -> EngineState:
+    """Fresh state for a (S, Qs, d) slot pool (per-row == one-shot init)."""
+    del consts, geom
+    qq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
+    return jax.vmap(
+        lambda q, qn: _init_state(q, qn, entry_vec, entry_norm, entry_id,
+                                  params))(queries, qq)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "geom"))
+def engine_round(consts, state: EngineState, queries, spec_w,
+                 params: EngineParams, geom: EngineGeom) -> EngineState:
+    """One Allocating -> Searching -> Gathering round (sim comm).
+
+    ``spec_w`` is the dynamic per-query speculation width: scalar or
+    (S, Qs) i32 in [0, params.spec_width] (scalars broadcast)."""
+    qq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
+    spec_w = jnp.broadcast_to(jnp.asarray(spec_w, jnp.int32),
+                              queries.shape[:2])
+    return _sim_round(state, consts, queries, qq, spec_w, params, geom)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "geom"))
+def engine_admit(state: EngineState, queries, admit_mask, new_q,
+                 entry_vec, entry_norm, entry_id,
+                 params: EngineParams, geom: EngineGeom):
+    """Refill freed slots: rows where ``admit_mask`` restart from the
+    entry vertex with the vectors in ``new_q`` (slot compaction by
+    replacement — freed rows never ride along as padding).
+
+    Every per-query leaf of the admitted rows — candidate list, expanded
+    flags, bloom, done/rounds/n_dist — is rebuilt from scratch by the
+    same ``_init_state`` math as the one-shot drivers, so a reused slot
+    is bit-identical to a fresh one. Shard-level cumulative counters
+    (items_recv, pages_unique, drops_b, props_sent) are preserved.
+    Returns the new state and the updated (S, Qs, d) query buffer.
+    """
+    del geom
+    q = jnp.where(admit_mask[..., None], new_q, queries)
+    qq = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1)
+    fresh = jax.vmap(
+        lambda qs, qn: _init_state(qs, qn, entry_vec, entry_norm, entry_id,
+                                   params))(q, qq)
+
+    def rows(cur, new):
+        m = admit_mask.reshape(admit_mask.shape
+                               + (1,) * (cur.ndim - admit_mask.ndim))
+        return jnp.where(m, new, cur)
+
+    state = EngineState(
+        rows(state.cand_d, fresh.cand_d), rows(state.cand_i, fresh.cand_i),
+        rows(state.cand_e, fresh.cand_e), rows(state.bloom, fresh.bloom),
+        jnp.where(admit_mask, False, state.done),
+        jnp.where(admit_mask, 0, state.rounds),
+        jnp.where(admit_mask, 0, state.n_dist),
+        state.items_recv, state.pages_unique, state.drops_b,
+        state.props_sent)
+    return state, q
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def engine_retire(state: EngineState, k: int):
+    """Per-slot results + stats; the host slices the retiring rows."""
+    return jax.vmap(lambda s: _finalize(s, k))(state)
+
+
+def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
+                 axis_name: str = "lun") -> EngineStepper:
+    """Bundle the stepper closures; with a mesh, the round communicates
+    via shard_map lax.all_to_all instead of the sim swapaxes (init,
+    admit and retire are per-row math with no communication, so the sim
+    forms serve both paths)."""
+    init = functools.partial(engine_init, params=params, geom=geom)
+    admit = functools.partial(engine_admit, params=params, geom=geom)
+    retire = functools.partial(engine_retire, k=params.search.k)
+    if mesh is None:
+        rnd = functools.partial(engine_round, params=params, geom=geom)
+        return EngineStepper(init, rnd, admit, retire)
+
+    from jax.sharding import PartitionSpec as P
+
+    def a2a(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.all_to_all(x, axis_name, 0, 0), tree)
+
+    nleaves = len(EngineState._fields)
+
+    def local_round(db, vnorm, adj, pref, blk_perm, q, spec_w, *leaves):
+        lc = {"db": db[0], "vnorm": vnorm[0], "adj": adj[0],
+              "pref": pref[0], "blk_perm": blk_perm[0]}
+        ql = q[0]
+        lc["queries"] = ql
+        lc["qq"] = jnp.sum(ql.astype(jnp.float32) ** 2, axis=-1)
+        state = EngineState(*(leaf[0] for leaf in leaves))
+        state = _round(state, lc, params, geom, a2a, spec_w[0])
+        return tuple(leaf[None] for leaf in state)
+
+    in_specs = (P(axis_name),) * 7 + (P(axis_name),) * nleaves
+    out_specs = (P(axis_name),) * nleaves
+    if hasattr(jax, "shard_map"):
+        f = jax.shard_map(local_round, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    else:  # jax < 0.6
+        from jax.experimental.shard_map import shard_map as _shard_map
+        f = _shard_map(local_round, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    f = jax.jit(f)
+
+    def rnd(consts, state, queries, spec_w):
+        spec_w = jnp.broadcast_to(jnp.asarray(spec_w, jnp.int32),
+                                  queries.shape[:2])
+        leaves = f(consts["db"], consts["vnorm"], consts["adj"],
+                   consts["pref"], consts["blk_perm"], queries,
+                   spec_w, *state)
+        return EngineState(*leaves)
+
+    return EngineStepper(init, rnd, admit, retire)
 
 
 def search_distributed(consts, queries, entry_vec, entry_norm, entry_id,

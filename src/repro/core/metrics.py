@@ -9,6 +9,7 @@ from repro.core.reorder import bandwidth_beta                # re-export
 __all__ = [
     "brute_force_topk", "recall_at_k", "bandwidth_beta",
     "page_access_ratio", "filter_ratio_bytes", "qps",
+    "latency_percentiles", "slot_occupancy", "stream_summary",
 ]
 
 
@@ -28,3 +29,54 @@ def filter_ratio_bytes(d: int, R: int, dtype_bytes: int = 4,
 
 def qps(num_queries: int, seconds: float) -> float:
     return num_queries / max(seconds, 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Streaming-scheduler metrics (core/scheduler.py, bench_serving)
+# ---------------------------------------------------------------------------
+def latency_percentiles(latencies) -> dict:
+    """p50/p95/p99/mean of a latency sample (any unit)."""
+    lat = np.asarray(latencies, np.float64)
+    if lat.size == 0:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
+    return {
+        "p50": float(np.percentile(lat, 50)),
+        "p95": float(np.percentile(lat, 95)),
+        "p99": float(np.percentile(lat, 99)),
+        "mean": float(lat.mean()),
+    }
+
+
+def slot_occupancy(live_counts, num_slots: int) -> float:
+    """Mean fraction of the slot pool holding a live query per round."""
+    live = np.asarray(live_counts, np.float64)
+    if live.size == 0:
+        return 0.0
+    return float(live.mean() / max(num_slots, 1))
+
+
+def stream_summary(stats) -> dict:
+    """Aggregate a scheduler StreamStats into the serving report:
+    occupancy, per-query latency percentiles (rounds + wall), round-
+    normalized throughput and sustained wall QPS."""
+    res = stats.results
+    n = len(res)
+    return {
+        "queries": n,
+        "total_rounds": stats.total_rounds,
+        "occupancy": round(stats.occupancy, 4),
+        "latency_rounds": {k: round(v, 2) for k, v in latency_percentiles(
+            [r.latency_rounds for r in res]).items()},
+        "service_rounds": {k: round(v, 2) for k, v in latency_percentiles(
+            [r.service_rounds for r in res]).items()},
+        "wall_latency_ms": {k: round(v * 1e3, 2)
+                            for k, v in latency_percentiles(
+            [r.wall_latency_s for r in res]).items()},
+        "queries_per_round": round(n / max(stats.total_rounds, 1), 3),
+        "sustained_qps": round(qps(n, stats.wall_s), 1),
+        "pages_unique": stats.pages_unique,
+        "items_recv": stats.items_recv,
+        "drops_b": stats.drops_b,
+        "mean_spec_w": round(float(np.mean(stats.spec_trace)), 2)
+        if stats.spec_trace else 0.0,
+    }

@@ -1,0 +1,356 @@
+"""Streaming query scheduler on top of the engine's round-stepper API.
+
+NDSEARCH keeps the SEARSSD pipeline saturated by scheduling at the
+*query* level, not the batch level (§V): finished queries leave the
+pipeline immediately and fresh ones take their place, and the
+speculative-search width adapts to the observed hit rate instead of
+being fixed up front. The frozen-batch drivers (``search_sim`` /
+``search_distributed``) violate both — finished queries occupy rows in
+every remaining round's distance/merge/all_to_all work, and
+``spec_width`` is a static knob.
+
+This module closes the gap with three host-side pieces over the
+stepper (`engine_init / engine_round / engine_admit / engine_retire`):
+
+  * **slot pool + continuous admission** — a fixed (S, Qs) pool of query
+    slots. Each round, rows whose query finished are *retired* (results
+    emitted with per-query latency) and refilled from a pending queue
+    via ``engine_admit`` (slot compaction by replacement): whenever the
+    queue is non-empty, every row of every round's phase work is a live
+    query, never padding.
+  * **dynamic speculation** — a :class:`SpecController` watches the
+    per-round deltas of the ``props_sent``/``pages_unique`` counters the
+    state already carries and adjusts the traced ``spec_w`` argument of
+    ``engine_round`` between 0 and the static ``params.spec_width``:
+    wide while the frontier is fresh (speculated 2nd-order neighbors
+    mostly survive the bloom filter), narrow as acceptance collapses
+    near convergence — cutting page reads the late speculation would
+    have wasted.
+  * **open-loop arrivals** — queries carry arrival *rounds* (the
+    simulation clock is engine rounds); the scheduler admits a query
+    once its arrival round has passed and a slot is free, and records
+    wait + service latency per query.
+
+Per-query results are **bit-identical** to the one-shot drivers under
+lossless capacities: every stage's per-row math depends only on that
+row's own state, so which queries co-occupy the pool — and when they
+were admitted — cannot change a query's trajectory
+(tests/test_scheduler.py property-tests this over arrival orders and
+slot counts).
+
+``refill=False`` degrades the scheduler to the frozen-batch discipline
+(admit only into an all-free pool, like the fixed synchronous batches
+of the computational-storage baseline the paper compares against) so
+benchmarks can measure exactly what compaction buys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (EngineGeom, EngineParams, EngineStepper,
+                               make_stepper)
+from repro.core.metrics import slot_occupancy
+
+INVALID = -1
+
+
+@dataclasses.dataclass
+class SpecController:
+    """Per-query hit-rate-driven speculation widths (the paper's dynamic
+    speculative search, §V-B).
+
+    Each slot row keeps its own width. Per round, ``update`` sees each
+    query's accepted-proposal count for that round (the delta of the
+    engine's per-query ``n_dist`` counter) and derives the query's own
+    acceptance rate
+
+        hit_q = accepted_q / (W * (R + spec_w_q))
+
+    — the fraction of that query's served adjacency (+ speculation)
+    entries that survived dedup + bloom filtering. The rate is
+    *self-normalizing*: each query's smoothed hit is compared against
+    its own running peak, so the policy transfers across datasets whose
+    absolute acceptance levels differ. Width follows the normalized
+    rate linearly between ``floor`` and ``ceil``: a fresh query (ratio
+    near 1) keeps the full ``spec_max`` — preserving the cross-round
+    page coalescing speculation buys early — while a converging query,
+    whose speculation mostly re-proposes bloom-visited vertices or
+    fetches pages it will never rank, ramps down to 0. The engine masks
+    each query's prefetch columns beyond its current width, so widths
+    move per round without recompiling.
+    """
+
+    spec_max: int
+    W: int
+    max_degree: int
+    floor: float = 0.2      # normalized hit at/below which spec_w -> 0
+    ceil: float = 0.6       # normalized hit at/above which spec_w -> max
+    ema: float = 0.5        # smoothing of the per-round hit estimate
+    spec_w: np.ndarray = dataclasses.field(default=None, repr=False)
+    _hit: np.ndarray = dataclasses.field(default=None, repr=False)
+    _peak: np.ndarray = dataclasses.field(default=None, repr=False)
+
+    def _ensure(self, shape):
+        if self.spec_w is None or self.spec_w.shape != shape:
+            self.spec_w = np.full(shape, self.spec_max, np.int32)
+            self._hit = np.full(shape, -1.0)
+            self._peak = np.zeros(shape)
+
+    def reset_rows(self, mask: np.ndarray):
+        """Fresh queries restart at full width (called at admission)."""
+        self._ensure(mask.shape)
+        self.spec_w[mask] = self.spec_max
+        self._hit[mask] = -1.0
+        self._peak[mask] = 0.0
+
+    def update(self, accepted: np.ndarray, worked: np.ndarray) -> np.ndarray:
+        """accepted: (S, Qs) this-round accepted proposals per slot;
+        worked: (S, Qs) rows that were live this round."""
+        self._ensure(accepted.shape)
+        served = self.W * (self.max_degree + self.spec_w)
+        hit = accepted / np.maximum(served, 1)
+        first = worked & (self._hit < 0)
+        self._hit[first] = hit[first]
+        upd = worked & ~first
+        self._hit[upd] = (self.ema * hit[upd]
+                          + (1 - self.ema) * self._hit[upd])
+        self._peak = np.maximum(self._peak, self._hit)
+        ratio = self._hit / np.maximum(self._peak, 1e-9)
+        frac = np.clip((ratio - self.floor) / max(self.ceil - self.floor,
+                                                  1e-9), 0.0, 1.0)
+        width = np.rint(self.spec_max * frac).astype(np.int32)
+        self.spec_w[worked] = width[worked]
+        return self.spec_w
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Per-query record emitted at retirement."""
+
+    qid: int
+    ids: np.ndarray           # (k,) i32
+    dists: np.ndarray         # (k,) f32
+    arrival_round: int
+    admit_round: int
+    retire_round: int
+    service_rounds: int       # rounds the query actually worked
+    n_dist: int
+    wall_latency_s: float     # admit -> retire wall clock
+
+    @property
+    def wait_rounds(self) -> int:
+        return self.admit_round - self.arrival_round
+
+    @property
+    def latency_rounds(self) -> int:
+        return self.retire_round - self.arrival_round
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Aggregate scheduler run statistics."""
+
+    results: list             # [QueryResult] in retirement order
+    total_rounds: int         # engine rounds stepped
+    occupancy: float          # mean live-slots / total-slots per round
+    occupancy_trace: list     # per-round live-slot counts
+    pages_unique: int         # cumulative unique page reads
+    items_recv: int
+    props_sent: int
+    drops_b: int
+    spec_trace: list          # spec_w used each round
+    wall_s: float
+
+    def by_qid(self):
+        return {r.qid: r for r in self.results}
+
+
+class StreamScheduler:
+    """Continuous-batching scheduler over a fixed (S, Qs) slot pool."""
+
+    def __init__(self, consts, geom: EngineGeom, params: EngineParams,
+                 entry, num_slots: int, mesh=None, axis_name: str = "lun",
+                 controller: Optional[SpecController] = None,
+                 refill: bool = True,
+                 stepper: Optional[EngineStepper] = None):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.consts = consts
+        self.geom = geom
+        self.params = params
+        self.entry = entry                       # (evec, enorm, eid)
+        self.num_slots = num_slots               # per shard
+        self.controller = controller
+        self.refill = refill
+        self.stepper = stepper or make_stepper(params, geom, mesh=mesh,
+                                               axis_name=axis_name)
+        self.S = geom.num_shards
+
+    # -- host-side pool bookkeeping -----------------------------------------
+    def _fresh_pool(self, d: int):
+        S, Qs = self.S, self.num_slots
+        queries = jnp.zeros((S, Qs, d), jnp.float32)
+        state = self.stepper.init(self.consts, queries, *self.entry)
+        # empty slots are parked: done=True rows do no phase work
+        state = state._replace(done=jnp.ones((S, Qs), bool))
+        return state, queries
+
+    def run(self, queries: np.ndarray,
+            arrivals: Optional[np.ndarray] = None) -> StreamStats:
+        """Serve ``queries`` (N, d); ``arrivals`` are arrival rounds
+        (default: all at round 0). Returns per-query results + metrics."""
+        queries = np.asarray(queries, np.float32)
+        N, d = queries.shape
+        arrivals = (np.zeros(N, np.int64) if arrivals is None
+                    else np.asarray(arrivals, np.int64))
+        order = np.argsort(arrivals, kind="stable")
+        rounds_cap = self.params.search.rounds_cap
+        S, Qs = self.S, self.num_slots
+        stepped = 0                                   # engine rounds run
+
+        state, qbuf = self._fresh_pool(d)
+        owner = np.full((S, Qs), INVALID, np.int64)   # slot -> qid
+        admit_t = np.zeros((S, Qs), np.int64)
+        admit_wall = np.zeros((S, Qs), np.float64)
+        prev_n_dist = np.zeros((S, Qs), np.int64)
+        next_q = 0                                    # cursor into order
+        retired = 0
+        t = 0
+        results: list[QueryResult] = []
+        occ_trace: list[int] = []
+        spec_trace: list[float] = []
+        t0 = time.time()
+
+        while retired < N:
+            # -- admission: fill free slots from the arrived pending queue
+            free = np.argwhere(owner == INVALID)
+            pool_all_free = len(free) == S * Qs
+            can_admit = self.refill or pool_all_free
+            staged = []
+            while (can_admit and len(staged) < len(free) and next_q < N
+                   and arrivals[order[next_q]] <= t):
+                staged.append(order[next_q])
+                next_q += 1
+            if staged:
+                mask = np.zeros((S, Qs), bool)
+                new_q = np.zeros((S, Qs, d), np.float32)
+                now_wall = time.time()
+                for (s, r), qid in zip(free[:len(staged)], staged):
+                    mask[s, r] = True
+                    new_q[s, r] = queries[qid]
+                    owner[s, r] = qid
+                    admit_t[s, r] = t
+                    admit_wall[s, r] = now_wall
+                    prev_n_dist[s, r] = 0
+                state, qbuf = self.stepper.admit(
+                    state, qbuf, jnp.asarray(mask), jnp.asarray(new_q),
+                    *self.entry)
+                if self.controller is not None:
+                    self.controller.reset_rows(mask)
+
+            live_mask = owner != INVALID
+            live = int(live_mask.sum())
+            if live == 0:
+                # pool idle: jump the clock to the next arrival
+                t = max(t + 1, int(arrivals[order[next_q]])) \
+                    if next_q < N else t + 1
+                continue
+            occ_trace.append(live)
+
+            # -- one engine round at the controller's current widths
+            if self.controller is not None:
+                self.controller._ensure((S, Qs))
+                spec_w = jnp.asarray(self.controller.spec_w)
+                spec_trace.append(
+                    float(self.controller.spec_w[live_mask].mean()))
+            else:
+                spec_w = self.params.spec_width
+                spec_trace.append(float(spec_w))
+            state = self.stepper.round(self.consts, state, qbuf, spec_w)
+            t += 1
+            stepped += 1
+
+            done = np.asarray(state.done)
+            rounds = np.asarray(state.rounds)
+            n_dist = np.asarray(state.n_dist)
+            if self.controller is not None:
+                # per-query accepted proposals this round -> width update
+                self.controller.update(n_dist - prev_n_dist, live_mask)
+            prev_n_dist = n_dist.astype(np.int64)
+
+            # -- retire finished rows (done, or per-query round cap)
+            fin = live_mask & (done | (rounds >= rounds_cap))
+            if fin.any():
+                # park every retired row (done=True): a row retired via
+                # the round cap would otherwise keep proposing/reading
+                # pages as a zombie until readmitted, inflating the
+                # shard-cumulative page/item counters
+                state = state._replace(
+                    done=jnp.logical_or(state.done, jnp.asarray(fin)))
+                out_i, out_d, sl_stats = self.stepper.retire(state)
+                out_i = np.asarray(out_i)
+                out_d = np.asarray(out_d)
+                now_wall = time.time()
+                for s, r in np.argwhere(fin):
+                    results.append(QueryResult(
+                        qid=int(owner[s, r]), ids=out_i[s, r].copy(),
+                        dists=out_d[s, r].copy(),
+                        arrival_round=int(arrivals[owner[s, r]]),
+                        admit_round=int(admit_t[s, r]), retire_round=t,
+                        service_rounds=int(rounds[s, r]),
+                        n_dist=int(n_dist[s, r]),
+                        wall_latency_s=now_wall - admit_wall[s, r]))
+                    owner[s, r] = INVALID
+                retired += int(fin.sum())
+
+        return StreamStats(
+            results=results, total_rounds=stepped,
+            occupancy=slot_occupancy(occ_trace, S * Qs),
+            occupancy_trace=occ_trace,
+            pages_unique=int(np.asarray(state.pages_unique).sum()),
+            items_recv=int(np.asarray(state.items_recv).sum()),
+            props_sent=int(np.asarray(state.props_sent).sum()),
+            drops_b=int(np.asarray(state.drops_b).sum()),
+            spec_trace=spec_trace, wall_s=time.time() - t0)
+
+
+def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
+    """Open-loop arrival rounds: ``rate`` mean arrivals per engine
+    round (exponential inter-arrival gaps). rate <= 0 -> all at 0."""
+    if rate <= 0:
+        return np.zeros(n, np.int64)
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, n)).astype(np.int64)
+
+
+def stream_search(consts, geom, params, entry, queries,
+                  num_slots: int, arrivals=None, mesh=None,
+                  dynamic_spec: bool = False, refill: bool = True):
+    """Convenience wrapper: run the streaming scheduler and return
+    (ids (N, k), dists (N, k), StreamStats) in query order."""
+    ctrl = None
+    if dynamic_spec:
+        if params.spec_width <= 0:
+            raise ValueError(
+                "dynamic_spec needs a speculation budget to adapt: set "
+                "spec_width > 0 (it is the controller's maximum width)")
+        ctrl = SpecController(spec_max=params.spec_width,
+                              W=params.search.W,
+                              max_degree=geom.max_degree)
+    sched = StreamScheduler(consts, geom, params, entry,
+                            num_slots=num_slots, mesh=mesh,
+                            controller=ctrl, refill=refill)
+    stats = sched.run(queries, arrivals)
+    k = params.search.k
+    n = np.asarray(queries).shape[0]
+    ids = np.full((n, k), INVALID, np.int32)
+    dists = np.zeros((n, k), np.float32)
+    for r in stats.results:
+        ids[r.qid] = r.ids
+        dists[r.qid] = r.dists
+    return ids, dists, stats

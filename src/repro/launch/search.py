@@ -62,6 +62,20 @@ def main(argv=None):
                     help="per-page query-tile width in kernel modes: one "
                          "page read serves up to this many assignments "
                          "(0 = one page read per assignment)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming scheduler: fixed slot pool, finished "
+                         "queries retire + freed slots refill every round "
+                         "(continuous batching) instead of one frozen "
+                         "batch per call")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="streaming: query slots per shard")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="streaming: mean Poisson arrivals per engine "
+                         "round (0 = all queries arrive at round 0)")
+    ap.add_argument("--spec-dynamic", action="store_true",
+                    help="streaming: adapt each query's speculation "
+                         "width to its observed hit rate (paper §V-B) "
+                         "instead of the static --spec width")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
@@ -86,11 +100,34 @@ def main(argv=None):
 
     consts, geom, entry = pack_for_engine(packed)
     sp = SearchParams(L=args.L, W=args.W, k=args.k)
+    S = args.shards
+
+    if args.stream:
+        # lazy import: serve_stream imports build_index from this module
+        from repro.launch.serve_stream import stream_report
+
+        params = EngineParams.lossless(
+            sp, args.slots, args.degree, spec_width=args.spec,
+            kernel_mode=args.kernel_mode, coalesce_qb=args.coalesce_qb)
+        res = {
+            "dataset": ds.name, "mode": "stream",
+            "kernel_mode": args.kernel_mode, "n": int(db.shape[0]),
+            **stream_report(consts, geom, params, entry, db,
+                            queries[:args.queries], slots=args.slots,
+                            arrival_rate=args.arrival_rate,
+                            seed=args.seed + 2,
+                            dynamic_spec=args.spec_dynamic),
+        }
+        print(json.dumps(res, indent=1))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(res, f, indent=1)
+        return 0
+
     params = EngineParams.lossless(
         sp, -(-args.queries // args.shards), args.degree,
         spec_width=args.spec, kernel_mode=args.kernel_mode,
         coalesce_qb=args.coalesce_qb)
-    S = args.shards
     qs = args.queries - args.queries % S or S
     qsh = jnp.asarray(queries[:qs].reshape(S, qs // S, -1))
 

@@ -1,0 +1,151 @@
+"""Streaming retrieval serving driver — the NDSearch engine as an
+always-on service with open-loop (Poisson) query arrivals.
+
+Where ``repro.launch.search`` runs one frozen batch per call, this
+driver keeps a fixed pool of query slots saturated via the streaming
+scheduler (core/scheduler.py): queries arrive on a Poisson clock, are
+admitted the round a slot frees up, and retire individually with
+per-query latency — the paper's query-level scheduling (§V) instead of
+host-issued synchronous batches. Reports slot occupancy, p50/p95/p99
+latency (rounds + wall) and sustained QPS.
+
+  PYTHONPATH=src python -m repro.launch.serve_stream --dataset tiny \
+      --queries 128 --shards 4 --slots 8 --arrival-rate 2 --spec 4 \
+      --spec-dynamic
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core.engine import EngineParams, pack_for_engine
+from repro.core.graph import brute_force_topk, recall_at_k
+from repro.core.metrics import stream_summary
+from repro.core.ref_search import SearchParams
+from repro.core.scheduler import poisson_arrivals, stream_search
+from repro.data.vectors import PAPER_DATASETS, VectorDataset
+from repro.launch.search import build_index
+
+
+class StreamingRetriever:
+    """Retrieval-as-a-service facade for the two-stage RAG pipeline.
+
+    Owns a packed index + engine params; each :meth:`retrieve` call is
+    a streaming client session — queries flow through the slot pool
+    with retire/refill instead of one frozen batch
+    (``repro.launch.serve --rag`` uses this when ``--stream-retrieval``
+    is set)."""
+
+    def __init__(self, db: np.ndarray, packed, *, L=16, W=1, k=4,
+                 num_slots=4, spec=0, dynamic_spec=False,
+                 kernel_mode="jnp", coalesce_qb=8):
+        self.db = db
+        self.consts, self.geom, self.entry = pack_for_engine(packed)
+        sp = SearchParams(L=L, W=W, k=k)
+        self.params = EngineParams.lossless(
+            sp, num_slots, packed.max_degree, spec_width=spec,
+            kernel_mode=kernel_mode, coalesce_qb=coalesce_qb)
+        self.num_slots = num_slots
+        self.dynamic_spec = dynamic_spec
+
+    def retrieve(self, queries: np.ndarray, arrivals=None):
+        """(N, d) queries -> (vecs (N, k, d), ids, dists, StreamStats)."""
+        ids, dists, stats = stream_search(
+            self.consts, self.geom, self.params, self.entry, queries,
+            num_slots=self.num_slots, arrivals=arrivals,
+            dynamic_spec=self.dynamic_spec)
+        vecs = self.db[np.clip(ids, 0, self.db.shape[0] - 1)]
+        return vecs, ids, dists, stats
+
+
+def stream_report(consts, geom, params, entry, db, queries, *, slots,
+                  arrival_rate, seed, dynamic_spec=False,
+                  refill=True) -> dict:
+    """Run one streaming session and build the serving report shared by
+    the `search --stream` and `serve_stream` CLIs: Poisson arrivals ->
+    scheduler -> recall vs brute force + stream_summary metrics."""
+    arrivals = poisson_arrivals(arrival_rate, queries.shape[0], seed)
+    ids, _, st = stream_search(
+        consts, geom, params, entry, queries, num_slots=slots,
+        arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill)
+    k = params.search.k
+    true_ids, _ = brute_force_topk(db, queries, k)
+    return {
+        "shards": geom.num_shards, "slots_per_shard": slots,
+        "arrival_rate": arrival_rate, "refill": refill,
+        "spec": params.spec_width, "spec_dynamic": dynamic_spec,
+        "recall@k": round(float(recall_at_k(ids, true_ids)), 4),
+        **stream_summary(st),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="tiny",
+                    choices=sorted(PAPER_DATASETS) + ["tiny"])
+    ap.add_argument("--n", type=int, default=0)
+    ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--degree", type=int, default=16)
+    ap.add_argument("--L", type=int, default=32)
+    ap.add_argument("--W", type=int, default=1)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--slots", type=int, default=8,
+                    help="query slots per shard")
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="mean Poisson arrivals per engine round "
+                         "(0 = all at round 0)")
+    ap.add_argument("--spec", type=int, default=0,
+                    help="max speculative prefetch width")
+    ap.add_argument("--spec-dynamic", action="store_true",
+                    help="per-query hit-rate speculation controller")
+    ap.add_argument("--no-refill", action="store_true",
+                    help="frozen-batch discipline (baseline): admit "
+                         "only into an all-free pool")
+    ap.add_argument("--kernel-mode", default="jnp",
+                    choices=["auto", "pallas", "interpret", "ref", "jnp"])
+    ap.add_argument("--coalesce-qb", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    if args.dataset == "tiny":
+        ds = VectorDataset("tiny", n=args.n or 4096, dim=48, clusters=32)
+    else:
+        import dataclasses
+        ds = PAPER_DATASETS[args.dataset]
+        if args.n:
+            ds = dataclasses.replace(ds, n=args.n)
+    db0 = ds.materialize()
+    queries = ds.queries(args.queries, seed=args.seed + 1)
+    db, packed = build_index(
+        db0, shards=args.shards, page_size=args.page_size, r=args.degree,
+        pref_width=args.spec, seed=args.seed)
+
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=args.L, W=args.W, k=args.k)
+    params = EngineParams.lossless(
+        sp, args.slots, args.degree, spec_width=args.spec,
+        kernel_mode=args.kernel_mode, coalesce_qb=args.coalesce_qb)
+
+    res = {
+        "dataset": ds.name, "n": int(db.shape[0]),
+        "kernel_mode": args.kernel_mode,
+        **stream_report(consts, geom, params, entry, db, queries,
+                        slots=args.slots, arrival_rate=args.arrival_rate,
+                        seed=args.seed + 2,
+                        dynamic_spec=args.spec_dynamic,
+                        refill=not args.no_refill),
+    }
+    print(json.dumps(res, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -48,8 +48,35 @@ def main():
                                       np.asarray(dst["rounds"]))
         np.testing.assert_array_equal(np.asarray(ss["pages_unique"]),
                                       np.asarray(dst["pages_unique"]))
+        # satellite: both drivers report total_rounds per shard, same shape
+        assert (np.asarray(ss["total_rounds"]).shape
+                == np.asarray(dst["total_rounds"]).shape == (S,))
+        np.testing.assert_array_equal(np.asarray(ss["total_rounds"]),
+                                      np.asarray(dst["total_rounds"]))
         print(f"spec={spec} kernel_mode={kernel_mode}: shard_map == sim OK "
               f"(rounds={int(np.asarray(ss['rounds']).sum())})")
+
+    # streaming scheduler over the shard_map stepper: the distributed
+    # round must stream bit-identically to the one-shot sim driver
+    from repro.core.scheduler import stream_search             # noqa: E402
+
+    sp = SearchParams(L=16, W=2, k=10)
+    params_ref = EngineParams.lossless(sp, qsh.shape[1], geom.max_degree,
+                                       spec_width=4)
+    si, sd, _ = search_sim(consts, qsh, *entry, params_ref, geom)
+    params_st = EngineParams.lossless(sp, 3, geom.max_degree, spec_width=4)
+    arrivals = np.random.default_rng(5).integers(0, 8, nq)
+    for dyn in (False, True):
+        ids, dists, st = stream_search(
+            consts, geom, params_st, entry, queries, num_slots=3,
+            arrivals=arrivals, dynamic_spec=dyn, mesh=mesh)
+        if not dyn:   # controller-off streaming is bit-identical
+            np.testing.assert_array_equal(ids, np.asarray(si).reshape(nq, -1))
+            np.testing.assert_array_equal(dists,
+                                          np.asarray(sd).reshape(nq, -1))
+        assert len(st.results) == nq
+    print(f"streaming shard_map stepper == one-shot sim OK "
+          f"(rounds={st.total_rounds}, occ={st.occupancy:.2f})")
     print("MULTISHARD_OK")
 
 

@@ -1,0 +1,262 @@
+"""Streaming scheduler == one-shot engine, bit for bit, plus the
+retire/refill slot-reuse and dynamic-speculation machinery."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (EngineParams, engine_admit, engine_init,
+                               engine_round, make_stepper,
+                               pack_for_engine, search_sim)
+from repro.core.graph import build_vamana, brute_force_topk, recall_at_k
+from repro.core.luncsr import Geometry, LUNCSR, pack_index
+from repro.core.ref_search import SearchParams
+from repro.core.scheduler import SpecController, stream_search
+
+INVALID = -1
+
+
+def _dataset(n=1024, d=32, nq=32, S=4, page=32, seed=0, pref_width=8):
+    rng = np.random.default_rng(seed)
+    db = rng.integers(-8, 9, size=(n, d)).astype(np.float32)
+    queries = rng.integers(-8, 9, size=(nq, d)).astype(np.float32)
+    adj, medoid = build_vamana(db, r=12, alpha=1.2, seed=seed)
+    geo = Geometry(num_shards=S, page_size=page, pages_per_block=2, dim=d)
+    index = LUNCSR.from_adjacency(db, adj, geo, entry=medoid,
+                                  pref_width=pref_width)
+    packed = pack_index(index, max_degree=12)
+    return db, queries, packed
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return _dataset()
+
+
+def _oneshot(consts, geom, entry, queries, sp, spec=0):
+    """Reference per-query results from the frozen-batch driver."""
+    S = geom.num_shards
+    nq = queries.shape[0]
+    params = EngineParams.lossless(sp, nq // S, geom.max_degree,
+                                   spec_width=spec)
+    qsh = jnp.asarray(queries.reshape(S, nq // S, -1))
+    i, d, _ = search_sim(consts, qsh, *entry, params, geom)
+    return (np.asarray(i).reshape(nq, -1), np.asarray(d).reshape(nq, -1))
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: streaming admission == one-shot, any arrivals/slots
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("slots,spec", [(1, 0), (3, 0), (8, 4)])
+def test_stream_matches_oneshot_bitexact(ds, slots, spec):
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    ref_i, ref_d = _oneshot(consts, geom, entry, queries, sp, spec)
+    params = EngineParams.lossless(sp, slots, geom.max_degree,
+                                   spec_width=spec)
+    rng = np.random.default_rng(slots + spec)
+    arrivals = rng.integers(0, 20, queries.shape[0])
+    ids, dists, st = stream_search(consts, geom, params, entry, queries,
+                                   num_slots=slots, arrivals=arrivals)
+    np.testing.assert_array_equal(ids, ref_i)
+    np.testing.assert_array_equal(dists, ref_d)
+    assert len(st.results) == queries.shape[0]
+
+
+def test_stream_property_arrival_orders(ds):
+    """Hypothesis: any arrival order, slot count and arrival spacing
+    produce bit-identical per-query results to one-shot search_sim."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=8, W=1, k=5)
+    nq = 8
+    q = queries[:nq]
+    S = geom.num_shards
+    params_ref = EngineParams.lossless(sp, nq // S, geom.max_degree)
+    qsh = jnp.asarray(q.reshape(S, nq // S, -1))
+    i, d, _ = search_sim(consts, qsh, *entry, params_ref, geom)
+    ref_i = np.asarray(i).reshape(nq, -1)
+    ref_d = np.asarray(d).reshape(nq, -1)
+
+    @given(st.integers(1, 4),
+           st.lists(st.integers(0, 12), min_size=nq, max_size=nq),
+           st.randoms(use_true_random=False))
+    @settings(max_examples=10, deadline=None)
+    def check(slots, gaps, rnd):
+        order = list(range(nq))
+        rnd.shuffle(order)
+        arrivals = np.zeros(nq, np.int64)
+        arrivals[order] = np.cumsum(gaps)   # shuffled admission order
+        params = EngineParams.lossless(sp, slots, geom.max_degree)
+        ids, dists, _ = stream_search(consts, geom, params, entry, q,
+                                      num_slots=slots, arrivals=arrivals)
+        np.testing.assert_array_equal(ids, ref_i)
+        np.testing.assert_array_equal(dists, ref_d)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Retire/refill slot reuse: stale state must be fully reset
+# ---------------------------------------------------------------------------
+def test_admit_resets_slot_state(ds):
+    """A slot that served query A and is re-admitted with query B must
+    carry no trace of A: candidate list, expanded flags, bloom and the
+    per-query counters all restart from the fresh-init values."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+    S = geom.num_shards
+    qA = jnp.asarray(np.tile(queries[0], (S, 2, 1)))
+    qB = jnp.asarray(np.tile(queries[1], (S, 2, 1)))
+
+    state = engine_init(consts, qA, *entry, params=params, geom=geom)
+    for _ in range(5):   # pollute the pool with A's progress
+        state = engine_round(consts, state, qA, 0, params=params, geom=geom)
+    assert int(np.asarray(state.n_dist).sum()) > 0
+
+    mask = jnp.ones((S, 2), bool)
+    readmit, qbuf = engine_admit(state, qA, mask, qB, *entry,
+                                 params=params, geom=geom)
+    fresh = engine_init(consts, qB, *entry, params=params, geom=geom)
+    for leaf_r, leaf_f, name in zip(readmit, fresh, state._fields):
+        if name in ("items_recv", "pages_unique", "drops_b", "props_sent"):
+            continue   # shard-cumulative counters survive by design
+        np.testing.assert_array_equal(np.asarray(leaf_r),
+                                      np.asarray(leaf_f), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(qbuf), np.asarray(qB))
+
+
+def test_slot_reuse_end_to_end(ds):
+    """num_slots=1 forces every query through the same slot row."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    ref_i, ref_d = _oneshot(consts, geom, entry, queries[:8], sp)
+    params = EngineParams.lossless(sp, 1, geom.max_degree)
+    ids, dists, st = stream_search(consts, geom, params, entry,
+                                   queries[:8], num_slots=1)
+    np.testing.assert_array_equal(ids, ref_i)
+    np.testing.assert_array_equal(dists, ref_d)
+    # more queries than pool rows (S shards x 1 slot): rows were reused
+    assert len(st.results) > packed.geometry.num_shards
+
+
+# ---------------------------------------------------------------------------
+# Scheduler behaviour: refill occupancy, frozen baseline, controller
+# ---------------------------------------------------------------------------
+def test_refill_beats_frozen_occupancy(ds):
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+    _, _, st_refill = stream_search(consts, geom, params, entry, queries,
+                                    num_slots=2)
+    _, _, st_frozen = stream_search(consts, geom, params, entry, queries,
+                                    num_slots=2, refill=False)
+    assert st_refill.occupancy > st_frozen.occupancy
+    assert st_refill.total_rounds <= st_frozen.total_rounds
+
+
+def test_dynamic_spec_reduces_pages_same_recall():
+    """On the clustered serving workload (the bench_serving --smoke
+    config) the per-query controller reads no more pages than the
+    static spec_max run, at recall within 2pt."""
+    from repro.data.vectors import VectorDataset
+
+    ds = VectorDataset("sched-dyn", n=2048, dim=48, clusters=16, seed=0)
+    db = ds.materialize()
+    queries = ds.queries(48, seed=1)
+    adj, medoid = build_vamana(db, r=16, seed=0)
+    geo = Geometry(num_shards=4, page_size=64, pages_per_block=4, dim=48)
+    packed = pack_index(
+        LUNCSR.from_adjacency(db, adj, geo, entry=medoid, pref_width=8),
+        max_degree=16)
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=32, W=1, k=10)
+    params = EngineParams.lossless(sp, 4, geom.max_degree, spec_width=8)
+    ids_s, _, st_s = stream_search(consts, geom, params, entry, queries,
+                                   num_slots=4)
+    ids_d, _, st_d = stream_search(consts, geom, params, entry, queries,
+                                   num_slots=4, dynamic_spec=True)
+    assert st_d.pages_unique <= st_s.pages_unique
+    true_i, _ = brute_force_topk(db, queries, 10)
+    assert (recall_at_k(ids_d, true_i)
+            >= recall_at_k(ids_s, true_i) - 0.02)
+    # the controller actually moved widths (not pinned at spec_max)
+    assert min(st_d.spec_trace) < params.spec_width
+
+
+def test_spec_controller_bounds():
+    ctrl = SpecController(spec_max=8, W=1, max_degree=12)
+    worked = np.ones((2, 3), bool)
+    w = ctrl.update(np.full((2, 3), 20), worked)
+    assert (w == 8).all()                    # fresh frontier: full width
+    for _ in range(8):                       # acceptance collapses ...
+        w = ctrl.update(np.zeros((2, 3)), worked)
+        assert ((w >= 0) & (w <= 8)).all()
+    assert (ctrl.spec_w == 0).all()          # ... width ramps to 0
+    ctrl.reset_rows(np.asarray([[True, False, False],
+                                [False, False, False]]))
+    assert ctrl.spec_w[0, 0] == 8            # fresh query at full width
+    assert ctrl.spec_w[1, 1] == 0
+
+
+def test_stats_shapes_unified(ds):
+    """total_rounds is per-shard (S,) in the sim driver (matching the
+    distributed driver) so consumers never special-case."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    S = geom.num_shards
+    params = EngineParams.lossless(sp, queries.shape[0] // S,
+                                   geom.max_degree)
+    qsh = jnp.asarray(queries.reshape(S, -1, queries.shape[1]))
+    _, _, stats = search_sim(consts, qsh, *entry, params, geom)
+    assert np.asarray(stats["total_rounds"]).shape == (S,)
+    assert (np.asarray(stats["total_rounds"])
+            == np.asarray(stats["total_rounds"])[0]).all()
+
+
+def test_engine_retire_matches_search_sim_finalize(ds):
+    """Stepping rounds manually + engine_retire == search_sim."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    S = geom.num_shards
+    nq = queries.shape[0]
+    params = EngineParams.lossless(sp, nq // S, geom.max_degree)
+    qsh = jnp.asarray(queries.reshape(S, nq // S, -1))
+    ref_i, ref_d, ref_stats = search_sim(consts, qsh, *entry, params, geom)
+
+    stepper = make_stepper(params, geom)
+    state = stepper.init(consts, qsh, *entry)
+    t = 0
+    while (~np.asarray(state.done)).any() and t < sp.rounds_cap:
+        state = stepper.round(consts, state, qsh, params.spec_width)
+        t += 1
+    out_i, out_d, stats = stepper.retire(state)
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(ref_i))
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(ref_d))
+    np.testing.assert_array_equal(np.asarray(stats["rounds"]),
+                                  np.asarray(ref_stats["rounds"]))
+    assert t == int(np.asarray(ref_stats["total_rounds"])[0])
+
+
+def test_stream_kernel_mode_ref_bitexact(ds):
+    """The scheduler composes with the kernel backend: ref mode streams
+    bit-identically to the inline jnp one-shot driver."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    ref_i, ref_d = _oneshot(consts, geom, entry, queries[:16], sp)
+    params = EngineParams.lossless(sp, 4, geom.max_degree,
+                                   kernel_mode="ref")
+    ids, dists, _ = stream_search(consts, geom, params, entry,
+                                  queries[:16], num_slots=4)
+    np.testing.assert_array_equal(ids, ref_i)
+    np.testing.assert_array_equal(dists, ref_d)
