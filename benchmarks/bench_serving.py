@@ -22,15 +22,30 @@ workloads:
 Reported per discipline: slot occupancy, round-normalized throughput
 (queries/round), sustained wall QPS, p50/p95/p99 latency, unique page
 reads, recall. A static ``spec_width`` sweep rides along so the
-controller has a best-static baseline to beat on page reads. Results
-land in machine-readable ``BENCH_serving.json``.
+controller has a best-static baseline to beat on page reads, and a
+``round_chunk`` sweep measures the host-sync model: engine rounds per
+host dispatch (``engine_run_chunk``) vs host dispatches/query and wall
+QPS, on both the sim stepper and (when enough devices are visible) the
+shard_map stepper. Results land in machine-readable
+``BENCH_serving.json``.
 
 ``--smoke`` shrinks the workload and *asserts* the streaming
 invariants — refill occupancy/throughput above frozen, controller page
-reads at or below controller-off at equal recall — so CI fails loudly
-on a scheduling regression.
+reads at or below controller-off at equal recall, and the dispatch
+gate: chunked execution must match per-round queries/round with
+strictly fewer host syncs — so CI fails loudly on a scheduling
+regression.
 """
 from __future__ import annotations
+
+import os
+
+# before any jax import: split the host CPU so the shard_map stepper
+# leg has a real multi-device mesh to run on (no-op if already set;
+# 8 covers --shards above the default 4 — beyond that the leg is
+# skipped with a printed note)
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
 
 import argparse
 import json
@@ -81,14 +96,14 @@ def build_workload(*, n, d, nq, shards, page_size, r, spec_max, seed):
 
 
 def _scenario(consts, geom, params, entry, queries, *, slots, arrivals,
-              dynamic_spec, refill, true_ids, k):
-    # untimed warmup on a slice so sustained_qps excludes jit compiles
-    stream_search(consts, geom, params, entry, queries[:4],
-                  num_slots=slots, dynamic_spec=dynamic_spec,
-                  refill=refill)
+              dynamic_spec, refill, true_ids, k, round_chunk=1,
+              mesh=None):
+    # the scheduler warms the stepper itself (compile_s in the row);
+    # sustained_qps and wall latency measure steady state
     ids, _, st = stream_search(
         consts, geom, params, entry, queries, num_slots=slots,
-        arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill)
+        arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
+        round_chunk=round_chunk, mesh=mesh)
     row = stream_summary(st)
     row["recall"] = round(float(recall_at_k(ids[:, :k], true_ids)), 4)
     return row
@@ -96,7 +111,7 @@ def _scenario(consts, geom, params, entry, queries, *, slots, arrivals,
 
 def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         spec_max=8, L=32, rate=2.0, kernel_mode="jnp", seed=0,
-        smoke=False, out_json="BENCH_serving.json"):
+        round_chunk=1, smoke=False, out_json="BENCH_serving.json"):
     if smoke:
         nq, n, slots, rate = 64, 2048, 4, 0.0
     db, packed, queries = build_workload(
@@ -119,21 +134,50 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
     t0 = time.time()
     scenarios["frozen"] = _scenario(
         consts, geom, p_max, entry, queries, dynamic_spec=False,
-        refill=False, **kw)
+        refill=False, round_chunk=round_chunk, **kw)
     scenarios["refill"] = _scenario(
         consts, geom, p_max, entry, queries, dynamic_spec=False,
-        refill=True, **kw)
+        refill=True, round_chunk=round_chunk, **kw)
     scenarios["dynamic"] = _scenario(
         consts, geom, p_max, entry, queries, dynamic_spec=True,
-        refill=True, **kw)
+        refill=True, round_chunk=round_chunk, **kw)
 
     # static spec sweep (refill on): the controller's best-static bar
     sweep = []
     for spec in sorted({0, spec_max // 2, spec_max}):
         row = _scenario(consts, geom, params_for(spec), entry, queries,
-                        dynamic_spec=False, refill=True, **kw)
+                        dynamic_spec=False, refill=True,
+                        round_chunk=round_chunk, **kw)
         row["spec"] = spec
         sweep.append(row)
+
+    # round_chunk sweep: rounds per host dispatch vs dispatches/query
+    # and wall QPS. refill (continuous admission, the worst case for
+    # chunking: every retirement may seat a pending query) and frozen
+    # (synchronous waves, the paper's computational-storage baseline —
+    # chunks only break on wave boundaries, so dispatches drop ~K x).
+    def chunk_leg(ks, refill, mesh=None):
+        rows = []
+        for K in ks:
+            row = _scenario(consts, geom, p_max, entry, queries,
+                            dynamic_spec=False, refill=refill,
+                            round_chunk=K, mesh=mesh, **kw)
+            rows.append({"round_chunk": K, **row})
+        return rows
+
+    chunk_ks = (1, 8) if smoke else (1, 2, 4, 8, 16)
+    chunk_refill = chunk_leg(chunk_ks, refill=True)
+    chunk_frozen = chunk_leg((1, chunk_ks[-1]), refill=False)
+    import jax
+    chunk_shard = []
+    if jax.device_count() >= shards:
+        from repro.launch.mesh import make_engine_mesh
+        mesh = make_engine_mesh(num=shards)
+        chunk_shard = chunk_leg((1, chunk_ks[-1]), refill=True,
+                                mesh=mesh)
+    else:  # no silent gaps: record why the leg is absent
+        print(f"[shard_map chunk leg skipped: {jax.device_count()} "
+              f"device(s) < {shards} shards]")
 
     emit([[name, s["occupancy"], s["queries_per_round"],
            s["sustained_qps"], s["latency_rounds"]["p50"],
@@ -142,13 +186,32 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
          ["discipline", "occupancy", "q/round", "qps", "p50_rounds",
           "p99_rounds", "pages", "recall"],
          f"streaming disciplines (nq={nq} slots={shards}x{slots} "
-         f"rate={rate} spec_max={spec_max})")
+         f"rate={rate} spec_max={spec_max} round_chunk={round_chunk})")
     emit([[row["spec"], row["pages_unique"], row["recall"],
            row["queries_per_round"]] for row in sweep],
          ["spec_width", "pages", "recall", "q/round"],
          "static speculation sweep (refill on)")
+    for label, leg in (("refill", chunk_refill), ("frozen", chunk_frozen),
+                       ("shard_map refill", chunk_shard)):
+        if leg:
+            emit([[row["round_chunk"], row["host_dispatches"],
+                   row["dispatches_per_query"], row["rounds_per_dispatch"],
+                   row["queries_per_round"], row["sustained_qps"]]
+                  for row in leg],
+                 ["chunk", "dispatches", "disp/query", "rounds/disp",
+                  "q/round", "qps"],
+                 f"round-chunk sweep ({label} stepper leg)")
 
     checks = {
+        "chunk_dispatch_reduction_refill": round(
+            chunk_refill[0]["host_dispatches"]
+            / max(chunk_refill[-1]["host_dispatches"], 1), 3),
+        "chunk_dispatch_reduction_frozen": round(
+            chunk_frozen[0]["host_dispatches"]
+            / max(chunk_frozen[-1]["host_dispatches"], 1), 3),
+        "chunk_qpr_ratio": round(
+            chunk_refill[-1]["queries_per_round"]
+            / max(chunk_refill[0]["queries_per_round"], 1e-9), 4),
         "occupancy_gain": round(scenarios["refill"]["occupancy"]
                                 / max(scenarios["frozen"]["occupancy"],
                                       1e-9), 3),
@@ -168,11 +231,15 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
     results = {
         "config": {"nq": nq, "n": n, "d": d, "shards": shards,
                    "slots": slots, "rate": rate, "spec_max": spec_max,
-                   "L": L, "kernel_mode": kernel_mode, "smoke": smoke,
+                   "L": L, "kernel_mode": kernel_mode,
+                   "round_chunk": round_chunk, "smoke": smoke,
                    "wall_s": round(time.time() - t0, 1),
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S")},
         "scenarios": scenarios,
         "static_spec_sweep": sweep,
+        "round_chunk_sweep": {"refill": chunk_refill,
+                              "frozen": chunk_frozen,
+                              "shard_map": chunk_shard},
         "checks": checks,
     }
     if out_json:
@@ -198,6 +265,24 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         assert dy["recall"] >= re_["recall"] - 0.02, (
             f"controller must hold recall within 2pt of controller-off: "
             f"{dy['recall']} vs {re_['recall']}")
+        # dispatch gate: device-paced chunks must match the per-round
+        # schedule's round-throughput while syncing the host strictly
+        # less (the whole point of engine_run_chunk)
+        for leg in (chunk_refill, chunk_frozen, chunk_shard):
+            if not leg:
+                continue
+            pr, ch = leg[0], leg[-1]
+            assert ch["queries_per_round"] >= pr["queries_per_round"], (
+                f"chunked (K={ch['round_chunk']}) must not lose "
+                f"round-throughput vs per-round: "
+                f"{ch['queries_per_round']} vs {pr['queries_per_round']}")
+            assert ch["host_dispatches"] < pr["host_dispatches"], (
+                f"chunked (K={ch['round_chunk']}) must sync the host "
+                f"strictly less than per-round: "
+                f"{ch['host_dispatches']} vs {pr['host_dispatches']}")
+            assert ch["total_rounds"] == pr["total_rounds"], (
+                f"chunking must not change the engine-round schedule: "
+                f"{ch['total_rounds']} vs {pr['total_rounds']}")
     return results
 
 
@@ -214,13 +299,17 @@ def main(argv=None):
     ap.add_argument("--spec-max", type=int, default=8)
     ap.add_argument("--kernel-mode", default="jnp",
                     choices=["auto", "pallas", "interpret", "ref", "jnp"])
+    ap.add_argument("--round-chunk", type=int, default=1,
+                    help="rounds per device dispatch for the headline "
+                         "discipline scenarios (the chunk sweep always "
+                         "runs; 1 keeps the host-paced baseline)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
     run(nq=args.queries, n=args.n, shards=args.shards, slots=args.slots,
         rate=args.rate, spec_max=args.spec_max,
-        kernel_mode=args.kernel_mode, seed=args.seed, smoke=args.smoke,
-        out_json=args.out)
+        kernel_mode=args.kernel_mode, round_chunk=args.round_chunk,
+        seed=args.seed, smoke=args.smoke, out_json=args.out)
     return 0
 
 

@@ -478,24 +478,77 @@ def search_sim(consts, queries, entry_vec, entry_norm, entry_id,
 
 
 # ---------------------------------------------------------------------------
+# Dynamic speculation — the pure per-round width rule.
+# ---------------------------------------------------------------------------
+def spec_update(spec_w, hit, peak, accepted, worked, cfg):
+    """One controller step of the paper's dynamic speculative search
+    (§V-B), as pure jnp so it runs both on the host (SpecController.update)
+    and inside :func:`engine_run_chunk`'s round loop.
+
+    Ordering contract: ``spec_w`` must be the widths that were *used* in
+    the round that produced ``accepted`` — the per-query acceptance rate
+
+        hit_q = accepted_q / (W * (max_degree + spec_w_used_q))
+
+    normalizes this round's accepted proposals by the adjacency (+
+    speculation) entries actually served at those widths. The returned
+    widths apply to the *next* round.
+
+    ``cfg`` is ``(spec_max, W, max_degree, floor, ceil, ema)`` — see
+    :class:`repro.core.scheduler.SpecController`. All math is float32 so
+    the host and in-jit paths are bit-identical.
+    """
+    spec_max, w_sel, max_degree, floor, ceil, ema = cfg
+    spec_max = jnp.asarray(spec_max, jnp.int32)
+    served = (jnp.asarray(w_sel, jnp.int32)
+              * (jnp.asarray(max_degree, jnp.int32) + spec_w))
+    floor = jnp.asarray(floor, jnp.float32)
+    ceil = jnp.asarray(ceil, jnp.float32)
+    ema = jnp.asarray(ema, jnp.float32)
+    h = (accepted.astype(jnp.float32)
+         / jnp.maximum(served, 1).astype(jnp.float32))
+    first = worked & (hit < 0)
+    upd = worked & ~first
+    hit = jnp.where(first, h,
+                    jnp.where(upd, ema * h + (1.0 - ema) * hit, hit))
+    peak = jnp.maximum(peak, hit)
+    ratio = hit / jnp.maximum(peak, 1e-9)
+    frac = jnp.clip((ratio - floor)
+                    / jnp.maximum(ceil - floor, 1e-9), 0.0, 1.0)
+    width = jnp.rint(spec_max.astype(jnp.float32) * frac).astype(jnp.int32)
+    return jnp.where(worked, width, spec_w), hit, peak
+
+
+# ---------------------------------------------------------------------------
 # Round-stepper API — the streaming scheduler's engine surface.
 #
 # ``engine_init`` / ``engine_round`` / ``engine_admit`` / ``engine_retire``
 # operate on an EngineState whose shard axis leads every leaf, so the
 # state can persist across jitted calls: a host-side loop owns the round
 # counter, retires finished slot rows and refills them with fresh queries
-# between rounds (core/scheduler.py). ``make_stepper`` bundles them, and
-# swaps the round's communication for shard_map lax.all_to_all when given
-# a mesh — the sim and distributed paths step through the same stages.
+# between rounds (core/scheduler.py). ``engine_run_chunk`` moves that
+# inner loop into jit: up to K rounds run as one device-paced while_loop
+# (dynamic speculation updating per round in-jit), so the host syncs
+# only at chunk boundaries. ``make_stepper`` bundles them, and swaps the
+# round's communication for shard_map lax.all_to_all when given a mesh —
+# the sim and distributed paths step through the same stages.
 # ---------------------------------------------------------------------------
 class EngineStepper(NamedTuple):
-    """(init, round, admit, retire) closures over static params/geom."""
+    """(init, round, admit, retire, run_chunk) closures over static
+    params/geom; ``round_chunk`` records the static K ``run_chunk`` was
+    compiled for (its budget is clamped to that K)."""
 
-    init: callable     # (consts, queries, evec, enorm, eid) -> EngineState
-    round: callable    # (consts, state, queries, spec_w) -> EngineState
-    admit: callable    # (state, queries, admit_mask, new_q, evec, enorm,
-                       #  eid) -> (EngineState, queries')
-    retire: callable   # (state) -> (ids, dists, per-slot stats)
+    init: callable       # (consts, queries, evec, enorm, eid) -> EngineState
+    round: callable      # (consts, state, queries, spec_w) -> EngineState
+    admit: callable      # (state, queries, admit_mask, new_q, evec, enorm,
+                         #  eid) -> (EngineState, queries')
+    retire: callable     # (state) -> (ids, dists, per-slot stats)
+    run_chunk: callable = None
+                         # (consts, state, queries, spec_state, spec_cfg,
+                         #  budget, stop_on_finish, dynamic=False) ->
+                         #  (EngineState, spec_state', steps,
+                         #   live_cnt (K,), width_sum (K,))
+    round_chunk: int = 1
 
 
 @functools.partial(jax.jit, static_argnames=("params", "geom"))
@@ -566,18 +619,127 @@ def engine_retire(state: EngineState, k: int):
     return jax.vmap(lambda s: _finalize(s, k))(state)
 
 
+def _chunk_round(carry, round_fn, rounds_cap, dynamic, spec_cfg):
+    """One in-chunk round, shared by the sim and shard_map while_loop
+    bodies (sim-vs-shard_map bit-identity depends on this being the one
+    place the loop-body semantics live): record the per-round traces,
+    step the round, park rows hitting the per-query round cap at the
+    exact boundary the per-round scheduler would retire them, and — in
+    dynamic mode — step the speculation widths with the served widths
+    (ordering contract of :func:`spec_update`)."""
+    st, sw, hi, pk, prev_nd, j, lc, ws = carry
+    worked = ~st.done
+    lc = lc.at[j].set(worked.sum().astype(jnp.int32))
+    ws = ws.at[j].set(jnp.where(worked, sw, 0).sum().astype(jnp.int32))
+    st = round_fn(st, sw)
+    st = st._replace(done=st.done | (st.rounds >= rounds_cap))
+    if dynamic:
+        sw, hi, pk = spec_update(sw, hi, pk, st.n_dist - prev_nd,
+                                 worked, spec_cfg)
+    return st, sw, hi, pk, st.n_dist, j + 1, lc, ws
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "geom", "K", "dynamic"))
+def engine_run_chunk(consts, state: EngineState, queries, spec_state,
+                     spec_cfg, budget, stop_on_finish,
+                     params: EngineParams, geom: EngineGeom, K: int,
+                     dynamic: bool = False):
+    """Run up to ``K`` engine rounds inside one jit call (sim comm).
+
+    The paper's near-data model keeps the host off the round-to-round
+    critical path (§V): instead of re-entering Python after every
+    Allocating->Searching->Gathering round, the scheduler launches a
+    *chunk* and the device paces itself through a ``lax.while_loop``.
+    Per-round semantics are identical to K calls of :func:`engine_round`
+    with the host controller in between:
+
+      * rows reaching ``rounds_cap`` are parked (``done=True``) at the
+        same round boundary the per-round scheduler would retire them —
+        a capped row never works a single extra round;
+      * with ``dynamic=True`` the speculation widths step through
+        :func:`spec_update` after every round, so per-query widths keep
+        adapting *inside* the chunk (``spec_state`` is the controller's
+        ``(spec_w, hit, peak)`` triple, ``spec_cfg`` its parameters).
+
+    Early exit, both traced (no recompiles):
+
+      * ``budget`` (i32 <= K) bounds the chunk — the host caps it to the
+        next pending arrival so admission timing stays exact;
+      * every live row finishing mid-chunk ends the chunk;
+      * ``stop_on_finish`` (bool) ends the chunk as soon as *any* row
+        that was live at entry finishes — the host sets it whenever
+        unadmitted queries remain, so a freed slot is refilled on
+        exactly the round the per-round scheduler would have.
+
+    Returns ``(state, spec_state', steps, live_cnt, width_sum)`` where
+    ``steps`` is the number of rounds actually run and ``live_cnt`` /
+    ``width_sum`` are (K,) per-round traces (live rows, summed widths
+    over live rows) from which the host reconstructs exact occupancy and
+    speculation traces without per-round syncs.
+    """
+    qq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
+    spec_w, hit, peak = spec_state
+    spec_w = jnp.broadcast_to(jnp.asarray(spec_w, jnp.int32),
+                              queries.shape[:2])
+    live0 = ~state.done
+    budget = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(K))
+    stop = jnp.asarray(stop_on_finish, bool)
+
+    def round_fn(st, sw):
+        return _sim_round(st, consts, queries, qq, sw, params, geom)
+
+    def cond(carry):
+        st, _, _, _, _, j, _, _ = carry
+        fin_any = (st.done & live0).any()
+        return (j < budget) & (~st.done).any() & ~(stop & fin_any)
+
+    def body(carry):
+        return _chunk_round(carry, round_fn, params.search.rounds_cap,
+                            dynamic, spec_cfg)
+
+    zeros_k = jnp.zeros((K,), jnp.int32)
+    state, spec_w, hit, peak, _, steps, live_cnt, width_sum = \
+        jax.lax.while_loop(cond, body,
+                           (state, spec_w, hit, peak, state.n_dist,
+                            jnp.int32(0), zeros_k, zeros_k))
+    return state, (spec_w, hit, peak), steps, live_cnt, width_sum
+
+
+def _shard_map_fn(fn, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    # jax < 0.6: shard_map lives in experimental, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
+
+
 def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
-                 axis_name: str = "lun") -> EngineStepper:
-    """Bundle the stepper closures; with a mesh, the round communicates
-    via shard_map lax.all_to_all instead of the sim swapaxes (init,
-    admit and retire are per-row math with no communication, so the sim
-    forms serve both paths)."""
+                 axis_name: str = "lun",
+                 round_chunk: int = 1) -> EngineStepper:
+    """Bundle the stepper closures; with a mesh, the round/chunk
+    communicates via shard_map lax.all_to_all instead of the sim
+    swapaxes (init, admit and retire are per-row math with no
+    communication, so the sim forms serve both paths). ``round_chunk``
+    is the static K of :func:`engine_run_chunk` — the most rounds one
+    ``run_chunk`` dispatch may run before the host is consulted."""
+    K = max(1, int(round_chunk))
     init = functools.partial(engine_init, params=params, geom=geom)
     admit = functools.partial(engine_admit, params=params, geom=geom)
     retire = functools.partial(engine_retire, k=params.search.k)
     if mesh is None:
         rnd = functools.partial(engine_round, params=params, geom=geom)
-        return EngineStepper(init, rnd, admit, retire)
+
+        def run_chunk(consts, state, queries, spec_state, spec_cfg,
+                      budget, stop_on_finish, dynamic=False):
+            return engine_run_chunk(consts, state, queries, spec_state,
+                                    spec_cfg, budget, stop_on_finish,
+                                    params=params, geom=geom, K=K,
+                                    dynamic=dynamic)
+
+        return EngineStepper(init, rnd, admit, retire, run_chunk, K)
 
     from jax.sharding import PartitionSpec as P
 
@@ -586,6 +748,7 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
             lambda x: jax.lax.all_to_all(x, axis_name, 0, 0), tree)
 
     nleaves = len(EngineState._fields)
+    sp = params.search
 
     def local_round(db, vnorm, adj, pref, blk_perm, q, spec_w, *leaves):
         lc = {"db": db[0], "vnorm": vnorm[0], "adj": adj[0],
@@ -599,14 +762,7 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
 
     in_specs = (P(axis_name),) * 7 + (P(axis_name),) * nleaves
     out_specs = (P(axis_name),) * nleaves
-    if hasattr(jax, "shard_map"):
-        f = jax.shard_map(local_round, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-    else:  # jax < 0.6
-        from jax.experimental.shard_map import shard_map as _shard_map
-        f = _shard_map(local_round, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_rep=False)
-    f = jax.jit(f)
+    f = jax.jit(_shard_map_fn(local_round, mesh, in_specs, out_specs))
 
     def rnd(consts, state, queries, spec_w):
         spec_w = jnp.broadcast_to(jnp.asarray(spec_w, jnp.int32),
@@ -616,7 +772,78 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
                    spec_w, *state)
         return EngineState(*leaves)
 
-    return EngineStepper(init, rnd, admit, retire)
+    # -- chunked round loop under shard_map: the while_loop's exit tests
+    # are psum-reduced so every shard steps in lockstep, exactly like
+    # search_distributed's global-active while_loop.
+    def make_local_chunk(dynamic):
+        def local_chunk(db, vnorm, adj, pref, blk_perm, q, spec_w, hit,
+                        peak, cfg, budget, stop, *leaves):
+            lc = {"db": db[0], "vnorm": vnorm[0], "adj": adj[0],
+                  "pref": pref[0], "blk_perm": blk_perm[0]}
+            ql = q[0]
+            lc["queries"] = ql
+            lc["qq"] = jnp.sum(ql.astype(jnp.float32) ** 2, axis=-1)
+            state = EngineState(*(leaf[0] for leaf in leaves))
+            sw, hi, pk = spec_w[0], hit[0], peak[0]
+            live0 = ~state.done
+            bud = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(K))
+
+            def round_fn(st, sw):
+                return _round(st, lc, params, geom, a2a, sw)
+
+            def gsum(x):
+                return jax.lax.psum(x.sum().astype(jnp.int32), axis_name)
+
+            def cond(carry):
+                _, _, _, _, _, j, active, fin, _, _ = carry
+                return ((j < bud) & (active > 0)
+                        & ~(stop.astype(bool) & (fin > 0)))
+
+            def body(carry):
+                st, sw, hi, pk, prev_nd, j, _, _, lcnt, wsum = carry
+                st, sw, hi, pk, prev_nd, j, lcnt, wsum = _chunk_round(
+                    (st, sw, hi, pk, prev_nd, j, lcnt, wsum), round_fn,
+                    sp.rounds_cap, dynamic, cfg)
+                # globally-reduced exit tests keep the shards in lockstep
+                return (st, sw, hi, pk, prev_nd, j,
+                        gsum(~st.done), gsum(st.done & live0), lcnt, wsum)
+
+            zeros_k = jnp.zeros((K,), jnp.int32)
+            carry = (state, sw, hi, pk, state.n_dist, jnp.int32(0),
+                     gsum(~state.done), jnp.int32(0), zeros_k, zeros_k)
+            st, sw, hi, pk, _, steps, _, _, lcnt, wsum = \
+                jax.lax.while_loop(cond, body, carry)
+            return (tuple(leaf[None] for leaf in st), sw[None], hi[None],
+                    pk[None], steps[None], lcnt[None], wsum[None])
+
+        return local_chunk
+
+    chunk_in = ((P(axis_name),) * 9 + (P(),) * 3
+                + (P(axis_name),) * nleaves)
+    chunk_out = ((P(axis_name),) * nleaves, P(axis_name), P(axis_name),
+                 P(axis_name), P(axis_name), P(axis_name), P(axis_name))
+    chunk_fns = {}
+    for dyn in (False, True):
+        chunk_fns[dyn] = jax.jit(_shard_map_fn(
+            make_local_chunk(dyn), mesh, chunk_in, chunk_out))
+
+    def run_chunk(consts, state, queries, spec_state, spec_cfg, budget,
+                  stop_on_finish, dynamic=False):
+        sw, hi, pk = spec_state
+        sw = jnp.broadcast_to(jnp.asarray(sw, jnp.int32),
+                              queries.shape[:2])
+        cfg = tuple(jnp.asarray(c) for c in spec_cfg)
+        leaves, sw, hi, pk, steps, lcnt, wsum = chunk_fns[bool(dynamic)](
+            consts["db"], consts["vnorm"], consts["adj"], consts["pref"],
+            consts["blk_perm"], queries, sw, hi, pk, cfg,
+            jnp.asarray(budget, jnp.int32), jnp.asarray(stop_on_finish),
+            *state)
+        # steps is replicated (lockstep cond); traces are per-shard
+        # partial sums — reduce on the host side of the boundary
+        return (EngineState(*leaves), (sw, hi, pk), steps[0],
+                lcnt.sum(axis=0), wsum.sum(axis=0))
+
+    return EngineStepper(init, rnd, admit, retire, run_chunk, K)
 
 
 def search_distributed(consts, queries, entry_vec, entry_norm, entry_id,
@@ -660,13 +887,7 @@ def search_distributed(consts, queries, entry_vec, entry_norm, entry_id,
     in_specs = (P(axis_name), P(axis_name), P(axis_name), P(axis_name),
                 P(axis_name), P(axis_name), P(), P(), P())
     out_specs = (P(axis_name), P(axis_name), P(axis_name))
-    if hasattr(jax, "shard_map"):
-        f = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, check_vma=False)
-    else:  # jax < 0.6: shard_map lives in experimental, check_rep spelling
-        from jax.experimental.shard_map import shard_map as _shard_map
-        f = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_rep=False)
+    f = _shard_map_fn(local_fn, mesh, in_specs, out_specs)
     return jax.jit(f)(consts["db"], consts["vnorm"], consts["adj"],
                       consts["pref"], consts["blk_perm"], queries,
                       entry_vec, entry_norm, entry_id)

@@ -35,7 +35,10 @@ def qps(num_queries: int, seconds: float) -> float:
 # Streaming-scheduler metrics (core/scheduler.py, bench_serving)
 # ---------------------------------------------------------------------------
 def latency_percentiles(latencies) -> dict:
-    """p50/p95/p99/mean of a latency sample (any unit)."""
+    """p50/p95/p99/mean of a latency sample (any unit).
+
+    An empty sample (a run that retired zero queries) returns an all-
+    zero summary instead of letting ``np.percentile`` raise."""
     lat = np.asarray(latencies, np.float64)
     if lat.size == 0:
         return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
@@ -58,9 +61,14 @@ def slot_occupancy(live_counts, num_slots: int) -> float:
 def stream_summary(stats) -> dict:
     """Aggregate a scheduler StreamStats into the serving report:
     occupancy, per-query latency percentiles (rounds + wall), round-
-    normalized throughput and sustained wall QPS."""
+    normalized throughput, sustained wall QPS and the host-sync model
+    (engine_run_chunk dispatches, one-time compile seconds — ``wall_s``
+    and per-query wall latency exclude the compile, which is reported
+    separately). Safe on a run that retired zero queries: every
+    percentile block is zeroed rather than crashing on an empty array."""
     res = stats.results
     n = len(res)
+    dispatches = getattr(stats, "host_dispatches", 0)
     return {
         "queries": n,
         "total_rounds": stats.total_rounds,
@@ -74,6 +82,11 @@ def stream_summary(stats) -> dict:
             [r.wall_latency_s for r in res]).items()},
         "queries_per_round": round(n / max(stats.total_rounds, 1), 3),
         "sustained_qps": round(qps(n, stats.wall_s), 1),
+        "host_dispatches": dispatches,
+        "dispatches_per_query": round(dispatches / n, 3) if n else 0.0,
+        "rounds_per_dispatch": round(
+            stats.total_rounds / dispatches, 3) if dispatches else 0.0,
+        "compile_s": round(float(getattr(stats, "compile_s", 0.0)), 3),
         "pages_unique": stats.pages_unique,
         "items_recv": stats.items_recv,
         "drops_b": stats.drops_b,

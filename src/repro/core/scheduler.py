@@ -10,33 +10,51 @@ every remaining round's distance/merge/all_to_all work, and
 ``spec_width`` is a static knob.
 
 This module closes the gap with three host-side pieces over the
-stepper (`engine_init / engine_round / engine_admit / engine_retire`):
+stepper (`engine_init / engine_run_chunk / engine_admit /
+engine_retire`):
 
   * **slot pool + continuous admission** — a fixed (S, Qs) pool of query
-    slots. Each round, rows whose query finished are *retired* (results
-    emitted with per-query latency) and refilled from a pending queue
-    via ``engine_admit`` (slot compaction by replacement): whenever the
-    queue is non-empty, every row of every round's phase work is a live
-    query, never padding.
+    slots. At every chunk boundary, rows whose query finished are
+    *retired* (results emitted with per-query latency) and refilled
+    from a pending queue via ``engine_admit`` (slot compaction by
+    replacement): whenever the queue is non-empty, every row of every
+    round's phase work is a live query, never padding.
   * **dynamic speculation** — a :class:`SpecController` watches the
-    per-round deltas of the ``props_sent``/``pages_unique`` counters the
-    state already carries and adjusts the traced ``spec_w`` argument of
-    ``engine_round`` between 0 and the static ``params.spec_width``:
-    wide while the frontier is fresh (speculated 2nd-order neighbors
-    mostly survive the bloom filter), narrow as acceptance collapses
-    near convergence — cutting page reads the late speculation would
-    have wasted.
+    per-round deltas of the per-query ``n_dist`` counter the state
+    already carries and adjusts the traced ``spec_w`` argument between
+    0 and the static ``params.spec_width``: wide while the frontier is
+    fresh (speculated 2nd-order neighbors mostly survive the bloom
+    filter), narrow as acceptance collapses near convergence — cutting
+    page reads the late speculation would have wasted. The update rule
+    is pure jnp (:func:`repro.core.engine.spec_update`) so it keeps
+    stepping per round *inside* a chunk.
   * **open-loop arrivals** — queries carry arrival *rounds* (the
     simulation clock is engine rounds); the scheduler admits a query
     once its arrival round has passed and a slot is free, and records
     wait + service latency per query.
 
+**Host-sync model** (``round_chunk``): the inner loop is device-paced.
+Each dispatch of ``engine_run_chunk`` runs up to ``round_chunk`` engine
+rounds in one jit'd ``while_loop``; the host syncs ``done/rounds/
+n_dist`` only at chunk boundaries. The schedule stays *exactly* the
+per-round schedule because the chunk exits early in-jit whenever
+retiring could matter: when every live row finishes, and — whenever
+unadmitted queries remain (``stop_on_finish``) — on the first round any
+row finishes, so a freed slot is refilled on exactly the round the
+per-round scheduler (``round_chunk=1``) would have. Retirement
+accounting is exact regardless of when the host looks: ``retire_round =
+admit_round + rounds`` reads the per-row ``rounds`` counter, and the
+chunk returns per-round live-count/width traces so occupancy and
+speculation traces are reconstructed per round, not per boundary. The
+only asynchrony left on the host is admission itself (see ROADMAP:
+in-jit admission).
+
 Per-query results are **bit-identical** to the one-shot drivers under
 lossless capacities: every stage's per-row math depends only on that
 row's own state, so which queries co-occupy the pool — and when they
 were admitted — cannot change a query's trajectory
-(tests/test_scheduler.py property-tests this over arrival orders and
-slot counts).
+(tests/test_scheduler.py property-tests this over arrival orders, slot
+counts and round_chunk sizes).
 
 ``refill=False`` degrades the scheduler to the frozen-batch discipline
 (admit only into an all-free pool, like the fixed synchronous batches
@@ -49,11 +67,12 @@ import dataclasses
 import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (EngineGeom, EngineParams, EngineStepper,
-                               make_stepper)
+                               make_stepper, spec_update)
 from repro.core.metrics import slot_occupancy
 
 INVALID = -1
@@ -69,20 +88,33 @@ class SpecController:
     engine's per-query ``n_dist`` counter) and derives the query's own
     acceptance rate
 
-        hit_q = accepted_q / (W * (R + spec_w_q))
+        hit_q = accepted_q / (W * (max_degree + spec_w_used_q))
 
-    — the fraction of that query's served adjacency (+ speculation)
-    entries that survived dedup + bloom filtering. The rate is
-    *self-normalizing*: each query's smoothed hit is compared against
-    its own running peak, so the policy transfers across datasets whose
-    absolute acceptance levels differ. Width follows the normalized
-    rate linearly between ``floor`` and ``ceil``: a fresh query (ratio
-    near 1) keeps the full ``spec_max`` — preserving the cross-round
-    page coalescing speculation buys early — while a converging query,
-    whose speculation mostly re-proposes bloom-visited vertices or
-    fetches pages it will never rank, ramps down to 0. The engine masks
-    each query's prefetch columns beyond its current width, so widths
-    move per round without recompiling.
+    where ``W * (max_degree + spec_w_used_q)`` is the number of
+    adjacency (+ speculation) entries the engine actually served that
+    query in the round — so ``hit_q`` is the fraction that survived
+    dedup + bloom filtering. **Ordering contract:** ``update`` must see
+    the widths that were *used* in the round that produced ``accepted``
+    — it reads ``self.spec_w`` *before* overwriting it, and the in-jit
+    port (:func:`repro.core.engine.spec_update`, called per round
+    inside ``engine_run_chunk``) takes the used widths as an explicit
+    argument for the same reason. The rate is *self-normalizing*: each
+    query's smoothed hit is compared against its own running peak, so
+    the policy transfers across datasets whose absolute acceptance
+    levels differ. Width follows the normalized rate linearly between
+    ``floor`` and ``ceil``: a fresh query (ratio near 1) keeps the full
+    ``spec_max`` — preserving the cross-round page coalescing
+    speculation buys early — while a converging query, whose
+    speculation mostly re-proposes bloom-visited vertices or fetches
+    pages it will never rank, ramps down to 0. The engine masks each
+    query's prefetch columns beyond its current width, so widths move
+    per round without recompiling.
+
+    The update math itself lives in :func:`repro.core.engine.
+    spec_update` (pure jnp, float32) — this class is the host-side
+    mirror that carries ``(spec_w, hit, peak)`` across chunk boundaries
+    and resets rows at admission, guaranteeing the per-round
+    (``round_chunk=1``) and in-chunk controllers are bit-identical.
     """
 
     spec_max: int
@@ -95,11 +127,18 @@ class SpecController:
     _hit: np.ndarray = dataclasses.field(default=None, repr=False)
     _peak: np.ndarray = dataclasses.field(default=None, repr=False)
 
+    @property
+    def cfg(self):
+        """The static rule parameters, dtyped for the traced jnp rule."""
+        return (np.int32(self.spec_max), np.int32(self.W),
+                np.int32(self.max_degree), np.float32(self.floor),
+                np.float32(self.ceil), np.float32(self.ema))
+
     def _ensure(self, shape):
         if self.spec_w is None or self.spec_w.shape != shape:
             self.spec_w = np.full(shape, self.spec_max, np.int32)
-            self._hit = np.full(shape, -1.0)
-            self._peak = np.zeros(shape)
+            self._hit = np.full(shape, -1.0, np.float32)
+            self._peak = np.zeros(shape, np.float32)
 
     def reset_rows(self, mask: np.ndarray):
         """Fresh queries restart at full width (called at admission)."""
@@ -108,24 +147,36 @@ class SpecController:
         self._hit[mask] = -1.0
         self._peak[mask] = 0.0
 
+    def state(self):
+        return (jnp.asarray(self.spec_w), jnp.asarray(self._hit),
+                jnp.asarray(self._peak))
+
+    def store(self, spec_state):
+        """Adopt the post-chunk controller state from the device."""
+        sw, hi, pk = spec_state
+        # np.array: device buffers give read-only views; reset_rows
+        # mutates these in place at admission
+        self.spec_w = np.array(sw, np.int32)
+        self._hit = np.array(hi, np.float32)
+        self._peak = np.array(pk, np.float32)
+
     def update(self, accepted: np.ndarray, worked: np.ndarray) -> np.ndarray:
         """accepted: (S, Qs) this-round accepted proposals per slot;
-        worked: (S, Qs) rows that were live this round."""
-        self._ensure(accepted.shape)
-        served = self.W * (self.max_degree + self.spec_w)
-        hit = accepted / np.maximum(served, 1)
-        first = worked & (self._hit < 0)
-        self._hit[first] = hit[first]
-        upd = worked & ~first
-        self._hit[upd] = (self.ema * hit[upd]
-                          + (1 - self.ema) * self._hit[upd])
-        self._peak = np.maximum(self._peak, self._hit)
-        ratio = self._hit / np.maximum(self._peak, 1e-9)
-        frac = np.clip((ratio - self.floor) / max(self.ceil - self.floor,
-                                                  1e-9), 0.0, 1.0)
-        width = np.rint(self.spec_max * frac).astype(np.int32)
-        self.spec_w[worked] = width[worked]
+        worked: (S, Qs) rows that were live this round. ``self.spec_w``
+        must still hold the widths used in that round (see class doc)."""
+        self._ensure(np.shape(accepted))
+        sw, hi, pk = spec_update(
+            jnp.asarray(self.spec_w), jnp.asarray(self._hit),
+            jnp.asarray(self._peak), jnp.asarray(accepted, jnp.int32),
+            jnp.asarray(worked, bool), self.cfg)
+        self.store((sw, hi, pk))
         return self.spec_w
+
+
+# cfg placeholder handed to the chunk when no controller is attached
+# (dynamic=False never reads it, but the traced signature needs leaves)
+_NULL_CFG = (np.int32(0), np.int32(1), np.int32(1),
+             np.float32(0.0), np.float32(1.0), np.float32(0.5))
 
 
 @dataclasses.dataclass
@@ -163,23 +214,33 @@ class StreamStats:
     items_recv: int
     props_sent: int
     drops_b: int
-    spec_trace: list          # spec_w used each round
-    wall_s: float
+    spec_trace: list          # mean spec_w over live rows, each round
+    wall_s: float             # steady-state wall clock (excl. compile)
+    host_dispatches: int = 0  # engine_run_chunk launches (host syncs)
+    compile_s: float = 0.0    # one-time stepper warmup/compile seconds
 
     def by_qid(self):
         return {r.qid: r for r in self.results}
 
 
 class StreamScheduler:
-    """Continuous-batching scheduler over a fixed (S, Qs) slot pool."""
+    """Continuous-batching scheduler over a fixed (S, Qs) slot pool.
+
+    ``round_chunk`` sets how many engine rounds one device dispatch may
+    run before the host is consulted (see the module docstring's
+    host-sync model); any value produces the exact per-round schedule.
+    """
 
     def __init__(self, consts, geom: EngineGeom, params: EngineParams,
                  entry, num_slots: int, mesh=None, axis_name: str = "lun",
                  controller: Optional[SpecController] = None,
-                 refill: bool = True,
+                 refill: bool = True, round_chunk: int = 1,
                  stepper: Optional[EngineStepper] = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if round_chunk < 1:
+            raise ValueError(
+                f"round_chunk must be >= 1, got {round_chunk}")
         self.consts = consts
         self.geom = geom
         self.params = params
@@ -187,8 +248,19 @@ class StreamScheduler:
         self.num_slots = num_slots               # per shard
         self.controller = controller
         self.refill = refill
+        self.round_chunk = round_chunk
         self.stepper = stepper or make_stepper(params, geom, mesh=mesh,
-                                               axis_name=axis_name)
+                                               axis_name=axis_name,
+                                               round_chunk=round_chunk)
+        if self.stepper.run_chunk is None:
+            raise ValueError("stepper lacks a run_chunk stage — build it "
+                             "via make_stepper(..., round_chunk=K)")
+        if self.stepper.round_chunk < round_chunk:
+            # engine_run_chunk clamps its budget to the stepper's own
+            # static K; a smaller K would silently degrade to per-round
+            raise ValueError(
+                f"stepper was compiled for round_chunk="
+                f"{self.stepper.round_chunk} < requested {round_chunk}")
         self.S = geom.num_shards
 
     # -- host-side pool bookkeeping -----------------------------------------
@@ -200,6 +272,37 @@ class StreamScheduler:
         state = state._replace(done=jnp.ones((S, Qs), bool))
         return state, queries
 
+    def _spec_inputs(self, shape):
+        """(spec_state, cfg, dynamic) for the chunk: the controller's
+        mirrors, or a constant-width triple when no controller."""
+        if self.controller is not None:
+            self.controller._ensure(shape)
+            return self.controller.state(), self.controller.cfg, True
+        if getattr(self, "_static_spec", None) is None:
+            w = jnp.full(shape, self.params.spec_width, jnp.int32)
+            z = jnp.zeros(shape, jnp.float32)
+            self._static_spec = (w, z, z)
+        return self._static_spec, _NULL_CFG, False
+
+    def _warmup(self, state, qbuf):
+        """Compile admit/run_chunk/retire on shape-matched dummies so
+        ``wall_s`` and the first queries' wall latency measure steady
+        state, not the one-time jit compile (mirrors serve.py's
+        prefill/decode warmup). Returns the seconds spent."""
+        S, Qs = self.S, self.num_slots
+        t0 = time.time()
+        spec_state, cfg, dyn = self._spec_inputs((S, Qs))
+        zmask = jnp.zeros((S, Qs), bool)
+        wstate, wq = self.stepper.admit(state, qbuf, zmask, qbuf,
+                                        *self.entry)
+        # the pool is all-parked, so the while_loop body compiles but
+        # runs zero rounds — values are untouched and discarded anyway
+        out = self.stepper.run_chunk(self.consts, wstate, wq, spec_state,
+                                     cfg, 1, False, dynamic=dyn)
+        ids, dists, _ = self.stepper.retire(wstate)
+        jax.block_until_ready((out[0].done, ids, dists))
+        return time.time() - t0
+
     def run(self, queries: np.ndarray,
             arrivals: Optional[np.ndarray] = None) -> StreamStats:
         """Serve ``queries`` (N, d); ``arrivals`` are arrival rounds
@@ -209,15 +312,16 @@ class StreamScheduler:
         arrivals = (np.zeros(N, np.int64) if arrivals is None
                     else np.asarray(arrivals, np.int64))
         order = np.argsort(arrivals, kind="stable")
-        rounds_cap = self.params.search.rounds_cap
         S, Qs = self.S, self.num_slots
+        K = self.round_chunk
         stepped = 0                                   # engine rounds run
+        dispatches = 0                                # run_chunk launches
 
         state, qbuf = self._fresh_pool(d)
+        compile_s = self._warmup(state, qbuf)
         owner = np.full((S, Qs), INVALID, np.int64)   # slot -> qid
         admit_t = np.zeros((S, Qs), np.int64)
         admit_wall = np.zeros((S, Qs), np.float64)
-        prev_n_dist = np.zeros((S, Qs), np.int64)
         next_q = 0                                    # cursor into order
         retired = 0
         t = 0
@@ -246,7 +350,6 @@ class StreamScheduler:
                     owner[s, r] = qid
                     admit_t[s, r] = t
                     admit_wall[s, r] = now_wall
-                    prev_n_dist[s, r] = 0
                 state, qbuf = self.stepper.admit(
                     state, qbuf, jnp.asarray(mask), jnp.asarray(new_q),
                     *self.entry)
@@ -260,48 +363,66 @@ class StreamScheduler:
                 t = max(t + 1, int(arrivals[order[next_q]])) \
                     if next_q < N else t + 1
                 continue
-            occ_trace.append(live)
 
-            # -- one engine round at the controller's current widths
+            # -- chunk budget: wake exactly when admission could matter.
+            # Free slots -> nothing can be admitted before the next
+            # arrival (the admission loop above drained everything
+            # <= t), so cap the chunk at that arrival and let mid-chunk
+            # finishes park. Full pool -> a finish may seat a waiting or
+            # imminent arrival, so stop in-jit on the first finish. Both
+            # keep the schedule identical to round_chunk=1.
+            # (frozen mode admits only into an all-free pool, which the
+            # in-jit every-live-row-done exit already detects)
+            budget = K
+            stop_on_finish = False
+            if self.refill and next_q < N:
+                na = int(arrivals[order[next_q]])
+                if live < S * Qs:
+                    budget = max(1, min(K, na - t))
+                else:
+                    stop_on_finish = na <= t + K
+
+            # -- run up to `budget` rounds on-device at the controller's
+            # current widths (the chunk steps the widths per round)
+            spec_state, cfg, dyn = self._spec_inputs((S, Qs))
+            state, spec_state, steps, live_cnt, width_sum = \
+                self.stepper.run_chunk(self.consts, state, qbuf,
+                                       spec_state, cfg, budget,
+                                       stop_on_finish, dynamic=dyn)
+            dispatches += 1
+            steps = int(steps)                        # host sync point
+            t += steps
+            stepped += steps
             if self.controller is not None:
-                self.controller._ensure((S, Qs))
-                spec_w = jnp.asarray(self.controller.spec_w)
-                spec_trace.append(
-                    float(self.controller.spec_w[live_mask].mean()))
-            else:
-                spec_w = self.params.spec_width
-                spec_trace.append(float(spec_w))
-            state = self.stepper.round(self.consts, state, qbuf, spec_w)
-            t += 1
-            stepped += 1
+                self.controller.store(spec_state)
+            live_cnt = np.asarray(live_cnt)[:steps]
+            width_sum = np.asarray(width_sum)[:steps]
+            occ_trace.extend(int(c) for c in live_cnt)
+            spec_trace.extend(ws / c for ws, c in
+                              zip(width_sum, np.maximum(live_cnt, 1)))
 
             done = np.asarray(state.done)
             rounds = np.asarray(state.rounds)
             n_dist = np.asarray(state.n_dist)
-            if self.controller is not None:
-                # per-query accepted proposals this round -> width update
-                self.controller.update(n_dist - prev_n_dist, live_mask)
-            prev_n_dist = n_dist.astype(np.int64)
 
-            # -- retire finished rows (done, or per-query round cap)
-            fin = live_mask & (done | (rounds >= rounds_cap))
+            # -- retire finished rows (the chunk already parked rows
+            # that hit the per-query round cap, at the exact round
+            # boundary the per-round scheduler would have)
+            fin = live_mask & done
             if fin.any():
-                # park every retired row (done=True): a row retired via
-                # the round cap would otherwise keep proposing/reading
-                # pages as a zombie until readmitted, inflating the
-                # shard-cumulative page/item counters
-                state = state._replace(
-                    done=jnp.logical_or(state.done, jnp.asarray(fin)))
-                out_i, out_d, sl_stats = self.stepper.retire(state)
+                out_i, out_d, _ = self.stepper.retire(state)
                 out_i = np.asarray(out_i)
                 out_d = np.asarray(out_d)
                 now_wall = time.time()
                 for s, r in np.argwhere(fin):
+                    # exact even when the finish was mid-chunk: the row
+                    # worked `rounds` consecutive rounds from admission
                     results.append(QueryResult(
                         qid=int(owner[s, r]), ids=out_i[s, r].copy(),
                         dists=out_d[s, r].copy(),
                         arrival_round=int(arrivals[owner[s, r]]),
-                        admit_round=int(admit_t[s, r]), retire_round=t,
+                        admit_round=int(admit_t[s, r]),
+                        retire_round=int(admit_t[s, r] + rounds[s, r]),
                         service_rounds=int(rounds[s, r]),
                         n_dist=int(n_dist[s, r]),
                         wall_latency_s=now_wall - admit_wall[s, r]))
@@ -316,7 +437,8 @@ class StreamScheduler:
             items_recv=int(np.asarray(state.items_recv).sum()),
             props_sent=int(np.asarray(state.props_sent).sum()),
             drops_b=int(np.asarray(state.drops_b).sum()),
-            spec_trace=spec_trace, wall_s=time.time() - t0)
+            spec_trace=spec_trace, wall_s=time.time() - t0,
+            host_dispatches=dispatches, compile_s=compile_s)
 
 
 def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
@@ -330,7 +452,8 @@ def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
 
 def stream_search(consts, geom, params, entry, queries,
                   num_slots: int, arrivals=None, mesh=None,
-                  dynamic_spec: bool = False, refill: bool = True):
+                  dynamic_spec: bool = False, refill: bool = True,
+                  round_chunk: int = 1):
     """Convenience wrapper: run the streaming scheduler and return
     (ids (N, k), dists (N, k), StreamStats) in query order."""
     ctrl = None
@@ -344,7 +467,8 @@ def stream_search(consts, geom, params, entry, queries,
                               max_degree=geom.max_degree)
     sched = StreamScheduler(consts, geom, params, entry,
                             num_slots=num_slots, mesh=mesh,
-                            controller=ctrl, refill=refill)
+                            controller=ctrl, refill=refill,
+                            round_chunk=round_chunk)
     stats = sched.run(queries, arrivals)
     k = params.search.k
     n = np.asarray(queries).shape[0]

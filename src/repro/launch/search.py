@@ -76,6 +76,11 @@ def main(argv=None):
                     help="streaming: adapt each query's speculation "
                          "width to its observed hit rate (paper §V-B) "
                          "instead of the static --spec width")
+    ap.add_argument("--round-chunk", type=int, default=8,
+                    help="streaming: engine rounds per device dispatch "
+                         "(engine_run_chunk); the host syncs only at "
+                         "chunk boundaries. Any value yields the exact "
+                         "per-round schedule (1 = host-paced rounds)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
@@ -116,7 +121,8 @@ def main(argv=None):
                             queries[:args.queries], slots=args.slots,
                             arrival_rate=args.arrival_rate,
                             seed=args.seed + 2,
-                            dynamic_spec=args.spec_dynamic),
+                            dynamic_spec=args.spec_dynamic,
+                            round_chunk=args.round_chunk),
         }
         print(json.dumps(res, indent=1))
         if args.out:

@@ -40,7 +40,7 @@ class StreamingRetriever:
 
     def __init__(self, db: np.ndarray, packed, *, L=16, W=1, k=4,
                  num_slots=4, spec=0, dynamic_spec=False,
-                 kernel_mode="jnp", coalesce_qb=8):
+                 kernel_mode="jnp", coalesce_qb=8, round_chunk=8):
         self.db = db
         self.consts, self.geom, self.entry = pack_for_engine(packed)
         sp = SearchParams(L=L, W=W, k=k)
@@ -49,33 +49,37 @@ class StreamingRetriever:
             kernel_mode=kernel_mode, coalesce_qb=coalesce_qb)
         self.num_slots = num_slots
         self.dynamic_spec = dynamic_spec
+        self.round_chunk = round_chunk
 
     def retrieve(self, queries: np.ndarray, arrivals=None):
         """(N, d) queries -> (vecs (N, k, d), ids, dists, StreamStats)."""
         ids, dists, stats = stream_search(
             self.consts, self.geom, self.params, self.entry, queries,
             num_slots=self.num_slots, arrivals=arrivals,
-            dynamic_spec=self.dynamic_spec)
+            dynamic_spec=self.dynamic_spec,
+            round_chunk=self.round_chunk)
         vecs = self.db[np.clip(ids, 0, self.db.shape[0] - 1)]
         return vecs, ids, dists, stats
 
 
 def stream_report(consts, geom, params, entry, db, queries, *, slots,
                   arrival_rate, seed, dynamic_spec=False,
-                  refill=True) -> dict:
+                  refill=True, round_chunk=8) -> dict:
     """Run one streaming session and build the serving report shared by
     the `search --stream` and `serve_stream` CLIs: Poisson arrivals ->
     scheduler -> recall vs brute force + stream_summary metrics."""
     arrivals = poisson_arrivals(arrival_rate, queries.shape[0], seed)
     ids, _, st = stream_search(
         consts, geom, params, entry, queries, num_slots=slots,
-        arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill)
+        arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
+        round_chunk=round_chunk)
     k = params.search.k
     true_ids, _ = brute_force_topk(db, queries, k)
     return {
         "shards": geom.num_shards, "slots_per_shard": slots,
         "arrival_rate": arrival_rate, "refill": refill,
         "spec": params.spec_width, "spec_dynamic": dynamic_spec,
+        "round_chunk": round_chunk,
         "recall@k": round(float(recall_at_k(ids, true_ids)), 4),
         **stream_summary(st),
     }
@@ -105,6 +109,10 @@ def main(argv=None):
     ap.add_argument("--no-refill", action="store_true",
                     help="frozen-batch discipline (baseline): admit "
                          "only into an all-free pool")
+    ap.add_argument("--round-chunk", type=int, default=8,
+                    help="engine rounds per device dispatch "
+                         "(engine_run_chunk); host syncs only at chunk "
+                         "boundaries, schedule stays exactly per-round")
     ap.add_argument("--kernel-mode", default="jnp",
                     choices=["auto", "pallas", "interpret", "ref", "jnp"])
     ap.add_argument("--coalesce-qb", type=int, default=8)
@@ -138,7 +146,8 @@ def main(argv=None):
                         slots=args.slots, arrival_rate=args.arrival_rate,
                         seed=args.seed + 2,
                         dynamic_spec=args.spec_dynamic,
-                        refill=not args.no_refill),
+                        refill=not args.no_refill,
+                        round_chunk=args.round_chunk),
     }
     print(json.dumps(res, indent=1))
     if args.out:

@@ -44,10 +44,11 @@ def _oneshot(consts, geom, entry, queries, sp, spec=0):
 
 
 # ---------------------------------------------------------------------------
-# Bit-identity: streaming admission == one-shot, any arrivals/slots
+# Bit-identity: streaming admission == one-shot, any arrivals/slots/chunks
 # ---------------------------------------------------------------------------
-@pytest.mark.parametrize("slots,spec", [(1, 0), (3, 0), (8, 4)])
-def test_stream_matches_oneshot_bitexact(ds, slots, spec):
+@pytest.mark.parametrize("slots,spec,chunk",
+                         [(1, 0, 1), (3, 0, 3), (8, 4, 8), (3, 4, 8)])
+def test_stream_matches_oneshot_bitexact(ds, slots, spec, chunk):
     db, queries, packed = ds
     consts, geom, entry = pack_for_engine(packed)
     sp = SearchParams(L=16, W=1, k=10)
@@ -57,15 +58,17 @@ def test_stream_matches_oneshot_bitexact(ds, slots, spec):
     rng = np.random.default_rng(slots + spec)
     arrivals = rng.integers(0, 20, queries.shape[0])
     ids, dists, st = stream_search(consts, geom, params, entry, queries,
-                                   num_slots=slots, arrivals=arrivals)
+                                   num_slots=slots, arrivals=arrivals,
+                                   round_chunk=chunk)
     np.testing.assert_array_equal(ids, ref_i)
     np.testing.assert_array_equal(dists, ref_d)
     assert len(st.results) == queries.shape[0]
 
 
 def test_stream_property_arrival_orders(ds):
-    """Hypothesis: any arrival order, slot count and arrival spacing
-    produce bit-identical per-query results to one-shot search_sim."""
+    """Hypothesis: any arrival order, slot count, arrival spacing and
+    round-chunk size produce bit-identical per-query results to one-shot
+    search_sim."""
     pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
@@ -83,20 +86,82 @@ def test_stream_property_arrival_orders(ds):
 
     @given(st.integers(1, 4),
            st.lists(st.integers(0, 12), min_size=nq, max_size=nq),
+           st.sampled_from([1, 3, 8]),
            st.randoms(use_true_random=False))
     @settings(max_examples=10, deadline=None)
-    def check(slots, gaps, rnd):
+    def check(slots, gaps, chunk, rnd):
         order = list(range(nq))
         rnd.shuffle(order)
         arrivals = np.zeros(nq, np.int64)
         arrivals[order] = np.cumsum(gaps)   # shuffled admission order
         params = EngineParams.lossless(sp, slots, geom.max_degree)
         ids, dists, _ = stream_search(consts, geom, params, entry, q,
-                                      num_slots=slots, arrivals=arrivals)
+                                      num_slots=slots, arrivals=arrivals,
+                                      round_chunk=chunk)
         np.testing.assert_array_equal(ids, ref_i)
         np.testing.assert_array_equal(dists, ref_d)
 
     check()
+
+
+# ---------------------------------------------------------------------------
+# In-jit round chunks: same schedule, same accounting, fewer host syncs
+# ---------------------------------------------------------------------------
+def _result_records(st):
+    return {r.qid: (tuple(r.ids), tuple(r.dists), r.service_rounds,
+                    r.n_dist, r.admit_round, r.retire_round)
+            for r in st.results}
+
+
+@pytest.mark.parametrize("dynamic", [False, True])
+def test_chunked_matches_per_round_exact(ds, dynamic):
+    """round_chunk > 1 reproduces the per-round scheduler exactly:
+    every QueryResult field (ids/dists/service_rounds/n_dist and the
+    admit/retire round accounting), the engine-round schedule, the
+    occupancy and speculation traces — with strictly fewer host
+    dispatches. The dynamic leg proves the in-jit SpecController port
+    steps identically to the host rule at chunk boundaries."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 3, geom.max_degree, spec_width=8)
+    arrivals = np.random.default_rng(3).integers(0, 15, queries.shape[0])
+
+    def run(chunk):
+        _, _, st = stream_search(consts, geom, params, entry, queries,
+                                 num_slots=3, arrivals=arrivals,
+                                 dynamic_spec=dynamic, round_chunk=chunk)
+        return st
+
+    base = run(1)
+    for chunk in (3, 8):
+        st = run(chunk)
+        assert _result_records(st) == _result_records(base)
+        assert st.total_rounds == base.total_rounds
+        assert st.occupancy_trace == base.occupancy_trace
+        assert st.spec_trace == base.spec_trace
+        assert st.host_dispatches < base.host_dispatches
+
+
+def test_chunked_frozen_matches_per_round(ds):
+    """The frozen-batch discipline chunks too (waves break chunks via
+    the in-jit all-done exit), keeping the exact schedule."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+
+    def run(chunk):
+        _, _, st = stream_search(consts, geom, params, entry,
+                                 queries[:16], num_slots=2, refill=False,
+                                 round_chunk=chunk)
+        return st
+
+    base, chunked = run(1), run(8)
+    assert _result_records(chunked) == _result_records(base)
+    assert chunked.total_rounds == base.total_rounds
+    assert chunked.occupancy_trace == base.occupancy_trace
+    assert chunked.host_dispatches < base.host_dispatches
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +269,76 @@ def test_spec_controller_bounds():
                                 [False, False, False]]))
     assert ctrl.spec_w[0, 0] == 8            # fresh query at full width
     assert ctrl.spec_w[1, 1] == 0
+
+
+def test_spec_controller_normalizes_by_used_width():
+    """The docstring formula: hit = accepted / (W * (max_degree +
+    spec_w_used)) — `update` must normalize by the widths that were
+    used in the round (read before being overwritten), the ordering
+    contract the in-jit chunk port relies on."""
+    ctrl = SpecController(spec_max=8, W=2, max_degree=12)
+    worked = np.ones((1, 1), bool)
+    served_at_max = 2 * (12 + 8)
+    # full acceptance at the used width -> hit 1.0 -> stays at max
+    w = ctrl.update(np.full((1, 1), served_at_max), worked)
+    assert w[0, 0] == 8 and ctrl._hit[0, 0] == pytest.approx(1.0)
+    # width moved: the next update must normalize by the *new* width.
+    # Feed zero so width drops, then full-acceptance-at-width-0 counts.
+    ctrl.update(np.zeros((1, 1)), worked)
+    used = int(ctrl.spec_w[0, 0])
+    assert used < 8
+    before = ctrl._hit[0, 0]
+    ctrl.update(np.full((1, 1), 2 * (12 + used)), worked)
+    # a full hit at the smaller served width reads as rate 1.0
+    assert ctrl._hit[0, 0] == pytest.approx(0.5 * before + 0.5 * 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving-metrics regressions: empty runs, compile accounting
+# ---------------------------------------------------------------------------
+def test_stream_summary_empty_run(ds):
+    """A run that retires zero queries (0-query stream_search) must
+    produce a zeroed summary, not an np.percentile crash."""
+    from repro.core.metrics import latency_percentiles, stream_summary
+
+    assert latency_percentiles([]) == {"p50": 0.0, "p95": 0.0,
+                                       "p99": 0.0, "mean": 0.0}
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+    ids, dists, st = stream_search(
+        consts, geom, params, entry,
+        np.zeros((0, queries.shape[1]), np.float32), num_slots=2)
+    assert ids.shape == (0, 10) and dists.shape == (0, 10)
+    summ = stream_summary(st)
+    assert summ["queries"] == 0
+    assert summ["sustained_qps"] == 0.0
+    assert summ["dispatches_per_query"] == 0.0
+    assert summ["latency_rounds"]["p99"] == 0.0
+    assert summ["wall_latency_ms"]["p99"] == 0.0
+
+
+def test_stream_wall_excludes_compile(ds):
+    """The stepper warmup keeps the one-time jit compile out of wall_s
+    and the first queries' wall latency; compile_s is reported
+    separately in stream_summary."""
+    from repro.core.metrics import stream_summary
+
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+    _, _, st = stream_search(consts, geom, params, entry, queries[:8],
+                             num_slots=2, round_chunk=4)
+    assert st.compile_s >= 0.0
+    assert st.wall_s > 0.0
+    summ = stream_summary(st)
+    assert summ["compile_s"] == round(st.compile_s, 3)
+    assert summ["host_dispatches"] == st.host_dispatches > 0
+    # wall latencies are steady-state: no query's admit->retire span
+    # can exceed the whole steady-state run
+    assert max(r.wall_latency_s for r in st.results) <= st.wall_s + 0.5
 
 
 def test_stats_shapes_unified(ds):
