@@ -24,17 +24,22 @@ Reported per discipline: slot occupancy, round-normalized throughput
 reads, recall. A static ``spec_width`` sweep rides along so the
 controller has a best-static baseline to beat on page reads, and a
 ``round_chunk`` sweep measures the host-sync model: engine rounds per
-host dispatch (``engine_run_chunk``) vs host dispatches/query and wall
-QPS, on both the sim stepper and (when enough devices are visible) the
-shard_map stepper. Results land in machine-readable
-``BENCH_serving.json``.
+host dispatch vs host dispatches/query and wall QPS, on both the sim
+stepper and (when enough devices are visible) the shard_map stepper —
+with **in-jit admission** (``engine_run_chunk_admit``: the pending
+queue lives on device and freed slots reseat inside the chunk) against
+the host-paced admission baseline (``injit off``: chunk length
+collapses toward one round while the queue drains, the PR-4 model).
+Results land in machine-readable ``BENCH_serving.json``.
 
 ``--smoke`` shrinks the workload and *asserts* the streaming
 invariants — refill occupancy/throughput above frozen, controller page
-reads at or below controller-off at equal recall, and the dispatch
-gate: chunked execution must match per-round queries/round with
-strictly fewer host syncs — so CI fails loudly on a scheduling
-regression.
+reads at or below controller-off at equal recall, the dispatch gate
+(chunked execution must match per-round queries/round with strictly
+fewer host syncs), and the in-jit-admission gate (identical round
+schedule and bit-identical per-query results vs host admission, with
+strictly fewer host dispatches, on the refill and shard_map legs) — so
+CI fails loudly on a scheduling regression.
 """
 from __future__ import annotations
 
@@ -97,16 +102,16 @@ def build_workload(*, n, d, nq, shards, page_size, r, spec_max, seed):
 
 def _scenario(consts, geom, params, entry, queries, *, slots, arrivals,
               dynamic_spec, refill, true_ids, k, round_chunk=1,
-              mesh=None):
+              mesh=None, injit_admit=None):
     # the scheduler warms the stepper itself (compile_s in the row);
     # sustained_qps and wall latency measure steady state
-    ids, _, st = stream_search(
+    ids, dists, st = stream_search(
         consts, geom, params, entry, queries, num_slots=slots,
         arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
-        round_chunk=round_chunk, mesh=mesh)
+        round_chunk=round_chunk, mesh=mesh, injit_admit=injit_admit)
     row = stream_summary(st)
     row["recall"] = round(float(recall_at_k(ids[:, :k], true_ids)), 4)
-    return row
+    return row, (ids, dists)
 
 
 def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
@@ -132,52 +137,67 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
     kw = dict(slots=slots, arrivals=arrivals, true_ids=true_ids, k=10)
     scenarios = {}
     t0 = time.time()
-    scenarios["frozen"] = _scenario(
+    scenarios["frozen"], _ = _scenario(
         consts, geom, p_max, entry, queries, dynamic_spec=False,
         refill=False, round_chunk=round_chunk, **kw)
-    scenarios["refill"] = _scenario(
+    scenarios["refill"], _ = _scenario(
         consts, geom, p_max, entry, queries, dynamic_spec=False,
         refill=True, round_chunk=round_chunk, **kw)
-    scenarios["dynamic"] = _scenario(
+    scenarios["dynamic"], _ = _scenario(
         consts, geom, p_max, entry, queries, dynamic_spec=True,
         refill=True, round_chunk=round_chunk, **kw)
 
     # static spec sweep (refill on): the controller's best-static bar
     sweep = []
     for spec in sorted({0, spec_max // 2, spec_max}):
-        row = _scenario(consts, geom, params_for(spec), entry, queries,
-                        dynamic_spec=False, refill=True,
-                        round_chunk=round_chunk, **kw)
+        row, _ = _scenario(consts, geom, params_for(spec), entry, queries,
+                           dynamic_spec=False, refill=True,
+                           round_chunk=round_chunk, **kw)
         row["spec"] = spec
         sweep.append(row)
 
     # round_chunk sweep: rounds per host dispatch vs dispatches/query
-    # and wall QPS. refill (continuous admission, the worst case for
-    # chunking: every retirement may seat a pending query) and frozen
-    # (synchronous waves, the paper's computational-storage baseline —
-    # chunks only break on wave boundaries, so dispatches drop ~K x).
-    def chunk_leg(ks, refill, mesh=None):
+    # and wall QPS. refill (continuous admission) runs with in-jit
+    # admission — the device-side pending queue keeps the chunk running
+    # through retirements and arrivals — and against the host-admission
+    # baseline (injit off: budget capped at the next arrival +
+    # stop-on-finish, so chunk length collapses while the queue drains,
+    # the PR-4 model). frozen (synchronous waves, the paper's
+    # computational-storage baseline) keeps the host-side all-free
+    # gate — chunks break on wave boundaries, so dispatches drop ~K x.
+    def chunk_leg(ks, refill, mesh=None, injit=None):
         rows = []
         for K in ks:
-            row = _scenario(consts, geom, p_max, entry, queries,
-                            dynamic_spec=False, refill=refill,
-                            round_chunk=K, mesh=mesh, **kw)
-            rows.append({"round_chunk": K, **row})
+            row, out = _scenario(consts, geom, p_max, entry, queries,
+                                 dynamic_spec=False, refill=refill,
+                                 round_chunk=K, mesh=mesh,
+                                 injit_admit=injit, **kw)
+            rows.append(({"round_chunk": K, **row}, out))
         return rows
 
+    def rows_only(leg):
+        return [row for row, _ in leg]
+
     chunk_ks = (1, 8) if smoke else (1, 2, 4, 8, 16)
-    chunk_refill = chunk_leg(chunk_ks, refill=True)
-    chunk_frozen = chunk_leg((1, chunk_ks[-1]), refill=False)
+    leg_refill = chunk_leg(chunk_ks, refill=True)
+    leg_hostadm = chunk_leg(chunk_ks, refill=True, injit=False)
+    leg_frozen = chunk_leg((1, chunk_ks[-1]), refill=False)
+    chunk_refill = rows_only(leg_refill)
+    chunk_hostadm = rows_only(leg_hostadm)
+    chunk_frozen = rows_only(leg_frozen)
     import jax
-    chunk_shard = []
+    leg_shard, leg_shard_hostadm = [], []
     if jax.device_count() >= shards:
         from repro.launch.mesh import make_engine_mesh
         mesh = make_engine_mesh(num=shards)
-        chunk_shard = chunk_leg((1, chunk_ks[-1]), refill=True,
-                                mesh=mesh)
+        leg_shard = chunk_leg((1, chunk_ks[-1]), refill=True, mesh=mesh)
+        leg_shard_hostadm = chunk_leg((chunk_ks[-1],), refill=True,
+                                      mesh=mesh, injit=False)
     else:  # no silent gaps: record why the leg is absent
         print(f"[shard_map chunk leg skipped: {jax.device_count()} "
               f"device(s) < {shards} shards]")
+    chunk_shard = rows_only(leg_shard)
+    chunk_shard_hostadm = rows_only(leg_shard_hostadm)
 
     emit([[name, s["occupancy"], s["queries_per_round"],
            s["sustained_qps"], s["latency_rounds"]["p50"],
@@ -191,8 +211,11 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
            row["queries_per_round"]] for row in sweep],
          ["spec_width", "pages", "recall", "q/round"],
          "static speculation sweep (refill on)")
-    for label, leg in (("refill", chunk_refill), ("frozen", chunk_frozen),
-                       ("shard_map refill", chunk_shard)):
+    for label, leg in (("refill, in-jit admission", chunk_refill),
+                       ("refill, host admission", chunk_hostadm),
+                       ("frozen", chunk_frozen),
+                       ("shard_map refill, in-jit", chunk_shard),
+                       ("shard_map refill, host adm", chunk_shard_hostadm)):
         if leg:
             emit([[row["round_chunk"], row["host_dispatches"],
                    row["dispatches_per_query"], row["rounds_per_dispatch"],
@@ -209,6 +232,9 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         "chunk_dispatch_reduction_frozen": round(
             chunk_frozen[0]["host_dispatches"]
             / max(chunk_frozen[-1]["host_dispatches"], 1), 3),
+        "injit_dispatch_reduction_refill": round(
+            chunk_hostadm[-1]["host_dispatches"]
+            / max(chunk_refill[-1]["host_dispatches"], 1), 3),
         "chunk_qpr_ratio": round(
             chunk_refill[-1]["queries_per_round"]
             / max(chunk_refill[0]["queries_per_round"], 1e-9), 4),
@@ -228,6 +254,10 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
             scenarios["dynamic"]["recall"]
             - scenarios["refill"]["recall"], 4),
     }
+    if chunk_shard:
+        checks["injit_dispatch_reduction_shard"] = round(
+            chunk_shard_hostadm[-1]["host_dispatches"]
+            / max(chunk_shard[-1]["host_dispatches"], 1), 3)
     results = {
         "config": {"nq": nq, "n": n, "d": d, "shards": shards,
                    "slots": slots, "rate": rate, "spec_max": spec_max,
@@ -238,8 +268,11 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         "scenarios": scenarios,
         "static_spec_sweep": sweep,
         "round_chunk_sweep": {"refill": chunk_refill,
+                              "refill_host_admission": chunk_hostadm,
                               "frozen": chunk_frozen,
-                              "shard_map": chunk_shard},
+                              "shard_map": chunk_shard,
+                              "shard_map_host_admission":
+                                  chunk_shard_hostadm},
         "checks": checks,
     }
     if out_json:
@@ -268,7 +301,8 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         # dispatch gate: device-paced chunks must match the per-round
         # schedule's round-throughput while syncing the host strictly
         # less (the whole point of engine_run_chunk)
-        for leg in (chunk_refill, chunk_frozen, chunk_shard):
+        for leg in (chunk_refill, chunk_hostadm, chunk_frozen,
+                    chunk_shard):
             if not leg:
                 continue
             pr, ch = leg[0], leg[-1]
@@ -283,6 +317,36 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
             assert ch["total_rounds"] == pr["total_rounds"], (
                 f"chunking must not change the engine-round schedule: "
                 f"{ch['total_rounds']} vs {pr['total_rounds']}")
+        # in-jit-admission gate: the device-side pending queue must
+        # reproduce host admission exactly — same round schedule, bit-
+        # identical per-query results — while syncing the host strictly
+        # less (it deletes the stop-on-finish exits that collapse chunk
+        # length while the queue drains)
+        injit_legs = [("refill", leg_refill[-1], leg_hostadm[-1])]
+        if leg_shard:
+            injit_legs.append(("shard_map", leg_shard[-1],
+                               leg_shard_hostadm[-1]))
+        for label, (row_on, out_on), (row_off, out_off) in injit_legs:
+            np.testing.assert_array_equal(
+                out_on[0], out_off[0],
+                err_msg=f"{label}: in-jit admission changed result ids")
+            np.testing.assert_array_equal(
+                out_on[1], out_off[1],
+                err_msg=f"{label}: in-jit admission changed distances")
+            assert row_on["total_rounds"] == row_off["total_rounds"], (
+                f"{label}: in-jit admission changed the round schedule: "
+                f"{row_on['total_rounds']} vs {row_off['total_rounds']}")
+            assert (row_on["queries_per_round"]
+                    == row_off["queries_per_round"]), (
+                f"{label}: in-jit admission changed round-throughput: "
+                f"{row_on['queries_per_round']} vs "
+                f"{row_off['queries_per_round']}")
+            assert (row_on["host_dispatches"]
+                    < row_off["host_dispatches"]), (
+                f"{label}: in-jit admission must sync the host strictly "
+                f"less than host admission at the same K: "
+                f"{row_on['host_dispatches']} vs "
+                f"{row_off['host_dispatches']}")
     return results
 
 

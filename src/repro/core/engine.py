@@ -160,7 +160,12 @@ def _init_state(queries, qq, entry_vec, entry_norm, entry_id,
     sp = params.search
     Qs = queries.shape[0]
     L = sp.L
-    e_d = (qq - 2.0 * (queries @ entry_vec.astype(jnp.float32))
+    # multiply+reduce, not `@`: XLA lowers a dot differently standalone
+    # (engine_admit) vs inside a while_loop body (the in-chunk admission
+    # stage), which costs 1 ULP of cross-path bit-identity on real-
+    # valued data; an explicit reduction lowers the same way in both
+    e_d = (qq - 2.0 * jnp.sum(queries * entry_vec.astype(jnp.float32),
+                              axis=-1)
            + entry_norm)                                   # (Qs,)
     cand_d = jnp.concatenate(
         [e_d[:, None], jnp.full((Qs, L - 1), BIG_DIST, jnp.float32)], axis=1)
@@ -529,14 +534,19 @@ def spec_update(spec_w, hit, peak, accepted, worked, cfg):
 # between rounds (core/scheduler.py). ``engine_run_chunk`` moves that
 # inner loop into jit: up to K rounds run as one device-paced while_loop
 # (dynamic speculation updating per round in-jit), so the host syncs
-# only at chunk boundaries. ``make_stepper`` bundles them, and swaps the
-# round's communication for shard_map lax.all_to_all when given a mesh —
-# the sim and distributed paths step through the same stages.
+# only at chunk boundaries. ``engine_run_chunk_admit`` moves admission
+# in too — a device-side pending queue seats arrived queries into freed
+# slots at every in-jit round boundary, so the chunk runs straight
+# through retirements and arrivals. ``make_stepper`` bundles them, and
+# swaps the round's communication for shard_map lax.all_to_all when
+# given a mesh — the sim and distributed paths step through the same
+# stages.
 # ---------------------------------------------------------------------------
 class EngineStepper(NamedTuple):
-    """(init, round, admit, retire, run_chunk) closures over static
-    params/geom; ``round_chunk`` records the static K ``run_chunk`` was
-    compiled for (its budget is clamped to that K)."""
+    """(init, round, admit, retire, run_chunk, run_chunk_admit)
+    closures over static params/geom; ``round_chunk`` records the
+    static K the chunk stages were compiled for (their budgets are
+    clamped to that K)."""
 
     init: callable       # (consts, queries, evec, enorm, eid) -> EngineState
     round: callable      # (consts, state, queries, spec_w) -> EngineState
@@ -549,6 +559,15 @@ class EngineStepper(NamedTuple):
                          #  (EngineState, spec_state', steps,
                          #   live_cnt (K,), width_sum (K,))
     round_chunk: int = 1
+    run_chunk_admit: callable = None
+                         # (consts, state, queries, spec_state, spec_cfg,
+                         #  budget, (pend_q, pend_arr), cursor, t0, entry,
+                         #  dynamic=False) ->
+                         #  (EngineState, queries', spec_state', steps,
+                         #   live_cnt (K,), width_sum (K,),
+                         #   admit_qidx (K, S, Qs), ret_i (K, S, Qs, k),
+                         #   ret_d (K, S, Qs, k), ret_rounds (K, S, Qs),
+                         #   ret_ndist (K, S, Qs), cursor')
 
 
 @functools.partial(jax.jit, static_argnames=("params", "geom"))
@@ -575,6 +594,36 @@ def engine_round(consts, state: EngineState, queries, spec_w,
     return _sim_round(state, consts, queries, qq, spec_w, params, geom)
 
 
+def _admit_rows(state: EngineState, queries, admit_mask, new_q,
+                entry_vec, entry_norm, entry_id, params: EngineParams):
+    """One shard's slot-refill math, shared verbatim by the jitted
+    host-side :func:`engine_admit` and the in-jit admission stage of
+    :func:`engine_run_chunk_admit` (host-admitted and chunk-admitted
+    rows are bit-identical because this is the one place the reset
+    lives). Rows where ``admit_mask`` restart from the entry vertex
+    with the vectors in ``new_q``; every per-query leaf is rebuilt by
+    the same ``_init_state`` math as the one-shot drivers; the
+    shard-cumulative counters pass through untouched."""
+    q = jnp.where(admit_mask[..., None], new_q, queries)
+    qq = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1)
+    fresh = _init_state(q, qq, entry_vec, entry_norm, entry_id, params)
+
+    def rows(cur, new):
+        m = admit_mask.reshape(admit_mask.shape
+                               + (1,) * (cur.ndim - admit_mask.ndim))
+        return jnp.where(m, new, cur)
+
+    state = EngineState(
+        rows(state.cand_d, fresh.cand_d), rows(state.cand_i, fresh.cand_i),
+        rows(state.cand_e, fresh.cand_e), rows(state.bloom, fresh.bloom),
+        jnp.where(admit_mask, False, state.done),
+        jnp.where(admit_mask, 0, state.rounds),
+        jnp.where(admit_mask, 0, state.n_dist),
+        state.items_recv, state.pages_unique, state.drops_b,
+        state.props_sent)
+    return state, q
+
+
 @functools.partial(jax.jit, static_argnames=("params", "geom"))
 def engine_admit(state: EngineState, queries, admit_mask, new_q,
                  entry_vec, entry_norm, entry_id,
@@ -591,26 +640,10 @@ def engine_admit(state: EngineState, queries, admit_mask, new_q,
     Returns the new state and the updated (S, Qs, d) query buffer.
     """
     del geom
-    q = jnp.where(admit_mask[..., None], new_q, queries)
-    qq = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1)
-    fresh = jax.vmap(
-        lambda qs, qn: _init_state(qs, qn, entry_vec, entry_norm, entry_id,
-                                   params))(q, qq)
-
-    def rows(cur, new):
-        m = admit_mask.reshape(admit_mask.shape
-                               + (1,) * (cur.ndim - admit_mask.ndim))
-        return jnp.where(m, new, cur)
-
-    state = EngineState(
-        rows(state.cand_d, fresh.cand_d), rows(state.cand_i, fresh.cand_i),
-        rows(state.cand_e, fresh.cand_e), rows(state.bloom, fresh.bloom),
-        jnp.where(admit_mask, False, state.done),
-        jnp.where(admit_mask, 0, state.rounds),
-        jnp.where(admit_mask, 0, state.n_dist),
-        state.items_recv, state.pages_unique, state.drops_b,
-        state.props_sent)
-    return state, q
+    return jax.vmap(functools.partial(_admit_rows, params=params),
+                    in_axes=(0, 0, 0, 0, None, None, None))(
+        state, queries, admit_mask, new_q, entry_vec, entry_norm,
+        entry_id)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -672,6 +705,13 @@ def engine_run_chunk(consts, state: EngineState, queries, spec_state,
         unadmitted queries remain, so a freed slot is refilled on
         exactly the round the per-round scheduler would have.
 
+    This is the *host-paced-admission* chunk: the exits above collapse
+    chunk length toward one round while the pending queue drains.
+    :func:`engine_run_chunk_admit` removes them by seating arrivals
+    in-jit; this variant remains the frozen-mode path (whose all-free
+    admission gate is host-side) and the ``injit_admit=False``
+    comparison baseline.
+
     Returns ``(state, spec_state', steps, live_cnt, width_sum)`` where
     ``steps`` is the number of rounds actually run and ``live_cnt`` /
     ``width_sum`` are (K,) per-round traces (live rows, summed widths
@@ -704,6 +744,152 @@ def engine_run_chunk(consts, state: EngineState, queries, spec_state,
                            (state, spec_w, hit, peak, state.n_dist,
                             jnp.int32(0), zeros_k, zeros_k))
     return state, (spec_w, hit, peak), steps, live_cnt, width_sum
+
+
+def _seat_pending(free, cursor, avail, offset, pend_q, queries_rows):
+    """Seat arrived pending queries into free slot rows, in the host
+    staging order (row-major over the global pool, pending taken in
+    arrival order): a free row whose global free-rank (``offset`` +
+    local exclusive rank) is below ``avail`` takes pending entry
+    ``cursor + rank``. ``free``/``queries_rows`` are this shard's (or
+    the flattened pool's) rows; ``offset`` is the number of free rows
+    on lower-index shards (0 for the flattened sim pool). Returns
+    (seat mask, seated pending indices with -1 holes, updated query
+    rows)."""
+    rank = offset + jnp.cumsum(free.astype(jnp.int32)) - 1
+    seat = free & (rank < avail)
+    pidx = jnp.where(seat, cursor + rank, jnp.int32(-1))
+    safe = jnp.clip(pidx, 0, pend_q.shape[0] - 1)
+    new_q = jnp.where(seat[:, None], pend_q[safe], queries_rows)
+    return seat, pidx, new_q
+
+
+def _pending_avail(pend_arr, cursor, tnow):
+    """Pending entries whose arrival round has passed and that the
+    cursor has not yet consumed (``pend_arr`` is sorted by arrival, so
+    the arrived count is a prefix count — binary-searched, this runs
+    twice per in-jit round on the while_loop's hot path)."""
+    arrived = jnp.searchsorted(pend_arr, tnow,
+                               side="right").astype(jnp.int32)
+    return jnp.maximum(arrived - cursor, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("params", "geom", "K", "dynamic"))
+def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
+                           spec_cfg, budget, pend_q, pend_arr, cursor, t0,
+                           entry_vec, entry_norm, entry_id,
+                           params: EngineParams, geom: EngineGeom, K: int,
+                           dynamic: bool = False):
+    """:func:`engine_run_chunk` with an **in-chunk admission stage**
+    (sim comm): the pending queue lives on device (``pend_q`` (N, d)
+    query vectors and ``pend_arr`` (N,) arrival rounds, both sorted by
+    arrival; ``cursor`` is the first unadmitted entry and ``t0`` the
+    global round at chunk entry), and every round boundary seats
+    arrived entries into free (``done``) slot rows before stepping —
+    the last host-paced path of the scheduler (admission) moves in-jit,
+    so the chunk no longer needs the ``stop_on_finish`` early exit or
+    an arrival-capped budget while the queue drains (§V: the SSD
+    refills its own pipeline without consulting the host).
+
+    Per-boundary semantics are exactly the per-round host scheduler's:
+
+      * seating order is the host staging order — free rows row-major
+        over the (S, Qs) pool, pending entries in arrival order — via
+        the same cumulative-rank math (:func:`_seat_pending`);
+      * a seated row is reset by :func:`_admit_rows`, the *same* math
+        the host-side :func:`engine_admit` runs, and (``dynamic=True``)
+        its controller row restarts at full width exactly like
+        ``SpecController.reset_rows``;
+      * a freed-and-reseated row's results would be overwritten, so the
+        chunk records per-boundary **admit traces**: the pending index
+        seated per slot (``admit_qidx``, -1 elsewhere) plus the
+        pre-admission finalize/rounds/n_dist of every row (``ret_*``) —
+        the host replays the boundaries in order to reconstruct
+        ``owner``/``admit_t``/``retire_round`` and emit evicted rows'
+        results bit-exactly at the next chunk boundary.
+
+    The chunk exits early (traced) only when there is genuinely nothing
+    to do: no live row and no pending entry arrived by the current
+    boundary. Idle gaps (pool empty until a future arrival) stay
+    host-side — the scheduler jumps the serving clock without a
+    dispatch.
+
+    Returns ``(state, queries', spec_state', steps, live_cnt,
+    width_sum, admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist,
+    cursor')``; the query buffer rides in the carry because admission
+    rewrites it mid-chunk.
+    """
+    k = params.search.k
+    S, Qs = state.done.shape
+    spec_w, hit, peak = spec_state
+    spec_w = jnp.broadcast_to(jnp.asarray(spec_w, jnp.int32), (S, Qs))
+    budget = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(K))
+    cursor = jnp.asarray(cursor, jnp.int32)
+    t0 = jnp.asarray(t0, jnp.int32)
+    pend_arr = jnp.asarray(pend_arr, jnp.int32)
+    spec_max = jnp.asarray(spec_cfg[0], jnp.int32)
+
+    vadmit = jax.vmap(functools.partial(_admit_rows, params=params),
+                      in_axes=(0, 0, 0, 0, None, None, None))
+    vfin = jax.vmap(lambda s: _finalize(s, k)[:2])
+
+    def cond(carry):
+        st, q, sw, hi, pk, cur, prev_nd, j = carry[:8]
+        return ((j < budget)
+                & ((~st.done).any()
+                   | (_pending_avail(pend_arr, cur, t0 + j) > 0)))
+
+    def body(carry):
+        (st, q, sw, hi, pk, cur, prev_nd, j, lc, ws,
+         aq, ri, rd, rr, rn) = carry
+        # -- boundary j (global round t0 + j): record the would-be-
+        # evicted rows' results, then seat arrived pending queries
+        fin_i, fin_d = vfin(st)
+        ri = ri.at[j].set(fin_i)
+        rd = rd.at[j].set(fin_d)
+        rr = rr.at[j].set(st.rounds)
+        rn = rn.at[j].set(st.n_dist)
+        seat, pidx, new_q = _seat_pending(
+            st.done.reshape(-1), cur,
+            _pending_avail(pend_arr, cur, t0 + j), 0, pend_q,
+            q.reshape(S * Qs, -1))
+        mask = seat.reshape(S, Qs)
+        st, q = vadmit(st, q, mask, new_q.reshape(S, Qs, -1),
+                       entry_vec, entry_norm, entry_id)
+        cur = cur + seat.sum().astype(jnp.int32)
+        aq = aq.at[j].set(pidx.reshape(S, Qs))
+        if dynamic:   # fresh rows restart the controller at full width
+            sw = jnp.where(mask, spec_max, sw)
+            hi = jnp.where(mask, jnp.float32(-1.0), hi)
+            pk = jnp.where(mask, jnp.float32(0.0), pk)
+        # -- the round itself: same shared body as engine_run_chunk.
+        # prev_nd must be the post-admission n_dist: seated rows were
+        # reset to 0, and their accepted-count delta (spec_update) must
+        # start from 0 exactly like a host-admitted fresh row's would
+        # (non-admitted rows' n_dist only moves in rounds, so this is
+        # the carried value for them either way).
+        qq = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1)
+        st, sw, hi, pk, prev_nd, j, lc, ws = _chunk_round(
+            (st, sw, hi, pk, st.n_dist, j, lc, ws),
+            lambda s, w: _sim_round(s, consts, q, qq, w, params, geom),
+            params.search.rounds_cap, dynamic, spec_cfg)
+        return (st, q, sw, hi, pk, cur, prev_nd, j, lc, ws,
+                aq, ri, rd, rr, rn)
+
+    zeros_k = jnp.zeros((K,), jnp.int32)
+    zeros_sq = jnp.zeros((K, S, Qs), jnp.int32)
+    carry = (state, queries, spec_w, hit, peak, cursor, state.n_dist,
+             jnp.int32(0), zeros_k, zeros_k,
+             jnp.full((K, S, Qs), -1, jnp.int32),
+             jnp.full((K, S, Qs, k), INVALID, jnp.int32),
+             jnp.zeros((K, S, Qs, k), jnp.float32), zeros_sq, zeros_sq)
+    (state, queries, spec_w, hit, peak, cursor, _, steps, live_cnt,
+     width_sum, admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist) = \
+        jax.lax.while_loop(cond, body, carry)
+    return (state, queries, (spec_w, hit, peak), steps, live_cnt,
+            width_sum, admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist,
+            cursor)
 
 
 def _shard_map_fn(fn, mesh, in_specs, out_specs):
@@ -739,7 +925,17 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
                                     params=params, geom=geom, K=K,
                                     dynamic=dynamic)
 
-        return EngineStepper(init, rnd, admit, retire, run_chunk, K)
+        def run_chunk_admit(consts, state, queries, spec_state, spec_cfg,
+                            budget, pend, cursor, t0, entry,
+                            dynamic=False):
+            pend_q, pend_arr = pend
+            return engine_run_chunk_admit(
+                consts, state, queries, spec_state, spec_cfg, budget,
+                pend_q, pend_arr, cursor, t0, *entry, params=params,
+                geom=geom, K=K, dynamic=dynamic)
+
+        return EngineStepper(init, rnd, admit, retire, run_chunk, K,
+                             run_chunk_admit)
 
     from jax.sharding import PartitionSpec as P
 
@@ -749,6 +945,27 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
 
     nleaves = len(EngineState._fields)
     sp = params.search
+
+    # -- admission under shard_map: per-row math with no communication,
+    # but run per-shard so its float reductions (_init_state's entry
+    # distance, qq) see the exact same shapes the in-chunk admission
+    # stage computes with — host-admitted and chunk-admitted rows stay
+    # bit-identical on the distributed path, not just on integer data.
+    def local_admit(q, mask, new_q, evec, enorm, eid, *leaves):
+        state = EngineState(*(leaf[0] for leaf in leaves))
+        st, ql = _admit_rows(state, q[0], mask[0], new_q[0], evec,
+                             enorm, eid, params)
+        return tuple(leaf[None] for leaf in st), ql[None]
+
+    f_admit = jax.jit(_shard_map_fn(
+        local_admit, mesh,
+        (P(axis_name),) * 3 + (P(),) * 3 + (P(axis_name),) * nleaves,
+        ((P(axis_name),) * nleaves, P(axis_name))))
+
+    def admit(state, queries, admit_mask, new_q, evec, enorm, eid):
+        leaves, q = f_admit(queries, admit_mask, new_q, evec, enorm,
+                            eid, *state)
+        return EngineState(*leaves), q
 
     def local_round(db, vnorm, adj, pref, blk_perm, q, spec_w, *leaves):
         lc = {"db": db[0], "vnorm": vnorm[0], "adj": adj[0],
@@ -843,7 +1060,128 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
         return (EngineState(*leaves), (sw, hi, pk), steps[0],
                 lcnt.sum(axis=0), wsum.sum(axis=0))
 
-    return EngineStepper(init, rnd, admit, retire, run_chunk, K)
+    # -- in-chunk admission under shard_map: every shard seats its own
+    # rows of the globally-ordered admission (free ranks offset by the
+    # free counts of lower-index shards via all_gather), so the seating
+    # is exactly the host's row-major staging over the (S, Qs) pool;
+    # the while_loop exit tests stay psum-lockstep.
+    k_out = sp.k
+
+    def make_local_chunk_admit(dynamic):
+        def local_chunk_admit(db, vnorm, adj, pref, blk_perm, q, spec_w,
+                              hit, peak, cfg, budget, pend_q, pend_arr,
+                              cursor, t0, evec, enorm, eid, *leaves):
+            base = {"db": db[0], "vnorm": vnorm[0], "adj": adj[0],
+                    "pref": pref[0], "blk_perm": blk_perm[0]}
+            state = EngineState(*(leaf[0] for leaf in leaves))
+            ql = q[0]
+            sw, hi, pk = spec_w[0], hit[0], peak[0]
+            Qs = state.done.shape[0]
+            bud = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(K))
+            cur0 = jnp.asarray(cursor, jnp.int32)
+            t0i = jnp.asarray(t0, jnp.int32)
+            parr = jnp.asarray(pend_arr, jnp.int32)
+            spec_max = jnp.asarray(cfg[0], jnp.int32)
+            myidx = jax.lax.axis_index(axis_name)
+
+            def gsum(x):
+                return jax.lax.psum(x.sum().astype(jnp.int32), axis_name)
+
+            def cond(carry):
+                _, _, _, _, _, cur, _, j, active = carry[:9]
+                return ((j < bud)
+                        & ((active > 0)
+                           | (_pending_avail(parr, cur, t0i + j) > 0)))
+
+            def body(carry):
+                (st, ql, sw, hi, pk, cur, prev_nd, j, _, lcnt, wsum,
+                 aq, ri, rd, rr, rn) = carry
+                fin_i, fin_d, _ = _finalize(st, k_out)
+                ri = ri.at[j].set(fin_i)
+                rd = rd.at[j].set(fin_d)
+                rr = rr.at[j].set(st.rounds)
+                rn = rn.at[j].set(st.n_dist)
+                # global row-major free ranks: offset this shard's by
+                # the free counts on lower-index shards
+                counts = jax.lax.all_gather(
+                    st.done.sum().astype(jnp.int32), axis_name)
+                offset = jnp.sum(jnp.where(
+                    jnp.arange(counts.shape[0]) < myidx, counts, 0))
+                seat, pidx, new_q = _seat_pending(
+                    st.done, cur,
+                    _pending_avail(parr, cur, t0i + j), offset,
+                    pend_q, ql)
+                st, ql = _admit_rows(st, ql, seat, new_q, evec, enorm,
+                                     eid, params)
+                cur = cur + gsum(seat)
+                aq = aq.at[j].set(pidx)
+                if dynamic:
+                    sw = jnp.where(seat, spec_max, sw)
+                    hi = jnp.where(seat, jnp.float32(-1.0), hi)
+                    pk = jnp.where(seat, jnp.float32(0.0), pk)
+                lc = dict(base, queries=ql,
+                          qq=jnp.sum(ql.astype(jnp.float32) ** 2, -1))
+                # post-admission n_dist as prev_nd: seated rows' spec
+                # deltas must start from 0 (see engine_run_chunk_admit)
+                st, sw, hi, pk, prev_nd, j, lcnt, wsum = _chunk_round(
+                    (st, sw, hi, pk, st.n_dist, j, lcnt, wsum),
+                    lambda s, w: _round(s, lc, params, geom, a2a, w),
+                    sp.rounds_cap, dynamic, cfg)
+                return (st, ql, sw, hi, pk, cur, prev_nd, j,
+                        gsum(~st.done), lcnt, wsum, aq, ri, rd, rr, rn)
+
+            zeros_k = jnp.zeros((K,), jnp.int32)
+            zeros_kq = jnp.zeros((K, Qs), jnp.int32)
+            carry = (state, ql, sw, hi, pk, cur0, state.n_dist,
+                     jnp.int32(0), gsum(~state.done), zeros_k, zeros_k,
+                     jnp.full((K, Qs), -1, jnp.int32),
+                     jnp.full((K, Qs, k_out), INVALID, jnp.int32),
+                     jnp.zeros((K, Qs, k_out), jnp.float32),
+                     zeros_kq, zeros_kq)
+            (st, ql, sw, hi, pk, cur, _, steps, _, lcnt, wsum,
+             aq, ri, rd, rr, rn) = jax.lax.while_loop(cond, body, carry)
+            return (tuple(leaf[None] for leaf in st), ql[None], sw[None],
+                    hi[None], pk[None], steps[None], lcnt[None],
+                    wsum[None], aq[None], ri[None], rd[None], rr[None],
+                    rn[None], cur[None])
+
+        return local_chunk_admit
+
+    admit_in = ((P(axis_name),) * 9 + (P(),) * 9
+                + (P(axis_name),) * nleaves)
+    admit_out = ((P(axis_name),) * nleaves,) + (P(axis_name),) * 13
+    admit_fns = {}
+    for dyn in (False, True):
+        admit_fns[dyn] = jax.jit(_shard_map_fn(
+            make_local_chunk_admit(dyn), mesh, admit_in, admit_out))
+
+    def run_chunk_admit(consts, state, queries, spec_state, spec_cfg,
+                        budget, pend, cursor, t0, entry, dynamic=False):
+        pend_q, pend_arr = pend
+        sw, hi, pk = spec_state
+        sw = jnp.broadcast_to(jnp.asarray(sw, jnp.int32),
+                              queries.shape[:2])
+        cfg = tuple(jnp.asarray(c) for c in spec_cfg)
+        (leaves, q, sw, hi, pk, steps, lcnt, wsum, aq, ri, rd, rr, rn,
+         cur) = admit_fns[bool(dynamic)](
+            consts["db"], consts["vnorm"], consts["adj"], consts["pref"],
+            consts["blk_perm"], queries, sw, hi, pk, cfg,
+            jnp.asarray(budget, jnp.int32), jnp.asarray(pend_q),
+            jnp.asarray(pend_arr, jnp.int32),
+            jnp.asarray(cursor, jnp.int32), jnp.asarray(t0, jnp.int32),
+            *entry, *state)
+        # steps/cursor are replicated (lockstep cond + gsum'd cursor);
+        # live/width traces are per-shard partial sums; the admit/evict
+        # traces come back shard-major — normalize to the sim leg's
+        # (K, S, Qs[, k]) layout
+        return (EngineState(*leaves), q, (sw, hi, pk), steps[0],
+                lcnt.sum(axis=0), wsum.sum(axis=0),
+                jnp.swapaxes(aq, 0, 1), jnp.swapaxes(ri, 0, 1),
+                jnp.swapaxes(rd, 0, 1), jnp.swapaxes(rr, 0, 1),
+                jnp.swapaxes(rn, 0, 1), cur[0])
+
+    return EngineStepper(init, rnd, admit, retire, run_chunk, K,
+                         run_chunk_admit)
 
 
 def search_distributed(consts, queries, entry_vec, entry_norm, entry_id,

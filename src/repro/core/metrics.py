@@ -50,12 +50,20 @@ def latency_percentiles(latencies) -> dict:
     }
 
 
-def slot_occupancy(live_counts, num_slots: int) -> float:
-    """Mean fraction of the slot pool holding a live query per round."""
+def slot_occupancy(live_counts, num_slots: int,
+                   total_rounds: int | None = None) -> float:
+    """Mean fraction of the slot pool holding a live query per round.
+
+    ``live_counts`` has one entry per *busy* round (rounds the engine
+    actually stepped); pass ``total_rounds`` to spread the same live
+    work over the full serving clock — busy plus idle rounds — so an
+    empty pool waiting for arrivals reads as occupancy 0, not as time
+    that never happened."""
     live = np.asarray(live_counts, np.float64)
-    if live.size == 0:
+    rounds = live.size if total_rounds is None else total_rounds
+    if rounds <= 0:
         return 0.0
-    return float(live.mean() / max(num_slots, 1))
+    return float(live.sum() / (rounds * max(num_slots, 1)))
 
 
 def stream_summary(stats) -> dict:
@@ -64,14 +72,25 @@ def stream_summary(stats) -> dict:
     normalized throughput, sustained wall QPS and the host-sync model
     (engine_run_chunk dispatches, one-time compile seconds — ``wall_s``
     and per-query wall latency exclude the compile, which is reported
-    separately). Safe on a run that retired zero queries: every
-    percentile block is zeroed rather than crashing on an empty array."""
+    separately). Clock accounting: ``total_rounds`` counts engine
+    (busy) rounds, ``idle_rounds`` the empty-pool gaps the scheduler
+    skipped over; ``occupancy`` and ``queries_per_round`` are
+    normalized over the *full* serving clock (busy + idle) so sparse
+    arrivals don't overstate throughput. Safe on a run that retired
+    zero queries: every percentile block is zeroed rather than
+    crashing on an empty array.
+
+    tests/test_scheduler.py asserts every scalar StreamStats field
+    surfaces here — extend this dict when adding a counter."""
     res = stats.results
     n = len(res)
     dispatches = getattr(stats, "host_dispatches", 0)
+    idle = getattr(stats, "idle_rounds", 0)
+    clock = stats.total_rounds + idle
     return {
         "queries": n,
         "total_rounds": stats.total_rounds,
+        "idle_rounds": idle,
         "occupancy": round(stats.occupancy, 4),
         "latency_rounds": {k: round(v, 2) for k, v in latency_percentiles(
             [r.latency_rounds for r in res]).items()},
@@ -80,15 +99,18 @@ def stream_summary(stats) -> dict:
         "wall_latency_ms": {k: round(v * 1e3, 2)
                             for k, v in latency_percentiles(
             [r.wall_latency_s for r in res]).items()},
-        "queries_per_round": round(n / max(stats.total_rounds, 1), 3),
+        "queries_per_round": round(n / max(clock, 1), 3),
         "sustained_qps": round(qps(n, stats.wall_s), 1),
+        "wall_s": round(float(stats.wall_s), 3),
         "host_dispatches": dispatches,
         "dispatches_per_query": round(dispatches / n, 3) if n else 0.0,
         "rounds_per_dispatch": round(
             stats.total_rounds / dispatches, 3) if dispatches else 0.0,
         "compile_s": round(float(getattr(stats, "compile_s", 0.0)), 3),
+        "injit_admit": bool(getattr(stats, "injit_admit", False)),
         "pages_unique": stats.pages_unique,
         "items_recv": stats.items_recv,
+        "props_sent": stats.props_sent,
         "drops_b": stats.drops_b,
         "mean_spec_w": round(float(np.mean(stats.spec_trace)), 2)
         if stats.spec_trace else 0.0,

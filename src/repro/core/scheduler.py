@@ -9,8 +9,8 @@ being fixed up front. The frozen-batch drivers (``search_sim`` /
 every remaining round's distance/merge/all_to_all work, and
 ``spec_width`` is a static knob.
 
-This module closes the gap with three host-side pieces over the
-stepper (`engine_init / engine_run_chunk / engine_admit /
+This module closes the gap with three pieces over the stepper
+(`engine_init / engine_run_chunk[_admit] / engine_admit /
 engine_retire`):
 
   * **slot pool + continuous admission** — a fixed (S, Qs) pool of query
@@ -33,21 +33,41 @@ engine_retire`):
     once its arrival round has passed and a slot is free, and records
     wait + service latency per query.
 
-**Host-sync model** (``round_chunk``): the inner loop is device-paced.
-Each dispatch of ``engine_run_chunk`` runs up to ``round_chunk`` engine
-rounds in one jit'd ``while_loop``; the host syncs ``done/rounds/
-n_dist`` only at chunk boundaries. The schedule stays *exactly* the
-per-round schedule because the chunk exits early in-jit whenever
-retiring could matter: when every live row finishes, and — whenever
-unadmitted queries remain (``stop_on_finish``) — on the first round any
-row finishes, so a freed slot is refilled on exactly the round the
-per-round scheduler (``round_chunk=1``) would have. Retirement
-accounting is exact regardless of when the host looks: ``retire_round =
-admit_round + rounds`` reads the per-row ``rounds`` counter, and the
-chunk returns per-round live-count/width traces so occupancy and
-speculation traces are reconstructed per round, not per boundary. The
-only asynchrony left on the host is admission itself (see ROADMAP:
-in-jit admission).
+**Host-sync model** (``round_chunk`` + ``injit_admit``): the inner
+loop is device-paced, *including admission*. Each dispatch of
+``engine_run_chunk_admit`` runs up to ``round_chunk`` engine rounds in
+one jit'd ``while_loop``; the pending queue is pre-staged on device
+(query vectors + arrival rounds sorted by arrival, a traced cursor),
+and every in-jit round boundary seats arrived queries into freed slots
+by the same ``engine_admit`` math and the same staging order the host
+would use — so the chunk advances the serving clock straight through
+arrivals and finishes, and the host syncs only at chunk boundaries
+(``total_rounds / round_chunk`` dispatches when the pool stays busy).
+The schedule stays *exactly* the per-round schedule: a seated row
+evicts a finished one, whose results/rounds/n_dist were captured in
+per-boundary admit traces, and the host replays those traces at the
+chunk boundary to reconstruct ``owner``/``admit_t``/``retire_round``
+(``retire_round = admit_round + rounds``) bit-exactly; per-round
+live-count/width traces reconstruct occupancy and speculation traces
+per round, not per boundary.
+
+What remains host-side: **result emission** (QueryResult records are
+materialized from the traces at chunk boundaries), the **frozen-mode
+all-free gate** (``refill=False`` admits only into an all-free pool, a
+global condition the host checks between waves — in-jit admission is a
+refill-mode device path), **idle-clock jumps** (an empty pool with no
+arrived query skips ahead to the next arrival without a dispatch;
+the skipped rounds are counted as ``idle_rounds``), and **wall-clock
+stamps** (a query admitted mid-chunk is stamped with the chunk's
+launch wall time — round-accurate latency is exact, wall latency is
+chunk-granular by construction).
+
+``injit_admit=False`` falls back to the host-paced admission loop
+(PR 4's model): the chunk budget is capped at the next pending arrival
+and ``stop_on_finish`` ends the chunk on the first freed slot whenever
+unadmitted queries remain, so chunk length collapses toward one round
+while the queue drains — the measured dispatch gap is the point of the
+in-jit path (``benchmarks/bench_serving.py`` round-chunk sweeps).
 
 Per-query results are **bit-identical** to the one-shot drivers under
 lossless capacities: every stage's per-row math depends only on that
@@ -207,9 +227,10 @@ class StreamStats:
     """Aggregate scheduler run statistics."""
 
     results: list             # [QueryResult] in retirement order
-    total_rounds: int         # engine rounds stepped
-    occupancy: float          # mean live-slots / total-slots per round
-    occupancy_trace: list     # per-round live-slot counts
+    total_rounds: int         # engine rounds stepped (busy rounds)
+    occupancy: float          # mean live-slots / total-slots over the
+                              # full serving clock (busy + idle rounds)
+    occupancy_trace: list     # per-busy-round live-slot counts
     pages_unique: int         # cumulative unique page reads
     items_recv: int
     props_sent: int
@@ -218,6 +239,10 @@ class StreamStats:
     wall_s: float             # steady-state wall clock (excl. compile)
     host_dispatches: int = 0  # engine_run_chunk launches (host syncs)
     compile_s: float = 0.0    # one-time stepper warmup/compile seconds
+    idle_rounds: int = 0      # serving-clock rounds the pool sat empty
+                              # waiting for an arrival (no engine work)
+    injit_admit: bool = False  # admission path the run actually used
+                               # (the scheduler's resolved flag)
 
     def by_qid(self):
         return {r.qid: r for r in self.results}
@@ -229,13 +254,17 @@ class StreamScheduler:
     ``round_chunk`` sets how many engine rounds one device dispatch may
     run before the host is consulted (see the module docstring's
     host-sync model); any value produces the exact per-round schedule.
+    ``injit_admit`` selects the device-side pending queue (None = on
+    whenever ``refill`` is — frozen mode always keeps the host-side
+    all-free gate, so the flag is a no-op there).
     """
 
     def __init__(self, consts, geom: EngineGeom, params: EngineParams,
                  entry, num_slots: int, mesh=None, axis_name: str = "lun",
                  controller: Optional[SpecController] = None,
                  refill: bool = True, round_chunk: int = 1,
-                 stepper: Optional[EngineStepper] = None):
+                 stepper: Optional[EngineStepper] = None,
+                 injit_admit: Optional[bool] = None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if round_chunk < 1:
@@ -261,6 +290,15 @@ class StreamScheduler:
             raise ValueError(
                 f"stepper was compiled for round_chunk="
                 f"{self.stepper.round_chunk} < requested {round_chunk}")
+        want_injit = refill if injit_admit is None \
+            else bool(injit_admit) and refill
+        if want_injit and self.stepper.run_chunk_admit is None:
+            if injit_admit:   # explicitly requested, not the default
+                raise ValueError(
+                    "injit_admit=True needs a stepper with a "
+                    "run_chunk_admit stage (make_stepper builds one)")
+            want_injit = False
+        self.injit_admit = want_injit
         self.S = geom.num_shards
 
     # -- host-side pool bookkeeping -----------------------------------------
@@ -284,14 +322,27 @@ class StreamScheduler:
             self._static_spec = (w, z, z)
         return self._static_spec, _NULL_CFG, False
 
-    def _warmup(self, state, qbuf):
-        """Compile admit/run_chunk/retire on shape-matched dummies so
-        ``wall_s`` and the first queries' wall latency measure steady
-        state, not the one-time jit compile (mirrors serve.py's
+    def _warmup(self, state, qbuf, pend=None):
+        """Compile the dispatch path actually used by :meth:`run` —
+        admit/run_chunk/retire, or run_chunk_admit/retire when ``pend``
+        (the staged device queue) is given — on shape-matched dummies,
+        so ``wall_s`` and the first queries' wall latency measure
+        steady state, not the one-time jit compile (mirrors serve.py's
         prefill/decode warmup). Returns the seconds spent."""
         S, Qs = self.S, self.num_slots
         t0 = time.time()
         spec_state, cfg, dyn = self._spec_inputs((S, Qs))
+        if pend is not None:
+            # compile on the real staged queue (its shape fixes the
+            # trace) with an exhausted cursor and an all-parked pool:
+            # the while_loop compiles but runs zero rounds, admitting
+            # and mutating nothing — outputs are discarded anyway
+            out = self.stepper.run_chunk_admit(
+                self.consts, state, qbuf, spec_state, cfg, 1, pend,
+                int(pend[1].shape[0]), 0, self.entry, dynamic=dyn)
+            ids, dists, _ = self.stepper.retire(state)
+            jax.block_until_ready((out[0].done, out[11], ids, dists))
+            return time.time() - t0
         zmask = jnp.zeros((S, Qs), bool)
         wstate, wq = self.stepper.admit(state, qbuf, zmask, qbuf,
                                         *self.entry)
@@ -315,10 +366,17 @@ class StreamScheduler:
         S, Qs = self.S, self.num_slots
         K = self.round_chunk
         stepped = 0                                   # engine rounds run
+        idle = 0                                      # empty-pool rounds
         dispatches = 0                                # run_chunk launches
+        injit = self.injit_admit and N > 0
+        pend = None
+        if injit:
+            # device-side pending queue, staged once in admission order
+            pend = (jnp.asarray(queries[order]),
+                    jnp.asarray(arrivals[order], jnp.int32))
 
         state, qbuf = self._fresh_pool(d)
-        compile_s = self._warmup(state, qbuf)
+        compile_s = self._warmup(state, qbuf, pend)
         owner = np.full((S, Qs), INVALID, np.int64)   # slot -> qid
         admit_t = np.zeros((S, Qs), np.int64)
         admit_wall = np.zeros((S, Qs), np.float64)
@@ -331,66 +389,122 @@ class StreamScheduler:
         t0 = time.time()
 
         while retired < N:
-            # -- admission: fill free slots from the arrived pending queue
-            free = np.argwhere(owner == INVALID)
-            pool_all_free = len(free) == S * Qs
-            can_admit = self.refill or pool_all_free
-            staged = []
-            while (can_admit and len(staged) < len(free) and next_q < N
-                   and arrivals[order[next_q]] <= t):
-                staged.append(order[next_q])
-                next_q += 1
-            if staged:
-                mask = np.zeros((S, Qs), bool)
-                new_q = np.zeros((S, Qs, d), np.float32)
-                now_wall = time.time()
-                for (s, r), qid in zip(free[:len(staged)], staged):
-                    mask[s, r] = True
-                    new_q[s, r] = queries[qid]
-                    owner[s, r] = qid
-                    admit_t[s, r] = t
-                    admit_wall[s, r] = now_wall
-                state, qbuf = self.stepper.admit(
-                    state, qbuf, jnp.asarray(mask), jnp.asarray(new_q),
-                    *self.entry)
-                if self.controller is not None:
-                    self.controller.reset_rows(mask)
+            if not injit:
+                # -- host-paced admission: fill free slots from the
+                # arrived pending queue (the in-jit path seats these
+                # inside the chunk instead)
+                free = np.argwhere(owner == INVALID)
+                pool_all_free = len(free) == S * Qs
+                can_admit = self.refill or pool_all_free
+                staged = []
+                while (can_admit and len(staged) < len(free) and next_q < N
+                       and arrivals[order[next_q]] <= t):
+                    staged.append(order[next_q])
+                    next_q += 1
+                if staged:
+                    mask = np.zeros((S, Qs), bool)
+                    new_q = np.zeros((S, Qs, d), np.float32)
+                    now_wall = time.time()
+                    for (s, r), qid in zip(free[:len(staged)], staged):
+                        mask[s, r] = True
+                        new_q[s, r] = queries[qid]
+                        owner[s, r] = qid
+                        admit_t[s, r] = t
+                        admit_wall[s, r] = now_wall
+                    state, qbuf = self.stepper.admit(
+                        state, qbuf, jnp.asarray(mask), jnp.asarray(new_q),
+                        *self.entry)
+                    if self.controller is not None:
+                        self.controller.reset_rows(mask)
 
             live_mask = owner != INVALID
             live = int(live_mask.sum())
-            if live == 0:
-                # pool idle: jump the clock to the next arrival
-                t = max(t + 1, int(arrivals[order[next_q]])) \
-                    if next_q < N else t + 1
+            arrived_now = bool(next_q < N
+                               and arrivals[order[next_q]] <= t)
+            if live == 0 and not (injit and arrived_now):
+                # pool idle until the next arrival: jump the serving
+                # clock without a dispatch. The skipped rounds ran no
+                # engine work but they are real serving time — count
+                # them so occupancy/throughput read over the full clock
+                nt = (max(t + 1, int(arrivals[order[next_q]]))
+                      if next_q < N else t + 1)
+                idle += nt - t
+                t = nt
                 continue
 
-            # -- chunk budget: wake exactly when admission could matter.
-            # Free slots -> nothing can be admitted before the next
-            # arrival (the admission loop above drained everything
-            # <= t), so cap the chunk at that arrival and let mid-chunk
-            # finishes park. Full pool -> a finish may seat a waiting or
-            # imminent arrival, so stop in-jit on the first finish. Both
-            # keep the schedule identical to round_chunk=1.
-            # (frozen mode admits only into an all-free pool, which the
-            # in-jit every-live-row-done exit already detects)
-            budget = K
-            stop_on_finish = False
-            if self.refill and next_q < N:
-                na = int(arrivals[order[next_q]])
-                if live < S * Qs:
-                    budget = max(1, min(K, na - t))
-                else:
-                    stop_on_finish = na <= t + K
-
-            # -- run up to `budget` rounds on-device at the controller's
-            # current widths (the chunk steps the widths per round)
             spec_state, cfg, dyn = self._spec_inputs((S, Qs))
-            state, spec_state, steps, live_cnt, width_sum = \
-                self.stepper.run_chunk(self.consts, state, qbuf,
-                                       spec_state, cfg, budget,
-                                       stop_on_finish, dynamic=dyn)
-            dispatches += 1
-            steps = int(steps)                        # host sync point
+            if injit:
+                # -- device-paced chunk incl. admission: full budget,
+                # no stop-on-finish — freed slots are reseated in-jit
+                # at the exact boundary, and the admit/evict traces let
+                # the host replay the accounting afterwards
+                launch_wall = time.time()
+                (state, qbuf, spec_state, steps, live_cnt, width_sum,
+                 admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist, cur) = \
+                    self.stepper.run_chunk_admit(
+                        self.consts, state, qbuf, spec_state, cfg, K,
+                        pend, next_q, t, self.entry, dynamic=dyn)
+                dispatches += 1
+                steps = int(steps)                    # host sync point
+                now_wall = time.time()
+                admit_qidx = np.asarray(admit_qidx)[:steps]
+                if admit_qidx.size and (admit_qidx >= 0).any():
+                    ret_i = np.asarray(ret_i)
+                    ret_d = np.asarray(ret_d)
+                    ret_rounds = np.asarray(ret_rounds)
+                    ret_ndist = np.asarray(ret_ndist)
+                    for j in range(steps):
+                        for s, r in np.argwhere(admit_qidx[j] >= 0):
+                            if owner[s, r] != INVALID:
+                                # the seated query evicted a finished
+                                # row — emit it from the boundary-j
+                                # capture (bit-identical to a host-side
+                                # retire on that round)
+                                results.append(QueryResult(
+                                    qid=int(owner[s, r]),
+                                    ids=ret_i[j, s, r].copy(),
+                                    dists=ret_d[j, s, r].copy(),
+                                    arrival_round=int(
+                                        arrivals[owner[s, r]]),
+                                    admit_round=int(admit_t[s, r]),
+                                    retire_round=int(
+                                        admit_t[s, r]
+                                        + ret_rounds[j, s, r]),
+                                    service_rounds=int(
+                                        ret_rounds[j, s, r]),
+                                    n_dist=int(ret_ndist[j, s, r]),
+                                    wall_latency_s=now_wall
+                                    - admit_wall[s, r]))
+                                retired += 1
+                            owner[s, r] = int(order[admit_qidx[j][s, r]])
+                            admit_t[s, r] = t + j
+                            admit_wall[s, r] = launch_wall
+                next_q = int(cur)
+            else:
+                # -- host-paced admission needs the chunk to wake
+                # exactly when admission could matter. Free slots ->
+                # nothing can be admitted before the next arrival (the
+                # admission loop above drained everything <= t), so cap
+                # the chunk at that arrival and let mid-chunk finishes
+                # park. Full pool -> a finish may seat a waiting or
+                # imminent arrival, so stop in-jit on the first finish.
+                # Both keep the schedule identical to round_chunk=1.
+                # (frozen mode admits only into an all-free pool, which
+                # the in-jit every-live-row-done exit already detects)
+                budget = K
+                stop_on_finish = False
+                if self.refill and next_q < N:
+                    na = int(arrivals[order[next_q]])
+                    if live < S * Qs:
+                        budget = max(1, min(K, na - t))
+                    else:
+                        stop_on_finish = na <= t + K
+                state, spec_state, steps, live_cnt, width_sum = \
+                    self.stepper.run_chunk(self.consts, state, qbuf,
+                                           spec_state, cfg, budget,
+                                           stop_on_finish, dynamic=dyn)
+                dispatches += 1
+                steps = int(steps)                    # host sync point
             t += steps
             stepped += steps
             if self.controller is not None:
@@ -408,7 +522,7 @@ class StreamScheduler:
             # -- retire finished rows (the chunk already parked rows
             # that hit the per-query round cap, at the exact round
             # boundary the per-round scheduler would have)
-            fin = live_mask & done
+            fin = (owner != INVALID) & done
             if fin.any():
                 out_i, out_d, _ = self.stepper.retire(state)
                 out_i = np.asarray(out_i)
@@ -431,29 +545,36 @@ class StreamScheduler:
 
         return StreamStats(
             results=results, total_rounds=stepped,
-            occupancy=slot_occupancy(occ_trace, S * Qs),
+            occupancy=slot_occupancy(occ_trace, S * Qs, stepped + idle),
             occupancy_trace=occ_trace,
             pages_unique=int(np.asarray(state.pages_unique).sum()),
             items_recv=int(np.asarray(state.items_recv).sum()),
             props_sent=int(np.asarray(state.props_sent).sum()),
             drops_b=int(np.asarray(state.drops_b).sum()),
             spec_trace=spec_trace, wall_s=time.time() - t0,
-            host_dispatches=dispatches, compile_s=compile_s)
+            host_dispatches=dispatches, compile_s=compile_s,
+            idle_rounds=idle, injit_admit=self.injit_admit)
 
 
 def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
     """Open-loop arrival rounds: ``rate`` mean arrivals per engine
-    round (exponential inter-arrival gaps). rate <= 0 -> all at 0."""
+    round (exponential inter-arrival gaps). rate <= 0 -> all at 0.
+
+    Cumulative gaps are rounded half-up to the integer round clock —
+    truncation (plain ``astype``) would floor every arrival ~0.5 rounds
+    early, biasing the realized arrival rate above the requested one in
+    any measurement window."""
     if rate <= 0:
         return np.zeros(n, np.int64)
     rng = np.random.default_rng(seed)
-    return np.cumsum(rng.exponential(1.0 / rate, n)).astype(np.int64)
+    gaps = rng.exponential(1.0 / rate, n)
+    return np.floor(np.cumsum(gaps) + 0.5).astype(np.int64)
 
 
 def stream_search(consts, geom, params, entry, queries,
                   num_slots: int, arrivals=None, mesh=None,
                   dynamic_spec: bool = False, refill: bool = True,
-                  round_chunk: int = 1):
+                  round_chunk: int = 1, injit_admit=None):
     """Convenience wrapper: run the streaming scheduler and return
     (ids (N, k), dists (N, k), StreamStats) in query order."""
     ctrl = None
@@ -468,7 +589,8 @@ def stream_search(consts, geom, params, entry, queries,
     sched = StreamScheduler(consts, geom, params, entry,
                             num_slots=num_slots, mesh=mesh,
                             controller=ctrl, refill=refill,
-                            round_chunk=round_chunk)
+                            round_chunk=round_chunk,
+                            injit_admit=injit_admit)
     stats = sched.run(queries, arrivals)
     k = params.search.k
     n = np.asarray(queries).shape[0]

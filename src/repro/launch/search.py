@@ -81,6 +81,13 @@ def main(argv=None):
                          "(engine_run_chunk); the host syncs only at "
                          "chunk boundaries. Any value yields the exact "
                          "per-round schedule (1 = host-paced rounds)")
+    ap.add_argument("--injit-admit", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="streaming: seat arrived queries from a "
+                         "device-side pending queue inside the round "
+                         "chunk (auto = on whenever refill admission "
+                         "is active; off = PR-4-style host-paced "
+                         "admission with stop-on-finish chunks)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
@@ -122,7 +129,9 @@ def main(argv=None):
                             arrival_rate=args.arrival_rate,
                             seed=args.seed + 2,
                             dynamic_spec=args.spec_dynamic,
-                            round_chunk=args.round_chunk),
+                            round_chunk=args.round_chunk,
+                            injit_admit={"auto": None, "on": True,
+                                         "off": False}[args.injit_admit]),
         }
         print(json.dumps(res, indent=1))
         if args.out:

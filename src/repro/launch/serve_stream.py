@@ -40,7 +40,8 @@ class StreamingRetriever:
 
     def __init__(self, db: np.ndarray, packed, *, L=16, W=1, k=4,
                  num_slots=4, spec=0, dynamic_spec=False,
-                 kernel_mode="jnp", coalesce_qb=8, round_chunk=8):
+                 kernel_mode="jnp", coalesce_qb=8, round_chunk=8,
+                 injit_admit=None):
         self.db = db
         self.consts, self.geom, self.entry = pack_for_engine(packed)
         sp = SearchParams(L=L, W=W, k=k)
@@ -50,6 +51,7 @@ class StreamingRetriever:
         self.num_slots = num_slots
         self.dynamic_spec = dynamic_spec
         self.round_chunk = round_chunk
+        self.injit_admit = injit_admit
 
     def retrieve(self, queries: np.ndarray, arrivals=None):
         """(N, d) queries -> (vecs (N, k, d), ids, dists, StreamStats)."""
@@ -57,14 +59,15 @@ class StreamingRetriever:
             self.consts, self.geom, self.params, self.entry, queries,
             num_slots=self.num_slots, arrivals=arrivals,
             dynamic_spec=self.dynamic_spec,
-            round_chunk=self.round_chunk)
+            round_chunk=self.round_chunk,
+            injit_admit=self.injit_admit)
         vecs = self.db[np.clip(ids, 0, self.db.shape[0] - 1)]
         return vecs, ids, dists, stats
 
 
 def stream_report(consts, geom, params, entry, db, queries, *, slots,
                   arrival_rate, seed, dynamic_spec=False,
-                  refill=True, round_chunk=8) -> dict:
+                  refill=True, round_chunk=8, injit_admit=None) -> dict:
     """Run one streaming session and build the serving report shared by
     the `search --stream` and `serve_stream` CLIs: Poisson arrivals ->
     scheduler -> recall vs brute force + stream_summary metrics."""
@@ -72,7 +75,7 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
     ids, _, st = stream_search(
         consts, geom, params, entry, queries, num_slots=slots,
         arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
-        round_chunk=round_chunk)
+        round_chunk=round_chunk, injit_admit=injit_admit)
     k = params.search.k
     true_ids, _ = brute_force_topk(db, queries, k)
     return {
@@ -80,6 +83,8 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
         "arrival_rate": arrival_rate, "refill": refill,
         "spec": params.spec_width, "spec_dynamic": dynamic_spec,
         "round_chunk": round_chunk,
+        # injit_admit arrives via stream_summary: the scheduler's
+        # *resolved* admission path, not a re-derivation of the flag
         "recall@k": round(float(recall_at_k(ids, true_ids)), 4),
         **stream_summary(st),
     }
@@ -113,6 +118,11 @@ def main(argv=None):
                     help="engine rounds per device dispatch "
                          "(engine_run_chunk); host syncs only at chunk "
                          "boundaries, schedule stays exactly per-round")
+    ap.add_argument("--injit-admit", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="seat arrived queries from a device-side "
+                         "pending queue inside the round chunk (auto = "
+                         "on whenever refill admission is active)")
     ap.add_argument("--kernel-mode", default="jnp",
                     choices=["auto", "pallas", "interpret", "ref", "jnp"])
     ap.add_argument("--coalesce-qb", type=int, default=8)
@@ -147,7 +157,9 @@ def main(argv=None):
                         seed=args.seed + 2,
                         dynamic_spec=args.spec_dynamic,
                         refill=not args.no_refill,
-                        round_chunk=args.round_chunk),
+                        round_chunk=args.round_chunk,
+                        injit_admit={"auto": None, "on": True,
+                                     "off": False}[args.injit_admit]),
     }
     print(json.dumps(res, indent=1))
     if args.out:

@@ -92,7 +92,7 @@ def main():
             ids, dists, st = stream_search(
                 consts, geom, params_st, entry, queries, num_slots=3,
                 arrivals=arrivals, dynamic_spec=dyn, mesh=mesh,
-                round_chunk=chunk)
+                round_chunk=chunk, injit_admit=False)
             if not dyn:
                 np.testing.assert_array_equal(
                     ids, np.asarray(si).reshape(nq, -1))
@@ -107,6 +107,35 @@ def main():
         print(f"chunked shard_map stepper (dyn={dyn}) == per-round OK "
               f"(dispatches {runs[1].host_dispatches} -> "
               f"{runs[4].host_dispatches})")
+
+    # in-jit admission under shard_map: the device-side pending queue
+    # (global row-major seating via all_gather'd free ranks) must
+    # reproduce the host-admission schedule bit-exactly — per-query
+    # records, round schedule, occupancy/spec traces — with strictly
+    # fewer host dispatches than PR 4's stop-on-finish path at the
+    # same round_chunk
+    for dyn in (False, True):
+        runs = {}
+        for injit in (False, True):
+            ids, dists, st = stream_search(
+                consts, geom, params_st, entry, queries, num_slots=3,
+                arrivals=arrivals, dynamic_spec=dyn, mesh=mesh,
+                round_chunk=4, injit_admit=injit)
+            if not dyn:
+                np.testing.assert_array_equal(
+                    ids, np.asarray(si).reshape(nq, -1))
+                np.testing.assert_array_equal(
+                    dists, np.asarray(sd).reshape(nq, -1))
+            runs[injit] = st
+        assert records(runs[True]) == records(runs[False])
+        assert runs[True].total_rounds == runs[False].total_rounds
+        assert runs[True].occupancy_trace == runs[False].occupancy_trace
+        assert runs[True].spec_trace == runs[False].spec_trace
+        assert runs[True].idle_rounds == runs[False].idle_rounds
+        assert runs[True].host_dispatches < runs[False].host_dispatches
+        print(f"in-jit admission shard_map (dyn={dyn}) == host admission "
+              f"OK (dispatches {runs[False].host_dispatches} -> "
+              f"{runs[True].host_dispatches})")
     print("MULTISHARD_OK")
 
 

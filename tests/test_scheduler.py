@@ -44,11 +44,13 @@ def _oneshot(consts, geom, entry, queries, sp, spec=0):
 
 
 # ---------------------------------------------------------------------------
-# Bit-identity: streaming admission == one-shot, any arrivals/slots/chunks
+# Bit-identity: streaming admission == one-shot, any arrivals/slots/chunks,
+# host-paced or in-jit admission
 # ---------------------------------------------------------------------------
+@pytest.mark.parametrize("injit", [False, True])
 @pytest.mark.parametrize("slots,spec,chunk",
                          [(1, 0, 1), (3, 0, 3), (8, 4, 8), (3, 4, 8)])
-def test_stream_matches_oneshot_bitexact(ds, slots, spec, chunk):
+def test_stream_matches_oneshot_bitexact(ds, slots, spec, chunk, injit):
     db, queries, packed = ds
     consts, geom, entry = pack_for_engine(packed)
     sp = SearchParams(L=16, W=1, k=10)
@@ -59,16 +61,16 @@ def test_stream_matches_oneshot_bitexact(ds, slots, spec, chunk):
     arrivals = rng.integers(0, 20, queries.shape[0])
     ids, dists, st = stream_search(consts, geom, params, entry, queries,
                                    num_slots=slots, arrivals=arrivals,
-                                   round_chunk=chunk)
+                                   round_chunk=chunk, injit_admit=injit)
     np.testing.assert_array_equal(ids, ref_i)
     np.testing.assert_array_equal(dists, ref_d)
     assert len(st.results) == queries.shape[0]
 
 
 def test_stream_property_arrival_orders(ds):
-    """Hypothesis: any arrival order, slot count, arrival spacing and
-    round-chunk size produce bit-identical per-query results to one-shot
-    search_sim."""
+    """Hypothesis: any arrival order, slot count, arrival spacing,
+    round-chunk size and admission path (host-paced vs in-jit) produce
+    bit-identical per-query results to one-shot search_sim."""
     pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
@@ -87,9 +89,10 @@ def test_stream_property_arrival_orders(ds):
     @given(st.integers(1, 4),
            st.lists(st.integers(0, 12), min_size=nq, max_size=nq),
            st.sampled_from([1, 3, 8]),
+           st.booleans(),
            st.randoms(use_true_random=False))
     @settings(max_examples=10, deadline=None)
-    def check(slots, gaps, chunk, rnd):
+    def check(slots, gaps, chunk, injit, rnd):
         order = list(range(nq))
         rnd.shuffle(order)
         arrivals = np.zeros(nq, np.int64)
@@ -97,7 +100,8 @@ def test_stream_property_arrival_orders(ds):
         params = EngineParams.lossless(sp, slots, geom.max_degree)
         ids, dists, _ = stream_search(consts, geom, params, entry, q,
                                       num_slots=slots, arrivals=arrivals,
-                                      round_chunk=chunk)
+                                      round_chunk=chunk,
+                                      injit_admit=injit)
         np.testing.assert_array_equal(ids, ref_i)
         np.testing.assert_array_equal(dists, ref_d)
 
@@ -113,27 +117,31 @@ def _result_records(st):
             for r in st.results}
 
 
+@pytest.mark.parametrize("injit", [False, True])
 @pytest.mark.parametrize("dynamic", [False, True])
-def test_chunked_matches_per_round_exact(ds, dynamic):
+def test_chunked_matches_per_round_exact(ds, dynamic, injit):
     """round_chunk > 1 reproduces the per-round scheduler exactly:
     every QueryResult field (ids/dists/service_rounds/n_dist and the
     admit/retire round accounting), the engine-round schedule, the
     occupancy and speculation traces — with strictly fewer host
     dispatches. The dynamic leg proves the in-jit SpecController port
-    steps identically to the host rule at chunk boundaries."""
+    steps identically to the host rule at chunk boundaries; the injit
+    leg proves the device-side pending queue seats queries on exactly
+    the rounds the host admission loop would."""
     db, queries, packed = ds
     consts, geom, entry = pack_for_engine(packed)
     sp = SearchParams(L=16, W=1, k=10)
     params = EngineParams.lossless(sp, 3, geom.max_degree, spec_width=8)
     arrivals = np.random.default_rng(3).integers(0, 15, queries.shape[0])
 
-    def run(chunk):
+    def run(chunk, inj=injit):
         _, _, st = stream_search(consts, geom, params, entry, queries,
                                  num_slots=3, arrivals=arrivals,
-                                 dynamic_spec=dynamic, round_chunk=chunk)
+                                 dynamic_spec=dynamic, round_chunk=chunk,
+                                 injit_admit=inj)
         return st
 
-    base = run(1)
+    base = run(1, inj=False)
     for chunk in (3, 8):
         st = run(chunk)
         assert _result_records(st) == _result_records(base)
@@ -141,6 +149,36 @@ def test_chunked_matches_per_round_exact(ds, dynamic):
         assert st.occupancy_trace == base.occupancy_trace
         assert st.spec_trace == base.spec_trace
         assert st.host_dispatches < base.host_dispatches
+
+
+def test_injit_admission_drops_dispatches(ds):
+    """The device-side pending queue deletes the stop-on-finish early
+    exits and arrival-capped budgets: at the same round_chunk the
+    in-jit path must reproduce the host-admission schedule bit-exactly
+    with strictly fewer host dispatches (the tentpole claim), and the
+    chunk must actually run multiple rounds per dispatch while the
+    queue drains."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 3, geom.max_degree, spec_width=8)
+    arrivals = np.random.default_rng(3).integers(0, 15, queries.shape[0])
+
+    def run(inj):
+        _, _, st = stream_search(consts, geom, params, entry, queries,
+                                 num_slots=3, arrivals=arrivals,
+                                 round_chunk=8, injit_admit=inj)
+        return st
+
+    st_on, st_off = run(True), run(False)
+    assert _result_records(st_on) == _result_records(st_off)
+    assert st_on.total_rounds == st_off.total_rounds
+    assert st_on.occupancy_trace == st_off.occupancy_trace
+    assert st_on.host_dispatches < st_off.host_dispatches
+    # with continuous arrivals the queue keeps slots busy: dispatches
+    # approach total_rounds / K instead of one-per-finish
+    assert (st_on.total_rounds / st_on.host_dispatches
+            > st_off.total_rounds / st_off.host_dispatches)
 
 
 def test_chunked_frozen_matches_per_round(ds):
@@ -339,6 +377,98 @@ def test_stream_wall_excludes_compile(ds):
     # wall latencies are steady-state: no query's admit->retire span
     # can exceed the whole steady-state run
     assert max(r.wall_latency_s for r in st.results) <= st.wall_s + 0.5
+
+
+@pytest.mark.parametrize("injit,chunk", [(False, 1), (False, 8),
+                                         (True, 1), (True, 8)])
+def test_idle_rounds_stay_on_the_clock(ds, injit, chunk):
+    """Two bursts separated by a long gap: the pool drains, the
+    scheduler jumps the clock to the second burst, and the skipped
+    rounds must be counted (idle_rounds) — occupancy and
+    queries_per_round read over the full serving clock, not just the
+    busy rounds (which would overstate both under sparse arrivals).
+    Every admission/chunking path must account the same idle gap."""
+    from repro.core.metrics import stream_summary
+
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+    nq = 16
+    arrivals = np.concatenate([np.zeros(nq // 2, np.int64),
+                               np.full(nq // 2, 500, np.int64)])
+    _, _, st = stream_search(consts, geom, params, entry, queries[:nq],
+                             num_slots=2, arrivals=arrivals,
+                             round_chunk=chunk, injit_admit=injit)
+    assert st.idle_rounds > 0
+    clock = st.total_rounds + st.idle_rounds
+    # the serving clock spans the gap to the second burst
+    assert clock >= 500
+    busy_only = sum(st.occupancy_trace) / max(
+        len(st.occupancy_trace) * geom.num_shards * 2, 1)
+    assert st.occupancy < busy_only      # idle time dilutes occupancy
+    assert st.occupancy == pytest.approx(
+        sum(st.occupancy_trace) / (clock * geom.num_shards * 2))
+    summ = stream_summary(st)
+    assert summ["idle_rounds"] == st.idle_rounds
+    assert summ["queries_per_round"] == round(nq / clock, 3)
+    # second-burst queries were admitted on the post-gap clock
+    by_qid = st.by_qid()
+    assert all(by_qid[q].admit_round >= 500 for q in range(nq // 2, nq))
+    # the idle accounting is schedule-invariant: per-round host
+    # admission sees the identical gap
+    _, _, base = stream_search(consts, geom, params, entry, queries[:nq],
+                               num_slots=2, arrivals=arrivals,
+                               round_chunk=1, injit_admit=False)
+    assert st.idle_rounds == base.idle_rounds
+    assert st.total_rounds == base.total_rounds
+
+
+def test_stream_summary_covers_stats_fields(ds):
+    """Every scalar StreamStats field must surface in stream_summary —
+    the report silently dropped props_sent once; freeze the contract so
+    the next added counter can't be dropped."""
+    import dataclasses
+
+    from repro.core.metrics import stream_summary
+    from repro.core.scheduler import StreamStats
+
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+    _, _, st = stream_search(consts, geom, params, entry, queries[:8],
+                             num_slots=2)
+    summ = stream_summary(st)
+    per_round_lists = {"results", "occupancy_trace", "spec_trace"}
+    for f in dataclasses.fields(StreamStats):
+        if f.name in per_round_lists:
+            continue
+        assert f.name in summ, (
+            f"stream_summary dropped StreamStats.{f.name}")
+    assert summ["props_sent"] == st.props_sent > 0
+
+
+def test_poisson_arrivals_rounds_half_up():
+    """poisson_arrivals must round the cumulative gaps, not floor them
+    (flooring shifts every arrival ~0.5 rounds early, biasing the
+    realized rate above the requested one): the integer clock must sit
+    within half a round of the exact float clock on average, and the
+    realized mean rate must match the request over a long horizon."""
+    from repro.core.scheduler import poisson_arrivals
+
+    rate, n, seed = 0.25, 4096, 7
+    arr = poisson_arrivals(rate, n, seed=seed)
+    assert arr.dtype == np.int64 and (np.diff(arr) >= 0).all()
+    # same rng stream as the implementation -> the exact float clock
+    exact = np.cumsum(
+        np.random.default_rng(seed).exponential(1.0 / rate, n))
+    err = (arr - exact).mean()
+    assert abs(err) < 0.05, f"biased clock: mean shift {err:.3f}"
+    realized = n / arr[-1]
+    assert abs(realized - rate) / rate < 0.02, (
+        f"realized rate {realized:.4f} != requested {rate}")
+    assert poisson_arrivals(0.0, 5).tolist() == [0] * 5
 
 
 def test_stats_shapes_unified(ds):
