@@ -81,11 +81,16 @@ class KernelBackend:
                    up to this many same-page assignments share one page
                    read. 0 keeps the per-item path (one grid step per
                    assignment). Use a multiple of 8 on TPU (f32 sublane).
+    coalesce_min_reuse : minimum static page-reuse estimate
+                   (items / store pages) at which the coalesced tiles
+                   engage; workloads below it (near-unique pages) run
+                   the per-item grid, which beats mostly-empty tiles.
     """
 
     mode: str = "auto"
     sort_block_b: int = 1
     coalesce_qb: int = 8
+    coalesce_min_reuse: float = 2.0
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -153,12 +158,50 @@ class KernelBackend:
         restored = tuple(o.astype(p.dtype) for o, p in zip(out[2:], pay_a))
         return (out[0], out[1]) + restored
 
+    def merge_unsorted(self, d_a: jax.Array, i_a: jax.Array,
+                       d_b: jax.Array, i_b: jax.Array,
+                       pay_a: tuple = (), pay_b: tuple = ()):
+        """Merge sorted rows A with **unsorted** rows B into sorted rows
+        — the candidate-list update's real shape (A is the sorted list,
+        B the fresh proposals as they arrived).
+
+        Kernel modes pre-sort B with the bitonic network and run the
+        single ``merge_pairs`` pass: sorting only the small side plus
+        one merge beats re-running the full network on the
+        concatenation (BENCH_kernels merge-vs-resort, ref ~1.2x).
+        Inline jnp mode re-sorts the concatenation directly —
+        ``lax.sort`` has no merge primitive, so a "merge" spelled as
+        sort(B) + sort(concat) does strictly more work than one sort
+        (the 0.76x regression this method removes); the smoke gate
+        asserts every non-inline mode stays >= 1.0x of its own resort
+        baseline."""
+        if self.inline:
+            cat = tuple(jnp.concatenate([a, b], axis=-1)
+                        for a, b in zip((d_a, i_a) + tuple(pay_a),
+                                        (d_b, i_b) + tuple(pay_b)))
+            return bitonic_sort_ref(*cat)
+        sb = self.sort_pairs(d_b, i_b, *pay_b)
+        return self.merge_pairs(d_a, i_a, sb[0], sb[1], pay_a=pay_a,
+                                pay_b=tuple(sb[2:]))
+
     # -- distance -----------------------------------------------------------
+    def coalesce_active(self, items: int, npages: int) -> bool:
+        """Whether ``item_distances`` engages the coalesced per-page
+        query tiles for ``items`` assignments over an ``npages``-page
+        store. The static reuse estimate ``items / npages`` (mean
+        assignments per page if every page were touched) must clear
+        ``coalesce_min_reuse``: below it nearly every tile is a partial
+        (BENCH_kernels dup=1: 48.5 ms coalesced at occupancy 0.062 vs
+        28.2 ms per-item), so the backend falls back to the per-item
+        grid. Both shapes are static, so the choice is jit-safe."""
+        return (self.coalesce_qb > 0
+                and items >= self.coalesce_min_reuse * max(1, npages))
+
     def distance_grid_steps(self, items: int, npages: int) -> int:
         """Static grid-step (page-read) count ``item_distances`` launches
         in kernel modes for ``items`` assignments over ``npages`` pages —
         the perf metric the duplicate-page benchmark sweeps."""
-        if self.coalesce_qb > 0:
+        if self.coalesce_active(items, npages):
             return coalesce_num_tiles(items, npages, self.coalesce_qb)
         return items
 
@@ -168,10 +211,12 @@ class KernelBackend:
         read serves a full qb-wide tile; low values mean the static
         tile bound is paying for mostly-empty partial tiles (the
         ROADMAP two-pass-packing lever's headroom metric). The per-item
-        path (qb == 0) is width-1 tiles, occupancy 1.0 by construction.
+        paths (qb == 0, or the low-reuse fallback) are width-1 tiles,
+        occupancy 1.0 by construction.
         """
         qb = self.coalesce_qb
-        if qb <= 0 or items <= 0:
+        if qb <= 0 or items <= 0 or not self.coalesce_active(items,
+                                                             npages):
             return 1.0
         return items / (self.distance_grid_steps(items, npages) * qb)
 
@@ -208,9 +253,12 @@ class KernelBackend:
             qv = jnp.sum(qvec.astype(jnp.float32) * v, axis=-1)
             dist = qq - 2.0 * qv + vn
             return jnp.where(mask, dist, BIG_DIST)
+        # low-reuse fallback: qb=1 is the per-item grid (width-1 tiles)
+        qb = (max(1, self.coalesce_qb)
+              if self.coalesce_active(ppage.shape[0], db.shape[0]) else 1)
         return coalesced_distance_op(
             ppage, slot, mask, qvec, qq, db, vnorm,
-            qb=max(1, self.coalesce_qb), mode=self.resolved)
+            qb=qb, mode=self.resolved)
 
 
 def paged_view(db: jax.Array, vnorm: jax.Array, page_size: int):

@@ -120,6 +120,10 @@ class EngineParams:
     coalesce_qb: int = 8            # per-page query-tile width in kernel
                                     # modes: one page read serves up to
                                     # this many assignments (0 = per-item)
+    local_only: bool = False        # routed legs: drop proposals owned by
+                                    # other shards, so a slot row traverses
+                                    # only its home shard's subgraph
+                                    # (core/router.py two-tier search)
 
     @property
     def backend(self) -> KernelBackend:
@@ -220,7 +224,7 @@ def _fb_adjacency(recv, adj, pref, params: EngineParams, geom: EngineGeom):
 
 
 def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq, spec_w,
-                params: EngineParams, geom: EngineGeom):
+                my_shard, params: EngineParams, geom: EngineGeom):
     """Build proposals, dedup + bloom-filter, bucket phase-B assignments.
 
     ``spec_w`` is the *dynamic* speculation width — a traced i32, scalar
@@ -230,6 +234,13 @@ def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq, spec_w,
     query at the smaller static width (masked proposals never survive
     dedup/bucketing). The streaming scheduler's controller shrinks each
     query's width as its own hit rate decays, without recompiling.
+
+    ``my_shard`` is this shard's index, only read when
+    ``params.local_only`` — routed legs drop every proposal owned by
+    another shard *before* ranking/bucketing, so a leg's traversal (and
+    all of its phase-B distance work) stays on its home shard and an
+    idle shard receives nothing. With ``local_only=False`` the mask is
+    never built and the stage is bit-for-bit the fan-out stage.
     """
     sp = params.search
     Qs = queries.shape[0]
@@ -259,7 +270,10 @@ def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq, spec_w,
     flat_vid = props.reshape(-1)
     flat_valid = valid.reshape(-1)
     safe = jnp.clip(flat_vid, 0, geom.n - 1)
-    dest = jnp.where(flat_valid, geom.owner(safe), 0)
+    own = geom.owner(safe)
+    if params.local_only:
+        flat_valid &= own == jnp.asarray(my_shard, jnp.int32)
+    dest = jnp.where(flat_valid, own, 0)
     rank, _ = compute_ranks(dest, flat_valid, geom.num_shards)
     ok = flat_valid & (rank < params.capacity_b)
     drops = (flat_valid & ~ok).sum().astype(jnp.int32)
@@ -366,16 +380,19 @@ def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
 # Round body, parameterized by the communication primitive.
 # ---------------------------------------------------------------------------
 def _round(state, consts, params: EngineParams, geom: EngineGeom, a2a,
-           spec_w=None):
+           spec_w=None, my_shard=None):
     if spec_w is None:
         spec_w = jnp.int32(params.spec_width)
+    if my_shard is None:
+        my_shard = jnp.int32(0)
     send_a, keep_a = _fa_select(state, params, geom)
     recv_a = a2a(send_a)
     send_b = _fb_adjacency(recv_a, consts["adj"], consts["pref"],
                            params, geom)
     recv_b = a2a(send_b)
     send_c, keep_c = _fc_propose(state, keep_a, recv_b, consts["queries"],
-                                 consts["qq"], spec_w, params, geom)
+                                 consts["qq"], spec_w, my_shard, params,
+                                 geom)
     recv_c = a2a(send_c)
     send_d, items, uniq = _fd_distance(recv_c, consts["db"], consts["vnorm"],
                                        consts["blk_perm"], params, geom)
@@ -435,17 +452,19 @@ def _sim_round(state, consts, queries, qq, spec_w, params: EngineParams,
     vfb = jax.vmap(functools.partial(_fb_adjacency, params=params, geom=geom),
                    in_axes=(0, 0, 0))
     vfc = jax.vmap(functools.partial(_fc_propose, params=params, geom=geom),
-                   in_axes=(0, 0, 0, 0, 0, 0))
+                   in_axes=(0, 0, 0, 0, 0, 0, 0))
     vfd = jax.vmap(functools.partial(_fd_distance, params=params, geom=geom),
                    in_axes=(0, 0, 0, 0))
     vfe = jax.vmap(functools.partial(_fe_merge, params=params, geom=geom),
                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
 
+    shard_ids = jnp.arange(state.done.shape[0], dtype=jnp.int32)
     send_a, keep_a = vfa(state)
     recv_a = a2a(send_a)
     send_b = vfb(recv_a, consts["adj"], consts["pref"])
     recv_b = a2a(send_b)
-    send_c, keep_c = vfc(state, keep_a, recv_b, queries, qq, spec_w)
+    send_c, keep_c = vfc(state, keep_a, recv_b, queries, qq, spec_w,
+                         shard_ids)
     recv_c = a2a(send_c)
     send_d, items, uniq = vfd(recv_c, consts["db"], consts["vnorm"],
                               consts["blk_perm"])
@@ -485,7 +504,8 @@ def search_sim(consts, queries, entry_vec, entry_norm, entry_id,
 # ---------------------------------------------------------------------------
 # Dynamic speculation — the pure per-round width rule.
 # ---------------------------------------------------------------------------
-def spec_update(spec_w, hit, peak, accepted, worked, cfg):
+def spec_update(spec_w, hit, peak, accepted, worked, cfg,
+                pages_delta=None, phit=None, ppeak=None):
     """One controller step of the paper's dynamic speculative search
     (§V-B), as pure jnp so it runs both on the host (SpecController.update)
     and inside :func:`engine_run_chunk`'s round loop.
@@ -499,11 +519,30 @@ def spec_update(spec_w, hit, peak, accepted, worked, cfg):
     speculation) entries actually served at those widths. The returned
     widths apply to the *next* round.
 
-    ``cfg`` is ``(spec_max, W, max_degree, floor, ceil, ema)`` — see
-    :class:`repro.core.scheduler.SpecController`. All math is float32 so
-    the host and in-jit paths are bit-identical.
+    ``cfg`` is ``(spec_max, W, max_degree, floor, ceil, ema[, page_w])``
+    — see :class:`repro.core.scheduler.SpecController`. All math is
+    float32 so the host and in-jit paths are bit-identical.
+
+    ``pages_delta`` is the round's unique-page-read delta of the row's
+    shard (the engine's ``pages_unique`` counter — a shard-level
+    counter, so the signal is shared by the shard's rows). It feeds a
+    second normalized rate, pages-efficiency
+
+        p_q = accepted_q / max(pages_delta, 1)
+
+    tracked by the same EMA/peak machinery (``phit``/``ppeak``), and the
+    final width fraction is damped by it with weight ``page_w``:
+
+        frac = frac_hit * (1 - page_w + page_w * frac_page)
+
+    so widths that still win proposals but touch many fresh pages narrow
+    earlier. ``page_w = 0`` multiplies by exactly 1.0f — bit-identical
+    to the hit-rate-only rule. Returns the 5-leaf controller state
+    ``(spec_w, hit, peak, phit, ppeak)``.
     """
-    spec_max, w_sel, max_degree, floor, ceil, ema = cfg
+    spec_max, w_sel, max_degree, floor, ceil, ema = cfg[:6]
+    page_w = (jnp.asarray(cfg[6], jnp.float32) if len(cfg) > 6
+              else jnp.float32(0.0))
     spec_max = jnp.asarray(spec_max, jnp.int32)
     served = (jnp.asarray(w_sel, jnp.int32)
               * (jnp.asarray(max_degree, jnp.int32) + spec_w))
@@ -520,8 +559,28 @@ def spec_update(spec_w, hit, peak, accepted, worked, cfg):
     ratio = hit / jnp.maximum(peak, 1e-9)
     frac = jnp.clip((ratio - floor)
                     / jnp.maximum(ceil - floor, 1e-9), 0.0, 1.0)
+    if phit is None:
+        phit = jnp.full_like(hit, -1.0)
+        ppeak = jnp.zeros_like(peak)
+    if pages_delta is not None:
+        pd = jnp.broadcast_to(
+            jnp.asarray(pages_delta, jnp.int32).reshape(
+                jnp.shape(pages_delta) + (1,) * (hit.ndim - jnp.ndim(
+                    pages_delta))), hit.shape)
+        p = (accepted.astype(jnp.float32)
+             / jnp.maximum(pd, 1).astype(jnp.float32))
+        first_p = worked & (phit < 0)
+        upd_p = worked & ~first_p
+        phit = jnp.where(first_p, p,
+                         jnp.where(upd_p, ema * p + (1.0 - ema) * phit,
+                                   phit))
+        ppeak = jnp.maximum(ppeak, phit)
+        ratio_p = phit / jnp.maximum(ppeak, 1e-9)
+        frac_p = jnp.clip((ratio_p - floor)
+                          / jnp.maximum(ceil - floor, 1e-9), 0.0, 1.0)
+        frac = frac * (1.0 - page_w + page_w * frac_p)
     width = jnp.rint(spec_max.astype(jnp.float32) * frac).astype(jnp.int32)
-    return jnp.where(worked, width, spec_w), hit, peak
+    return jnp.where(worked, width, spec_w), hit, peak, phit, ppeak
 
 
 # ---------------------------------------------------------------------------
@@ -573,12 +632,18 @@ class EngineStepper(NamedTuple):
 @functools.partial(jax.jit, static_argnames=("params", "geom"))
 def engine_init(consts, queries, entry_vec, entry_norm, entry_id,
                 params: EngineParams, geom: EngineGeom) -> EngineState:
-    """Fresh state for a (S, Qs, d) slot pool (per-row == one-shot init)."""
+    """Fresh state for a (S, Qs, d) slot pool (per-row == one-shot init).
+
+    ``entry_vec`` is either the global entry vertex ((d,), every shard
+    seeds there) or per-shard entries ((S, d), routed legs seed at their
+    home shard's local medoid)."""
     del consts, geom
     qq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
+    ax = 0 if jnp.ndim(entry_vec) == 2 else None
     return jax.vmap(
-        lambda q, qn: _init_state(q, qn, entry_vec, entry_norm, entry_id,
-                                  params))(queries, qq)
+        lambda q, qn, ev, en, ei: _init_state(q, qn, ev, en, ei, params),
+        in_axes=(0, 0, ax, ax, ax))(queries, qq, entry_vec, entry_norm,
+                                    entry_id)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "geom"))
@@ -638,10 +703,12 @@ def engine_admit(state: EngineState, queries, admit_mask, new_q,
     is bit-identical to a fresh one. Shard-level cumulative counters
     (items_recv, pages_unique, drops_b, props_sent) are preserved.
     Returns the new state and the updated (S, Qs, d) query buffer.
+    ``entry_vec`` may be per-shard ((S, d)) as in :func:`engine_init`.
     """
     del geom
+    ax = 0 if jnp.ndim(entry_vec) == 2 else None
     return jax.vmap(functools.partial(_admit_rows, params=params),
-                    in_axes=(0, 0, 0, 0, None, None, None))(
+                    in_axes=(0, 0, 0, 0, ax, ax, ax))(
         state, queries, admit_mask, new_q, entry_vec, entry_norm,
         entry_id)
 
@@ -659,17 +726,20 @@ def _chunk_round(carry, round_fn, rounds_cap, dynamic, spec_cfg):
     step the round, park rows hitting the per-query round cap at the
     exact boundary the per-round scheduler would retire them, and — in
     dynamic mode — step the speculation widths with the served widths
-    (ordering contract of :func:`spec_update`)."""
-    st, sw, hi, pk, prev_nd, j, lc, ws = carry
+    (ordering contract of :func:`spec_update`) and the round's unique-
+    page delta (the page-efficiency signal; a no-op at page_w=0)."""
+    st, sw, hi, pk, phi, ppk, prev_nd, prev_pg, j, lc, ws = carry
     worked = ~st.done
     lc = lc.at[j].set(worked.sum().astype(jnp.int32))
     ws = ws.at[j].set(jnp.where(worked, sw, 0).sum().astype(jnp.int32))
     st = round_fn(st, sw)
     st = st._replace(done=st.done | (st.rounds >= rounds_cap))
     if dynamic:
-        sw, hi, pk = spec_update(sw, hi, pk, st.n_dist - prev_nd,
-                                 worked, spec_cfg)
-    return st, sw, hi, pk, st.n_dist, j + 1, lc, ws
+        sw, hi, pk, phi, ppk = spec_update(
+            sw, hi, pk, st.n_dist - prev_nd, worked, spec_cfg,
+            st.pages_unique - prev_pg, phi, ppk)
+    return (st, sw, hi, pk, phi, ppk, st.n_dist, st.pages_unique, j + 1,
+            lc, ws)
 
 
 @functools.partial(jax.jit,
@@ -693,7 +763,8 @@ def engine_run_chunk(consts, state: EngineState, queries, spec_state,
       * with ``dynamic=True`` the speculation widths step through
         :func:`spec_update` after every round, so per-query widths keep
         adapting *inside* the chunk (``spec_state`` is the controller's
-        ``(spec_w, hit, peak)`` triple, ``spec_cfg`` its parameters).
+        ``(spec_w, hit, peak, page_hit, page_peak)`` 5-tuple,
+        ``spec_cfg`` its parameters).
 
     Early exit, both traced (no recompiles):
 
@@ -719,7 +790,7 @@ def engine_run_chunk(consts, state: EngineState, queries, spec_state,
     speculation traces without per-round syncs.
     """
     qq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
-    spec_w, hit, peak = spec_state
+    spec_w, hit, peak, phit, ppeak = spec_state
     spec_w = jnp.broadcast_to(jnp.asarray(spec_w, jnp.int32),
                               queries.shape[:2])
     live0 = ~state.done
@@ -730,7 +801,7 @@ def engine_run_chunk(consts, state: EngineState, queries, spec_state,
         return _sim_round(st, consts, queries, qq, sw, params, geom)
 
     def cond(carry):
-        st, _, _, _, _, j, _, _ = carry
+        st, _, _, _, _, _, _, _, j, _, _ = carry
         fin_any = (st.done & live0).any()
         return (j < budget) & (~st.done).any() & ~(stop & fin_any)
 
@@ -739,11 +810,12 @@ def engine_run_chunk(consts, state: EngineState, queries, spec_state,
                             dynamic, spec_cfg)
 
     zeros_k = jnp.zeros((K,), jnp.int32)
-    state, spec_w, hit, peak, _, steps, live_cnt, width_sum = \
-        jax.lax.while_loop(cond, body,
-                           (state, spec_w, hit, peak, state.n_dist,
-                            jnp.int32(0), zeros_k, zeros_k))
-    return state, (spec_w, hit, peak), steps, live_cnt, width_sum
+    (state, spec_w, hit, peak, phit, ppeak, _, _, steps, live_cnt,
+     width_sum) = jax.lax.while_loop(
+        cond, body, (state, spec_w, hit, peak, phit, ppeak, state.n_dist,
+                     state.pages_unique, jnp.int32(0), zeros_k, zeros_k))
+    return (state, (spec_w, hit, peak, phit, ppeak), steps, live_cnt,
+            width_sum)
 
 
 def _seat_pending(free, cursor, avail, offset, pend_q, queries_rows):
@@ -822,26 +894,38 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
     """
     k = params.search.k
     S, Qs = state.done.shape
-    spec_w, hit, peak = spec_state
+    spec_w, hit, peak, phit, ppeak = spec_state
     spec_w = jnp.broadcast_to(jnp.asarray(spec_w, jnp.int32), (S, Qs))
     budget = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(K))
     cursor = jnp.asarray(cursor, jnp.int32)
     t0 = jnp.asarray(t0, jnp.int32)
     pend_arr = jnp.asarray(pend_arr, jnp.int32)
     spec_max = jnp.asarray(spec_cfg[0], jnp.int32)
-
+    # routed mode: per-shard pending queues ((S, Np) arrivals, (S,)
+    # cursors) seat each shard's rows independently at offset 0 — no
+    # cross-shard free-rank coupling; and per-shard entries ((S, d)
+    # vectors) seed each shard's rows at its own subgraph entry. Both
+    # are static shape decisions, so one traced function serves both.
+    per_shard = pend_arr.ndim == 2
+    entry_ax = 0 if jnp.ndim(entry_vec) == 2 else None
     vadmit = jax.vmap(functools.partial(_admit_rows, params=params),
-                      in_axes=(0, 0, 0, 0, None, None, None))
+                      in_axes=(0, 0, 0, 0, entry_ax, entry_ax, entry_ax))
     vfin = jax.vmap(lambda s: _finalize(s, k)[:2])
+    if per_shard:
+        avail_of = jax.vmap(_pending_avail, in_axes=(0, 0, None))
+        vseat = jax.vmap(_seat_pending,
+                         in_axes=(0, 0, 0, None, 0, 0))
+    else:
+        avail_of = _pending_avail
 
     def cond(carry):
-        st, q, sw, hi, pk, cur, prev_nd, j = carry[:8]
+        st, q, sw, hi, pk, phi, ppk, cur, prev_nd, prev_pg, j = carry[:11]
+        avail = avail_of(pend_arr, cur, t0 + j)
         return ((j < budget)
-                & ((~st.done).any()
-                   | (_pending_avail(pend_arr, cur, t0 + j) > 0)))
+                & ((~st.done).any() | (avail.sum() > 0)))
 
     def body(carry):
-        (st, q, sw, hi, pk, cur, prev_nd, j, lc, ws,
+        (st, q, sw, hi, pk, phi, ppk, cur, prev_nd, prev_pg, j, lc, ws,
          aq, ri, rd, rr, rn) = carry
         # -- boundary j (global round t0 + j): record the would-be-
         # evicted rows' results, then seat arrived pending queries
@@ -850,19 +934,31 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
         rd = rd.at[j].set(fin_d)
         rr = rr.at[j].set(st.rounds)
         rn = rn.at[j].set(st.n_dist)
-        seat, pidx, new_q = _seat_pending(
-            st.done.reshape(-1), cur,
-            _pending_avail(pend_arr, cur, t0 + j), 0, pend_q,
-            q.reshape(S * Qs, -1))
-        mask = seat.reshape(S, Qs)
-        st, q = vadmit(st, q, mask, new_q.reshape(S, Qs, -1),
-                       entry_vec, entry_norm, entry_id)
-        cur = cur + seat.sum().astype(jnp.int32)
-        aq = aq.at[j].set(pidx.reshape(S, Qs))
+        if per_shard:
+            seat, pidx, new_q = vseat(
+                st.done, cur, avail_of(pend_arr, cur, t0 + j),
+                jnp.int32(0), pend_q, q)
+            mask = seat
+            cur = cur + seat.sum(axis=1).astype(jnp.int32)
+            aq = aq.at[j].set(pidx)
+            st, q = vadmit(st, q, mask, new_q, entry_vec, entry_norm,
+                           entry_id)
+        else:
+            seat, pidx, new_q = _seat_pending(
+                st.done.reshape(-1), cur,
+                avail_of(pend_arr, cur, t0 + j), 0, pend_q,
+                q.reshape(S * Qs, -1))
+            mask = seat.reshape(S, Qs)
+            st, q = vadmit(st, q, mask, new_q.reshape(S, Qs, -1),
+                           entry_vec, entry_norm, entry_id)
+            cur = cur + seat.sum().astype(jnp.int32)
+            aq = aq.at[j].set(pidx.reshape(S, Qs))
         if dynamic:   # fresh rows restart the controller at full width
             sw = jnp.where(mask, spec_max, sw)
             hi = jnp.where(mask, jnp.float32(-1.0), hi)
             pk = jnp.where(mask, jnp.float32(0.0), pk)
+            phi = jnp.where(mask, jnp.float32(-1.0), phi)
+            ppk = jnp.where(mask, jnp.float32(0.0), ppk)
         # -- the round itself: same shared body as engine_run_chunk.
         # prev_nd must be the post-admission n_dist: seated rows were
         # reset to 0, and their accepted-count delta (spec_update) must
@@ -870,26 +966,29 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
         # (non-admitted rows' n_dist only moves in rounds, so this is
         # the carried value for them either way).
         qq = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1)
-        st, sw, hi, pk, prev_nd, j, lc, ws = _chunk_round(
-            (st, sw, hi, pk, st.n_dist, j, lc, ws),
-            lambda s, w: _sim_round(s, consts, q, qq, w, params, geom),
-            params.search.rounds_cap, dynamic, spec_cfg)
-        return (st, q, sw, hi, pk, cur, prev_nd, j, lc, ws,
-                aq, ri, rd, rr, rn)
+        st, sw, hi, pk, phi, ppk, prev_nd, prev_pg, j, lc, ws = \
+            _chunk_round(
+                (st, sw, hi, pk, phi, ppk, st.n_dist, st.pages_unique,
+                 j, lc, ws),
+                lambda s, w: _sim_round(s, consts, q, qq, w, params,
+                                        geom),
+                params.search.rounds_cap, dynamic, spec_cfg)
+        return (st, q, sw, hi, pk, phi, ppk, cur, prev_nd, prev_pg, j,
+                lc, ws, aq, ri, rd, rr, rn)
 
     zeros_k = jnp.zeros((K,), jnp.int32)
     zeros_sq = jnp.zeros((K, S, Qs), jnp.int32)
-    carry = (state, queries, spec_w, hit, peak, cursor, state.n_dist,
-             jnp.int32(0), zeros_k, zeros_k,
-             jnp.full((K, S, Qs), -1, jnp.int32),
+    carry = (state, queries, spec_w, hit, peak, phit, ppeak, cursor,
+             state.n_dist, state.pages_unique, jnp.int32(0), zeros_k,
+             zeros_k, jnp.full((K, S, Qs), -1, jnp.int32),
              jnp.full((K, S, Qs, k), INVALID, jnp.int32),
              jnp.zeros((K, S, Qs, k), jnp.float32), zeros_sq, zeros_sq)
-    (state, queries, spec_w, hit, peak, cursor, _, steps, live_cnt,
-     width_sum, admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist) = \
-        jax.lax.while_loop(cond, body, carry)
-    return (state, queries, (spec_w, hit, peak), steps, live_cnt,
-            width_sum, admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist,
-            cursor)
+    (state, queries, spec_w, hit, peak, phit, ppeak, cursor, _, _, steps,
+     live_cnt, width_sum, admit_qidx, ret_i, ret_d, ret_rounds,
+     ret_ndist) = jax.lax.while_loop(cond, body, carry)
+    return (state, queries, (spec_w, hit, peak, phit, ppeak), steps,
+            live_cnt, width_sum, admit_qidx, ret_i, ret_d, ret_rounds,
+            ret_ndist, cursor)
 
 
 def _shard_map_fn(fn, mesh, in_specs, out_specs):
@@ -903,14 +1002,22 @@ def _shard_map_fn(fn, mesh, in_specs, out_specs):
 
 
 def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
-                 axis_name: str = "lun",
-                 round_chunk: int = 1) -> EngineStepper:
+                 axis_name: str = "lun", round_chunk: int = 1,
+                 routed: bool = False) -> EngineStepper:
     """Bundle the stepper closures; with a mesh, the round/chunk
     communicates via shard_map lax.all_to_all instead of the sim
     swapaxes (init, admit and retire are per-row math with no
     communication, so the sim forms serve both paths). ``round_chunk``
     is the static K of :func:`engine_run_chunk` — the most rounds one
-    ``run_chunk`` dispatch may run before the host is consulted."""
+    ``run_chunk`` dispatch may run before the host is consulted.
+
+    ``routed=True`` selects the two-tier serving layout on the mesh
+    leg (core/router.py): pending queues, admission cursors and entry
+    vertices are **per-shard** (leading S axis, sharded over the mesh)
+    and each shard seats its own queue at offset 0 with a local cursor
+    — no all_gather free-rank coupling — so every shard runs an
+    independent admission schedule. The sim leg needs no flag: it
+    dispatches on the pending/entry array ranks at trace time."""
     K = max(1, int(round_chunk))
     init = functools.partial(engine_init, params=params, geom=geom)
     admit = functools.partial(engine_admit, params=params, geom=geom)
@@ -953,13 +1060,16 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
     # bit-identical on the distributed path, not just on integer data.
     def local_admit(q, mask, new_q, evec, enorm, eid, *leaves):
         state = EngineState(*(leaf[0] for leaf in leaves))
+        if routed:   # per-shard entry: this shard's local medoid
+            evec, enorm, eid = evec[0], enorm[0], eid[0]
         st, ql = _admit_rows(state, q[0], mask[0], new_q[0], evec,
                              enorm, eid, params)
         return tuple(leaf[None] for leaf in st), ql[None]
 
+    entry_specs = ((P(axis_name),) if routed else (P(),)) * 3
     f_admit = jax.jit(_shard_map_fn(
         local_admit, mesh,
-        (P(axis_name),) * 3 + (P(),) * 3 + (P(axis_name),) * nleaves,
+        (P(axis_name),) * 3 + entry_specs + (P(axis_name),) * nleaves,
         ((P(axis_name),) * nleaves, P(axis_name))))
 
     def admit(state, queries, admit_mask, new_q, evec, enorm, eid):
@@ -974,7 +1084,8 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
         lc["queries"] = ql
         lc["qq"] = jnp.sum(ql.astype(jnp.float32) ** 2, axis=-1)
         state = EngineState(*(leaf[0] for leaf in leaves))
-        state = _round(state, lc, params, geom, a2a, spec_w[0])
+        state = _round(state, lc, params, geom, a2a, spec_w[0],
+                       jax.lax.axis_index(axis_name))
         return tuple(leaf[None] for leaf in state)
 
     in_specs = (P(axis_name),) * 7 + (P(axis_name),) * nleaves
@@ -994,7 +1105,7 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
     # search_distributed's global-active while_loop.
     def make_local_chunk(dynamic):
         def local_chunk(db, vnorm, adj, pref, blk_perm, q, spec_w, hit,
-                        peak, cfg, budget, stop, *leaves):
+                        peak, phit, ppeak, cfg, budget, stop, *leaves):
             lc = {"db": db[0], "vnorm": vnorm[0], "adj": adj[0],
                   "pref": pref[0], "blk_perm": blk_perm[0]}
             ql = q[0]
@@ -1002,43 +1113,48 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
             lc["qq"] = jnp.sum(ql.astype(jnp.float32) ** 2, axis=-1)
             state = EngineState(*(leaf[0] for leaf in leaves))
             sw, hi, pk = spec_w[0], hit[0], peak[0]
+            phi, ppk = phit[0], ppeak[0]
             live0 = ~state.done
             bud = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(K))
+            myidx = jax.lax.axis_index(axis_name)
 
             def round_fn(st, sw):
-                return _round(st, lc, params, geom, a2a, sw)
+                return _round(st, lc, params, geom, a2a, sw, myidx)
 
             def gsum(x):
                 return jax.lax.psum(x.sum().astype(jnp.int32), axis_name)
 
             def cond(carry):
-                _, _, _, _, _, j, active, fin, _, _ = carry
+                j, active, fin = carry[8], carry[9], carry[10]
                 return ((j < bud) & (active > 0)
                         & ~(stop.astype(bool) & (fin > 0)))
 
             def body(carry):
-                st, sw, hi, pk, prev_nd, j, _, _, lcnt, wsum = carry
-                st, sw, hi, pk, prev_nd, j, lcnt, wsum = _chunk_round(
-                    (st, sw, hi, pk, prev_nd, j, lcnt, wsum), round_fn,
-                    sp.rounds_cap, dynamic, cfg)
+                (st, sw, hi, pk, phi, ppk, prev_nd, prev_pg, j, _, _,
+                 lcnt, wsum) = carry
+                (st, sw, hi, pk, phi, ppk, prev_nd, prev_pg, j, lcnt,
+                 wsum) = _chunk_round(
+                    (st, sw, hi, pk, phi, ppk, prev_nd, prev_pg, j, lcnt,
+                     wsum), round_fn, sp.rounds_cap, dynamic, cfg)
                 # globally-reduced exit tests keep the shards in lockstep
-                return (st, sw, hi, pk, prev_nd, j,
+                return (st, sw, hi, pk, phi, ppk, prev_nd, prev_pg, j,
                         gsum(~st.done), gsum(st.done & live0), lcnt, wsum)
 
             zeros_k = jnp.zeros((K,), jnp.int32)
-            carry = (state, sw, hi, pk, state.n_dist, jnp.int32(0),
-                     gsum(~state.done), jnp.int32(0), zeros_k, zeros_k)
-            st, sw, hi, pk, _, steps, _, _, lcnt, wsum = \
-                jax.lax.while_loop(cond, body, carry)
+            carry = (state, sw, hi, pk, phi, ppk, state.n_dist,
+                     state.pages_unique, jnp.int32(0), gsum(~state.done),
+                     jnp.int32(0), zeros_k, zeros_k)
+            (st, sw, hi, pk, phi, ppk, _, _, steps, _, _, lcnt,
+             wsum) = jax.lax.while_loop(cond, body, carry)
             return (tuple(leaf[None] for leaf in st), sw[None], hi[None],
-                    pk[None], steps[None], lcnt[None], wsum[None])
+                    pk[None], phi[None], ppk[None], steps[None],
+                    lcnt[None], wsum[None])
 
         return local_chunk
 
-    chunk_in = ((P(axis_name),) * 9 + (P(),) * 3
+    chunk_in = ((P(axis_name),) * 11 + (P(),) * 3
                 + (P(axis_name),) * nleaves)
-    chunk_out = ((P(axis_name),) * nleaves, P(axis_name), P(axis_name),
-                 P(axis_name), P(axis_name), P(axis_name), P(axis_name))
+    chunk_out = ((P(axis_name),) * nleaves,) + (P(axis_name),) * 8
     chunk_fns = {}
     for dyn in (False, True):
         chunk_fns[dyn] = jax.jit(_shard_map_fn(
@@ -1046,18 +1162,19 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
 
     def run_chunk(consts, state, queries, spec_state, spec_cfg, budget,
                   stop_on_finish, dynamic=False):
-        sw, hi, pk = spec_state
+        sw, hi, pk, phi, ppk = spec_state
         sw = jnp.broadcast_to(jnp.asarray(sw, jnp.int32),
                               queries.shape[:2])
         cfg = tuple(jnp.asarray(c) for c in spec_cfg)
-        leaves, sw, hi, pk, steps, lcnt, wsum = chunk_fns[bool(dynamic)](
+        (leaves, sw, hi, pk, phi, ppk, steps, lcnt,
+         wsum) = chunk_fns[bool(dynamic)](
             consts["db"], consts["vnorm"], consts["adj"], consts["pref"],
-            consts["blk_perm"], queries, sw, hi, pk, cfg,
+            consts["blk_perm"], queries, sw, hi, pk, phi, ppk, cfg,
             jnp.asarray(budget, jnp.int32), jnp.asarray(stop_on_finish),
             *state)
         # steps is replicated (lockstep cond); traces are per-shard
         # partial sums — reduce on the host side of the boundary
-        return (EngineState(*leaves), (sw, hi, pk), steps[0],
+        return (EngineState(*leaves), (sw, hi, pk, phi, ppk), steps[0],
                 lcnt.sum(axis=0), wsum.sum(axis=0))
 
     # -- in-chunk admission under shard_map: every shard seats its own
@@ -1069,87 +1186,117 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
 
     def make_local_chunk_admit(dynamic):
         def local_chunk_admit(db, vnorm, adj, pref, blk_perm, q, spec_w,
-                              hit, peak, cfg, budget, pend_q, pend_arr,
-                              cursor, t0, evec, enorm, eid, *leaves):
+                              hit, peak, phit, ppeak, cfg, budget,
+                              pend_q, pend_arr, cursor, t0, evec, enorm,
+                              eid, *leaves):
             base = {"db": db[0], "vnorm": vnorm[0], "adj": adj[0],
                     "pref": pref[0], "blk_perm": blk_perm[0]}
             state = EngineState(*(leaf[0] for leaf in leaves))
             ql = q[0]
             sw, hi, pk = spec_w[0], hit[0], peak[0]
+            phi, ppk = phit[0], ppeak[0]
             Qs = state.done.shape[0]
             bud = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(K))
-            cur0 = jnp.asarray(cursor, jnp.int32)
             t0i = jnp.asarray(t0, jnp.int32)
-            parr = jnp.asarray(pend_arr, jnp.int32)
             spec_max = jnp.asarray(cfg[0], jnp.int32)
             myidx = jax.lax.axis_index(axis_name)
+            if routed:
+                # routed: this shard's own queue / cursor / entry block
+                pq = pend_q[0]
+                parr = jnp.asarray(pend_arr[0], jnp.int32)
+                cur0 = jnp.asarray(cursor[0], jnp.int32)
+                evec, enorm, eid = evec[0], enorm[0], eid[0]
+            else:
+                pq = pend_q
+                parr = jnp.asarray(pend_arr, jnp.int32)
+                cur0 = jnp.asarray(cursor, jnp.int32)
 
             def gsum(x):
                 return jax.lax.psum(x.sum().astype(jnp.int32), axis_name)
 
             def cond(carry):
-                _, _, _, _, _, cur, _, j, active = carry[:9]
-                return ((j < bud)
-                        & ((active > 0)
-                           | (_pending_avail(parr, cur, t0i + j) > 0)))
+                cur, j, active = carry[7], carry[10], carry[11]
+                avail = _pending_avail(parr, cur, t0i + j)
+                if routed:   # lockstep exit test over per-shard queues
+                    avail = jax.lax.psum(avail, axis_name)
+                return (j < bud) & ((active > 0) | (avail > 0))
 
             def body(carry):
-                (st, ql, sw, hi, pk, cur, prev_nd, j, _, lcnt, wsum,
-                 aq, ri, rd, rr, rn) = carry
+                (st, ql, sw, hi, pk, phi, ppk, cur, prev_nd, prev_pg, j,
+                 _, lcnt, wsum, aq, ri, rd, rr, rn) = carry
                 fin_i, fin_d, _ = _finalize(st, k_out)
                 ri = ri.at[j].set(fin_i)
                 rd = rd.at[j].set(fin_d)
                 rr = rr.at[j].set(st.rounds)
                 rn = rn.at[j].set(st.n_dist)
-                # global row-major free ranks: offset this shard's by
-                # the free counts on lower-index shards
-                counts = jax.lax.all_gather(
-                    st.done.sum().astype(jnp.int32), axis_name)
-                offset = jnp.sum(jnp.where(
-                    jnp.arange(counts.shape[0]) < myidx, counts, 0))
+                avail = _pending_avail(parr, cur, t0i + j)
+                if routed:
+                    # independent per-shard schedule: local free ranks
+                    # at offset 0, local cursor — no cross-shard
+                    # coupling on the admission path
+                    offset = jnp.int32(0)
+                else:
+                    # global row-major free ranks: offset this shard's
+                    # by the free counts on lower-index shards
+                    counts = jax.lax.all_gather(
+                        st.done.sum().astype(jnp.int32), axis_name)
+                    offset = jnp.sum(jnp.where(
+                        jnp.arange(counts.shape[0]) < myidx, counts, 0))
                 seat, pidx, new_q = _seat_pending(
-                    st.done, cur,
-                    _pending_avail(parr, cur, t0i + j), offset,
-                    pend_q, ql)
+                    st.done, cur, avail, offset, pq, ql)
                 st, ql = _admit_rows(st, ql, seat, new_q, evec, enorm,
                                      eid, params)
-                cur = cur + gsum(seat)
+                cur = cur + (seat.sum().astype(jnp.int32) if routed
+                             else gsum(seat))
                 aq = aq.at[j].set(pidx)
                 if dynamic:
                     sw = jnp.where(seat, spec_max, sw)
                     hi = jnp.where(seat, jnp.float32(-1.0), hi)
                     pk = jnp.where(seat, jnp.float32(0.0), pk)
+                    phi = jnp.where(seat, jnp.float32(-1.0), phi)
+                    ppk = jnp.where(seat, jnp.float32(0.0), ppk)
                 lc = dict(base, queries=ql,
                           qq=jnp.sum(ql.astype(jnp.float32) ** 2, -1))
                 # post-admission n_dist as prev_nd: seated rows' spec
                 # deltas must start from 0 (see engine_run_chunk_admit)
-                st, sw, hi, pk, prev_nd, j, lcnt, wsum = _chunk_round(
-                    (st, sw, hi, pk, st.n_dist, j, lcnt, wsum),
-                    lambda s, w: _round(s, lc, params, geom, a2a, w),
+                (st, sw, hi, pk, phi, ppk, prev_nd, prev_pg, j, lcnt,
+                 wsum) = _chunk_round(
+                    (st, sw, hi, pk, phi, ppk, st.n_dist,
+                     st.pages_unique, j, lcnt, wsum),
+                    lambda s, w: _round(s, lc, params, geom, a2a, w,
+                                        myidx),
                     sp.rounds_cap, dynamic, cfg)
-                return (st, ql, sw, hi, pk, cur, prev_nd, j,
-                        gsum(~st.done), lcnt, wsum, aq, ri, rd, rr, rn)
+                return (st, ql, sw, hi, pk, phi, ppk, cur, prev_nd,
+                        prev_pg, j, gsum(~st.done), lcnt, wsum,
+                        aq, ri, rd, rr, rn)
 
             zeros_k = jnp.zeros((K,), jnp.int32)
             zeros_kq = jnp.zeros((K, Qs), jnp.int32)
-            carry = (state, ql, sw, hi, pk, cur0, state.n_dist,
-                     jnp.int32(0), gsum(~state.done), zeros_k, zeros_k,
+            carry = (state, ql, sw, hi, pk, phi, ppk, cur0, state.n_dist,
+                     state.pages_unique, jnp.int32(0), gsum(~state.done),
+                     zeros_k, zeros_k,
                      jnp.full((K, Qs), -1, jnp.int32),
                      jnp.full((K, Qs, k_out), INVALID, jnp.int32),
                      jnp.zeros((K, Qs, k_out), jnp.float32),
                      zeros_kq, zeros_kq)
-            (st, ql, sw, hi, pk, cur, _, steps, _, lcnt, wsum,
-             aq, ri, rd, rr, rn) = jax.lax.while_loop(cond, body, carry)
+            (st, ql, sw, hi, pk, phi, ppk, cur, _, _, steps, _, lcnt,
+             wsum, aq, ri, rd, rr, rn) = jax.lax.while_loop(
+                cond, body, carry)
             return (tuple(leaf[None] for leaf in st), ql[None], sw[None],
-                    hi[None], pk[None], steps[None], lcnt[None],
-                    wsum[None], aq[None], ri[None], rd[None], rr[None],
-                    rn[None], cur[None])
+                    hi[None], pk[None], phi[None], ppk[None],
+                    steps[None], lcnt[None], wsum[None], aq[None],
+                    ri[None], rd[None], rr[None], rn[None], cur[None])
 
         return local_chunk_admit
 
-    admit_in = ((P(axis_name),) * 9 + (P(),) * 9
-                + (P(axis_name),) * nleaves)
-    admit_out = ((P(axis_name),) * nleaves,) + (P(axis_name),) * 13
+    if routed:
+        # pend_q / pend_arr / cursor / entry carry a leading S axis
+        tail = (P(), P(), P(axis_name), P(axis_name), P(axis_name),
+                P(), P(axis_name), P(axis_name), P(axis_name))
+    else:
+        tail = (P(),) * 9
+    admit_in = (P(axis_name),) * 11 + tail + (P(axis_name),) * nleaves
+    admit_out = ((P(axis_name),) * nleaves,) + (P(axis_name),) * 15
     admit_fns = {}
     for dyn in (False, True):
         admit_fns[dyn] = jax.jit(_shard_map_fn(
@@ -1158,27 +1305,28 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
     def run_chunk_admit(consts, state, queries, spec_state, spec_cfg,
                         budget, pend, cursor, t0, entry, dynamic=False):
         pend_q, pend_arr = pend
-        sw, hi, pk = spec_state
+        sw, hi, pk, phi, ppk = spec_state
         sw = jnp.broadcast_to(jnp.asarray(sw, jnp.int32),
                               queries.shape[:2])
         cfg = tuple(jnp.asarray(c) for c in spec_cfg)
-        (leaves, q, sw, hi, pk, steps, lcnt, wsum, aq, ri, rd, rr, rn,
-         cur) = admit_fns[bool(dynamic)](
+        (leaves, q, sw, hi, pk, phi, ppk, steps, lcnt, wsum, aq, ri, rd,
+         rr, rn, cur) = admit_fns[bool(dynamic)](
             consts["db"], consts["vnorm"], consts["adj"], consts["pref"],
-            consts["blk_perm"], queries, sw, hi, pk, cfg,
+            consts["blk_perm"], queries, sw, hi, pk, phi, ppk, cfg,
             jnp.asarray(budget, jnp.int32), jnp.asarray(pend_q),
             jnp.asarray(pend_arr, jnp.int32),
             jnp.asarray(cursor, jnp.int32), jnp.asarray(t0, jnp.int32),
             *entry, *state)
-        # steps/cursor are replicated (lockstep cond + gsum'd cursor);
+        # steps is replicated (lockstep cond); cursors are replicated
+        # too on the fan-out path (gsum'd) but per-shard when routed;
         # live/width traces are per-shard partial sums; the admit/evict
         # traces come back shard-major — normalize to the sim leg's
         # (K, S, Qs[, k]) layout
-        return (EngineState(*leaves), q, (sw, hi, pk), steps[0],
-                lcnt.sum(axis=0), wsum.sum(axis=0),
+        return (EngineState(*leaves), q, (sw, hi, pk, phi, ppk),
+                steps[0], lcnt.sum(axis=0), wsum.sum(axis=0),
                 jnp.swapaxes(aq, 0, 1), jnp.swapaxes(ri, 0, 1),
                 jnp.swapaxes(rd, 0, 1), jnp.swapaxes(rr, 0, 1),
-                jnp.swapaxes(rn, 0, 1), cur[0])
+                jnp.swapaxes(rn, 0, 1), cur if routed else cur[0])
 
     return EngineStepper(init, rnd, admit, retire, run_chunk, K,
                          run_chunk_admit)
@@ -1207,7 +1355,8 @@ def search_distributed(consts, queries, entry_vec, entry_norm, entry_id,
 
         def body(carry):
             state, t, _ = carry
-            state = _round(state, lc, params, geom, a2a)
+            state = _round(state, lc, params, geom, a2a,
+                           my_shard=jax.lax.axis_index(axis_name))
             active = jax.lax.psum((~state.done).sum(), axis_name)
             return state, t + 1, active
 

@@ -112,6 +112,8 @@ def stream_summary(stats) -> dict:
         "items_recv": stats.items_recv,
         "props_sent": stats.props_sent,
         "drops_b": stats.drops_b,
+        "legs": getattr(stats, "legs", 0),
+        "items_by_shard": list(getattr(stats, "items_by_shard", [])),
         "mean_spec_w": round(float(np.mean(stats.spec_trace)), 2)
         if stats.spec_trace else 0.0,
     }

@@ -143,22 +143,33 @@ class SpecController:
     floor: float = 0.2      # normalized hit at/below which spec_w -> 0
     ceil: float = 0.6       # normalized hit at/above which spec_w -> max
     ema: float = 0.5        # smoothing of the per-round hit estimate
+    page_w: float = 0.0     # weight of the page-efficiency signal
+                            # (accepted / fresh unique pages, normalized
+                            # against its own peak like the hit rate):
+                            # widths that win proposals but touch many
+                            # fresh pages narrow. 0 keeps the pure
+                            # hit-rate rule bit-identical.
     spec_w: np.ndarray = dataclasses.field(default=None, repr=False)
     _hit: np.ndarray = dataclasses.field(default=None, repr=False)
     _peak: np.ndarray = dataclasses.field(default=None, repr=False)
+    _phit: np.ndarray = dataclasses.field(default=None, repr=False)
+    _ppeak: np.ndarray = dataclasses.field(default=None, repr=False)
 
     @property
     def cfg(self):
         """The static rule parameters, dtyped for the traced jnp rule."""
         return (np.int32(self.spec_max), np.int32(self.W),
                 np.int32(self.max_degree), np.float32(self.floor),
-                np.float32(self.ceil), np.float32(self.ema))
+                np.float32(self.ceil), np.float32(self.ema),
+                np.float32(self.page_w))
 
     def _ensure(self, shape):
         if self.spec_w is None or self.spec_w.shape != shape:
             self.spec_w = np.full(shape, self.spec_max, np.int32)
             self._hit = np.full(shape, -1.0, np.float32)
             self._peak = np.zeros(shape, np.float32)
+            self._phit = np.full(shape, -1.0, np.float32)
+            self._ppeak = np.zeros(shape, np.float32)
 
     def reset_rows(self, mask: np.ndarray):
         """Fresh queries restart at full width (called at admission)."""
@@ -166,37 +177,49 @@ class SpecController:
         self.spec_w[mask] = self.spec_max
         self._hit[mask] = -1.0
         self._peak[mask] = 0.0
+        self._phit[mask] = -1.0
+        self._ppeak[mask] = 0.0
 
     def state(self):
         return (jnp.asarray(self.spec_w), jnp.asarray(self._hit),
-                jnp.asarray(self._peak))
+                jnp.asarray(self._peak), jnp.asarray(self._phit),
+                jnp.asarray(self._ppeak))
 
     def store(self, spec_state):
         """Adopt the post-chunk controller state from the device."""
-        sw, hi, pk = spec_state
+        sw, hi, pk, phi, ppk = spec_state
         # np.array: device buffers give read-only views; reset_rows
         # mutates these in place at admission
         self.spec_w = np.array(sw, np.int32)
         self._hit = np.array(hi, np.float32)
         self._peak = np.array(pk, np.float32)
+        self._phit = np.array(phi, np.float32)
+        self._ppeak = np.array(ppk, np.float32)
 
-    def update(self, accepted: np.ndarray, worked: np.ndarray) -> np.ndarray:
+    def update(self, accepted: np.ndarray, worked: np.ndarray,
+               pages_delta=None) -> np.ndarray:
         """accepted: (S, Qs) this-round accepted proposals per slot;
-        worked: (S, Qs) rows that were live this round. ``self.spec_w``
+        worked: (S, Qs) rows that were live this round; pages_delta:
+        this round's fresh unique-page count per shard ((S,), the
+        page-efficiency signal — ignored at page_w=0). ``self.spec_w``
         must still hold the widths used in that round (see class doc)."""
         self._ensure(np.shape(accepted))
-        sw, hi, pk = spec_update(
+        spec_state = spec_update(
             jnp.asarray(self.spec_w), jnp.asarray(self._hit),
             jnp.asarray(self._peak), jnp.asarray(accepted, jnp.int32),
-            jnp.asarray(worked, bool), self.cfg)
-        self.store((sw, hi, pk))
+            jnp.asarray(worked, bool), self.cfg,
+            None if pages_delta is None
+            else jnp.asarray(pages_delta, jnp.int32),
+            jnp.asarray(self._phit), jnp.asarray(self._ppeak))
+        self.store(spec_state)
         return self.spec_w
 
 
 # cfg placeholder handed to the chunk when no controller is attached
 # (dynamic=False never reads it, but the traced signature needs leaves)
 _NULL_CFG = (np.int32(0), np.int32(1), np.int32(1),
-             np.float32(0.0), np.float32(1.0), np.float32(0.5))
+             np.float32(0.0), np.float32(1.0), np.float32(0.5),
+             np.float32(0.0))
 
 
 @dataclasses.dataclass
@@ -243,6 +266,12 @@ class StreamStats:
                               # waiting for an arrival (no engine work)
     injit_admit: bool = False  # admission path the run actually used
                                # (the scheduler's resolved flag)
+    legs: int = 0             # routed serving: slot-pool rows served
+                              # (N queries x R target shards); 0 = the
+                              # scheduler ran one row per query
+    items_by_shard: list = dataclasses.field(default_factory=list)
+                              # per-shard items_recv — the routed path's
+                              # work-skew/idle-shard evidence
 
     def by_qid(self):
         return {r.qid: r for r in self.results}
@@ -264,12 +293,17 @@ class StreamScheduler:
                  controller: Optional[SpecController] = None,
                  refill: bool = True, round_chunk: int = 1,
                  stepper: Optional[EngineStepper] = None,
-                 injit_admit: Optional[bool] = None):
+                 injit_admit: Optional[bool] = None,
+                 routed: bool = False):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if round_chunk < 1:
             raise ValueError(
                 f"round_chunk must be >= 1, got {round_chunk}")
+        if routed and not refill:
+            # per-shard schedules are the point of routing; the frozen
+            # all-free gate is a global condition that contradicts it
+            raise ValueError("routed serving requires refill=True")
         self.consts = consts
         self.geom = geom
         self.params = params
@@ -277,10 +311,12 @@ class StreamScheduler:
         self.num_slots = num_slots               # per shard
         self.controller = controller
         self.refill = refill
+        self.routed = routed
         self.round_chunk = round_chunk
         self.stepper = stepper or make_stepper(params, geom, mesh=mesh,
                                                axis_name=axis_name,
-                                               round_chunk=round_chunk)
+                                               round_chunk=round_chunk,
+                                               routed=routed)
         if self.stepper.run_chunk is None:
             raise ValueError("stepper lacks a run_chunk stage — build it "
                              "via make_stepper(..., round_chunk=K)")
@@ -312,14 +348,14 @@ class StreamScheduler:
 
     def _spec_inputs(self, shape):
         """(spec_state, cfg, dynamic) for the chunk: the controller's
-        mirrors, or a constant-width triple when no controller."""
+        mirrors, or a constant-width 5-tuple when no controller."""
         if self.controller is not None:
             self.controller._ensure(shape)
             return self.controller.state(), self.controller.cfg, True
         if getattr(self, "_static_spec", None) is None:
             w = jnp.full(shape, self.params.spec_width, jnp.int32)
             z = jnp.zeros(shape, jnp.float32)
-            self._static_spec = (w, z, z)
+            self._static_spec = (w, z, z, z, z)
         return self._static_spec, _NULL_CFG, False
 
     def _warmup(self, state, qbuf, pend=None):
@@ -337,9 +373,14 @@ class StreamScheduler:
             # trace) with an exhausted cursor and an all-parked pool:
             # the while_loop compiles but runs zero rounds, admitting
             # and mutating nothing — outputs are discarded anyway
+            if np.ndim(pend[1]) == 2:   # routed: per-shard cursors
+                done_cur = jnp.full((pend[1].shape[0],),
+                                    pend[1].shape[1], jnp.int32)
+            else:
+                done_cur = int(pend[1].shape[0])
             out = self.stepper.run_chunk_admit(
                 self.consts, state, qbuf, spec_state, cfg, 1, pend,
-                int(pend[1].shape[0]), 0, self.entry, dynamic=dyn)
+                done_cur, 0, self.entry, dynamic=dyn)
             ids, dists, _ = self.stepper.retire(state)
             jax.block_until_ready((out[0].done, out[11], ids, dists))
             return time.time() - t0
@@ -355,14 +396,27 @@ class StreamScheduler:
         return time.time() - t0
 
     def run(self, queries: np.ndarray,
-            arrivals: Optional[np.ndarray] = None) -> StreamStats:
+            arrivals: Optional[np.ndarray] = None,
+            target_shards: Optional[np.ndarray] = None) -> StreamStats:
         """Serve ``queries`` (N, d); ``arrivals`` are arrival rounds
-        (default: all at round 0). Returns per-query results + metrics."""
+        (default: all at round 0). Returns per-query results + metrics.
+
+        ``target_shards`` (N,) switches to **routed admission** (needs
+        ``routed=True`` at construction): row i may only be seated in
+        shard ``target_shards[i]``'s slot rows, each shard drains its
+        own arrival-ordered queue independently, and a shard with no
+        routed work stays parked — the two-tier serving discipline
+        (``routed_stream_search`` fans queries into per-shard legs and
+        fuses their top-k)."""
         queries = np.asarray(queries, np.float32)
         N, d = queries.shape
         arrivals = (np.zeros(N, np.int64) if arrivals is None
                     else np.asarray(arrivals, np.int64))
         order = np.argsort(arrivals, kind="stable")
+        routed = target_shards is not None
+        if routed and not self.routed:
+            raise ValueError("pass routed=True at construction to "
+                             "serve per-shard target_shards")
         S, Qs = self.S, self.num_slots
         K = self.round_chunk
         stepped = 0                                   # engine rounds run
@@ -370,7 +424,34 @@ class StreamScheduler:
         dispatches = 0                                # run_chunk launches
         injit = self.injit_admit and N > 0
         pend = None
-        if injit:
+        if routed:
+            # per-shard admission queues, staged once via the Allocator
+            # discipline (dispatch.py bucket scatter) in arrival order:
+            # shard s's queue holds its own legs, arrival-sorted, and
+            # is drained by shard s's cursor alone
+            from repro.core.dispatch import (compute_ranks,
+                                             scatter_to_buckets)
+            tgt = np.asarray(target_shards, np.int32)
+            dest = jnp.asarray(tgt[order])
+            valid = jnp.ones(N, bool)
+            rank, counts = compute_ranks(dest, valid, S)
+            counts = np.asarray(counts)
+            cap = max(1, int(counts.max()))
+            legidx = np.asarray(scatter_to_buckets(
+                dest, rank, valid, jnp.asarray(order.astype(np.int32)),
+                S, cap, fill=np.int32(INVALID)))  # (S, cap) -> row id
+            # INT32_MAX padding sorts after every real arrival, so the
+            # in-jit searchsorted never sees a hole
+            arr_by_shard = np.asarray(scatter_to_buckets(
+                dest, rank, valid,
+                jnp.asarray(arrivals[order], jnp.int32), S, cap,
+                fill=np.int32(2**31 - 1)))
+            next_qs = np.zeros(S, np.int64)       # per-shard cursors
+            if injit:
+                pend = (scatter_to_buckets(
+                    dest, rank, valid, jnp.asarray(queries[order]), S,
+                    cap), jnp.asarray(arr_by_shard))
+        elif injit:
             # device-side pending queue, staged once in admission order
             pend = (jnp.asarray(queries[order]),
                     jnp.asarray(arrivals[order], jnp.int32))
@@ -388,8 +469,43 @@ class StreamScheduler:
         spec_trace: list[float] = []
         t0 = time.time()
 
+        def next_arrival():
+            """Earliest arrival round among unadmitted queries (None
+            once every queue is drained)."""
+            if routed:
+                nas = [arr_by_shard[s, next_qs[s]] for s in range(S)
+                       if next_qs[s] < counts[s]]
+                return int(min(nas)) if nas else None
+            return int(arrivals[order[next_q]]) if next_q < N else None
+
         while retired < N:
-            if not injit:
+            if not injit and routed:
+                # -- host-paced routed admission: each shard fills its
+                # own free rows from its own arrived queue
+                mask = np.zeros((S, Qs), bool)
+                new_q = np.zeros((S, Qs, d), np.float32)
+                now_wall = time.time()
+                for s in range(S):
+                    free_rows = np.flatnonzero(owner[s] == INVALID)
+                    i = 0
+                    while (i < len(free_rows) and next_qs[s] < counts[s]
+                           and arr_by_shard[s, next_qs[s]] <= t):
+                        qid = int(legidx[s, next_qs[s]])
+                        r = free_rows[i]
+                        mask[s, r] = True
+                        new_q[s, r] = queries[qid]
+                        owner[s, r] = qid
+                        admit_t[s, r] = t
+                        admit_wall[s, r] = now_wall
+                        next_qs[s] += 1
+                        i += 1
+                if mask.any():
+                    state, qbuf = self.stepper.admit(
+                        state, qbuf, jnp.asarray(mask),
+                        jnp.asarray(new_q), *self.entry)
+                    if self.controller is not None:
+                        self.controller.reset_rows(mask)
+            elif not injit:
                 # -- host-paced admission: fill free slots from the
                 # arrived pending queue (the in-jit path seats these
                 # inside the chunk instead)
@@ -419,15 +535,14 @@ class StreamScheduler:
 
             live_mask = owner != INVALID
             live = int(live_mask.sum())
-            arrived_now = bool(next_q < N
-                               and arrivals[order[next_q]] <= t)
+            na = next_arrival()
+            arrived_now = na is not None and na <= t
             if live == 0 and not (injit and arrived_now):
                 # pool idle until the next arrival: jump the serving
                 # clock without a dispatch. The skipped rounds ran no
                 # engine work but they are real serving time — count
                 # them so occupancy/throughput read over the full clock
-                nt = (max(t + 1, int(arrivals[order[next_q]]))
-                      if next_q < N else t + 1)
+                nt = max(t + 1, na) if na is not None else t + 1
                 idle += nt - t
                 t = nt
                 continue
@@ -439,11 +554,13 @@ class StreamScheduler:
                 # at the exact boundary, and the admit/evict traces let
                 # the host replay the accounting afterwards
                 launch_wall = time.time()
+                cursor = (jnp.asarray(next_qs, jnp.int32) if routed
+                          else next_q)
                 (state, qbuf, spec_state, steps, live_cnt, width_sum,
                  admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist, cur) = \
                     self.stepper.run_chunk_admit(
                         self.consts, state, qbuf, spec_state, cfg, K,
-                        pend, next_q, t, self.entry, dynamic=dyn)
+                        pend, cursor, t, self.entry, dynamic=dyn)
                 dispatches += 1
                 steps = int(steps)                    # host sync point
                 now_wall = time.time()
@@ -476,10 +593,17 @@ class StreamScheduler:
                                     wall_latency_s=now_wall
                                     - admit_wall[s, r]))
                                 retired += 1
-                            owner[s, r] = int(order[admit_qidx[j][s, r]])
+                            # routed: pidx indexes shard s's own queue
+                            owner[s, r] = (
+                                int(legidx[s, admit_qidx[j][s, r]])
+                                if routed
+                                else int(order[admit_qidx[j][s, r]]))
                             admit_t[s, r] = t + j
                             admit_wall[s, r] = launch_wall
-                next_q = int(cur)
+                if routed:
+                    next_qs = np.asarray(cur, np.int64).copy()
+                else:
+                    next_q = int(cur)
             else:
                 # -- host-paced admission needs the chunk to wake
                 # exactly when admission could matter. Free slots ->
@@ -493,8 +617,15 @@ class StreamScheduler:
                 # the in-jit every-live-row-done exit already detects)
                 budget = K
                 stop_on_finish = False
-                if self.refill and next_q < N:
-                    na = int(arrivals[order[next_q]])
+                if routed:
+                    # per-shard queues: a freed row only helps a waiting
+                    # leg if it frees on that leg's own shard — a global
+                    # stop-on-finish can't tell, so pace per-round
+                    # (budget 1) while an arrived leg waits and wake
+                    # exactly at the next arrival otherwise
+                    if na is not None:
+                        budget = max(1, min(K, na - t))
+                elif self.refill and na is not None:
                     if live < S * Qs:
                         budget = max(1, min(K, na - t))
                     else:
@@ -553,7 +684,9 @@ class StreamScheduler:
             drops_b=int(np.asarray(state.drops_b).sum()),
             spec_trace=spec_trace, wall_s=time.time() - t0,
             host_dispatches=dispatches, compile_s=compile_s,
-            idle_rounds=idle, injit_admit=self.injit_admit)
+            idle_rounds=idle, injit_admit=self.injit_admit,
+            items_by_shard=[int(x) for x in
+                            np.ravel(np.asarray(state.items_recv))])
 
 
 def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
@@ -571,21 +704,27 @@ def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
     return np.floor(np.cumsum(gaps) + 0.5).astype(np.int64)
 
 
+def _make_controller(params, geom, dynamic_spec, spec_page_w=0.0):
+    if not dynamic_spec:
+        return None
+    if params.spec_width <= 0:
+        raise ValueError(
+            "dynamic_spec needs a speculation budget to adapt: set "
+            "spec_width > 0 (it is the controller's maximum width)")
+    return SpecController(spec_max=params.spec_width,
+                          W=params.search.W,
+                          max_degree=geom.max_degree,
+                          page_w=float(spec_page_w))
+
+
 def stream_search(consts, geom, params, entry, queries,
                   num_slots: int, arrivals=None, mesh=None,
                   dynamic_spec: bool = False, refill: bool = True,
-                  round_chunk: int = 1, injit_admit=None):
+                  round_chunk: int = 1, injit_admit=None,
+                  spec_page_w: float = 0.0):
     """Convenience wrapper: run the streaming scheduler and return
     (ids (N, k), dists (N, k), StreamStats) in query order."""
-    ctrl = None
-    if dynamic_spec:
-        if params.spec_width <= 0:
-            raise ValueError(
-                "dynamic_spec needs a speculation budget to adapt: set "
-                "spec_width > 0 (it is the controller's maximum width)")
-        ctrl = SpecController(spec_max=params.spec_width,
-                              W=params.search.W,
-                              max_degree=geom.max_degree)
+    ctrl = _make_controller(params, geom, dynamic_spec, spec_page_w)
     sched = StreamScheduler(consts, geom, params, entry,
                             num_slots=num_slots, mesh=mesh,
                             controller=ctrl, refill=refill,
@@ -599,4 +738,106 @@ def stream_search(consts, geom, params, entry, queries,
     for r in stats.results:
         ids[r.qid] = r.ids
         dists[r.qid] = r.dists
+    return ids, dists, stats
+
+
+def routed_stream_search(consts, geom, params, entry, queries, *,
+                         router, topr: int, num_slots: int,
+                         arrivals=None, mesh=None,
+                         dynamic_spec: bool = False,
+                         round_chunk: int = 1, injit_admit=None,
+                         shard_entries=None, leg_L=None,
+                         spec_page_w: float = 0.0):
+    """Two-tier routed serving (core/router.py): coarse-route each
+    query to its top-R shards, serve one *leg* per (query, shard) on
+    that shard's independent slot schedule, and fuse the per-leg top-k
+    at retire time through the backend's bitonic merge tree.
+
+    ``topr >= num_shards`` degenerates to the all-shard fan-out
+    semantics: one leg per query (global proposals, global entry) —
+    per-query results are bit-identical to :func:`stream_search` by
+    admission-order invariance, the routed layer only changing *where*
+    the row sits. ``topr < num_shards`` confines each leg to its home
+    shard's subgraph (``local_only``) seeded at that shard's own medoid
+    (``shard_entries``, as built by ``build_routed_index``), with the
+    per-leg candidate list scaled to ``leg_L`` (default
+    ``max(k, L // R)`` so R legs do roughly one fan-out query's work).
+
+    Returns (ids (N, k), dists (N, k), StreamStats) in query order;
+    ``stats.results`` holds fused per-query records (``n_dist`` summed
+    over legs, latency = the slowest leg — a query retires only when
+    all its legs have) and ``stats.legs`` the slot rows served.
+    """
+    from repro.core.router import fuse_topk
+
+    queries = np.asarray(queries, np.float32)
+    N = queries.shape[0]
+    S = geom.num_shards
+    k = params.search.k
+    arrivals = (np.zeros(N, np.int64) if arrivals is None
+                else np.asarray(arrivals, np.int64))
+    topr = int(topr)
+    if topr < 1:
+        raise ValueError(f"topr must be >= 1, got {topr}")
+    if topr >= S:
+        R = 1
+        targets = np.asarray(router.route(queries, 1))
+        leg_params = params
+        sh_entry = tuple(
+            jnp.asarray(np.broadcast_to(
+                np.asarray(a), (S,) + np.shape(np.asarray(a))))
+            for a in entry)
+    else:
+        R = topr
+        if shard_entries is None:
+            raise ValueError(
+                "topr < num_shards needs per-shard entries "
+                "(shard_entries; build_routed_index provides them)")
+        targets = np.asarray(router.route(queries, R))
+        lg = int(leg_L) if leg_L else params.search.L // R
+        leg_params = dataclasses.replace(
+            params,
+            search=dataclasses.replace(params.search, L=max(k, lg)),
+            local_only=True)
+        sh_entry = tuple(jnp.asarray(a) for a in shard_entries)
+
+    # leg rows: query i's leg j is row i*R + j, inheriting the query's
+    # vector and arrival and targeting its j-th routed shard
+    leg_q = np.repeat(queries, R, axis=0)
+    leg_arr = np.repeat(arrivals, R)
+    leg_tgt = targets[:, :R].reshape(-1).astype(np.int32)
+
+    ctrl = _make_controller(leg_params, geom, dynamic_spec, spec_page_w)
+    sched = StreamScheduler(consts, geom, leg_params, sh_entry,
+                            num_slots=num_slots, mesh=mesh,
+                            controller=ctrl, refill=True,
+                            round_chunk=round_chunk,
+                            injit_admit=injit_admit, routed=True)
+    leg_stats = sched.run(leg_q, leg_arr, target_shards=leg_tgt)
+
+    by = leg_stats.by_qid()
+    leg_i = np.full((N, R, k), INVALID, np.int32)
+    leg_d = np.zeros((N, R, k), np.float32)
+    for row, rec in by.items():
+        leg_i[row // R, row % R] = rec.ids
+        leg_d[row // R, row % R] = rec.dists
+    if R == 1:
+        ids, dists = leg_i[:, 0], leg_d[:, 0]
+    else:
+        di, ii = fuse_topk(leg_d, leg_i, leg_params.backend)
+        dists, ids = np.asarray(di), np.asarray(ii)
+
+    results = []
+    for i in range(N):
+        legs = [by[i * R + j] for j in range(R)]
+        results.append(QueryResult(
+            qid=i, ids=ids[i].copy(), dists=dists[i].copy(),
+            arrival_round=int(arrivals[i]),
+            admit_round=min(lr.admit_round for lr in legs),
+            retire_round=max(lr.retire_round for lr in legs),
+            service_rounds=max(lr.service_rounds for lr in legs),
+            n_dist=sum(lr.n_dist for lr in legs),
+            wall_latency_s=max(lr.wall_latency_s for lr in legs)))
+    results.sort(key=lambda r: (r.retire_round, r.qid))
+    stats = dataclasses.replace(leg_stats, results=results, legs=N * R)
     return ids, dists, stats

@@ -124,9 +124,9 @@ def merge_candidates(cand_d, cand_i, cand_e, new_d, new_i, new_valid, L: int,
         return d[..., :L], i[..., :L], e[..., :L]
     lead = cand_d.shape[:-1]
     lc, m = cand_d.shape[-1], new_d.shape[-1]
-    nd, ni = backend.sort_pairs(new_d.reshape(-1, m), new_i.reshape(-1, m))
-    d, i, e = backend.merge_pairs(
-        cand_d.reshape(-1, lc), cand_i.reshape(-1, lc), nd, ni,
+    d, i, e = backend.merge_unsorted(
+        cand_d.reshape(-1, lc), cand_i.reshape(-1, lc),
+        new_d.reshape(-1, m), new_i.reshape(-1, m),
         pay_a=(cand_e.reshape(-1, lc),),
         pay_b=(new_e.reshape(-1, m),))
     return (d.reshape(lead + (lc + m,))[..., :L],

@@ -76,6 +76,18 @@ def main(argv=None):
                     help="streaming: adapt each query's speculation "
                          "width to its observed hit rate (paper §V-B) "
                          "instead of the static --spec width")
+    ap.add_argument("--spec-page-w", type=float, default=0.0,
+                    help="streaming: page-efficiency weight for the "
+                         "dynamic controller (0 = hit-rate only)")
+    ap.add_argument("--topr", type=int, default=0,
+                    help="streaming: two-tier routing — coarse-route "
+                         "each query to its top-R shards, one leg per "
+                         "shard, fused top-k at retire (0 = all-shard "
+                         "fan-out; replaces the striped index with a "
+                         "spatially partitioned one)")
+    ap.add_argument("--leg-L", type=int, default=0,
+                    help="streaming routed: per-leg candidate-list "
+                         "length (0 = L // R, floored at k)")
     ap.add_argument("--round-chunk", type=int, default=8,
                     help="streaming: engine rounds per device dispatch "
                          "(engine_run_chunk); the host syncs only at "
@@ -104,11 +116,28 @@ def main(argv=None):
     print(f"dataset {ds.name}: n={db0.shape[0]} d={db0.shape[1]}")
 
     t0 = time.time()
-    db, packed = build_index(
-        db0, shards=args.shards, page_size=args.page_size, r=args.degree,
-        reorder=args.reorder, pref_width=args.spec, seed=args.seed)
-    print(f"index built in {time.time() - t0:.1f}s "
-          f"(reorder={args.reorder}, spec={args.spec})")
+    routed = None
+    if args.topr > 0:
+        if not args.stream:
+            raise SystemExit("--topr requires --stream (routing is a "
+                             "serving-path feature)")
+        from repro.core.router import build_routed_index
+        grid = args.shards * args.page_size
+        routed = build_routed_index(
+            db0[:db0.shape[0] // grid * grid], shards=args.shards,
+            page_size=args.page_size, r=max(args.degree, args.shards),
+            pref_width=args.spec, seed=args.seed,
+            kernel_mode=args.kernel_mode)
+        db, packed = routed.db, routed.packed
+        print(f"routed index built in {time.time() - t0:.1f}s "
+              f"(shards={args.shards}, spec={args.spec})")
+    else:
+        db, packed = build_index(
+            db0, shards=args.shards, page_size=args.page_size,
+            r=args.degree, reorder=args.reorder, pref_width=args.spec,
+            seed=args.seed)
+        print(f"index built in {time.time() - t0:.1f}s "
+              f"(reorder={args.reorder}, spec={args.spec})")
 
     consts, geom, entry = pack_for_engine(packed)
     sp = SearchParams(L=args.L, W=args.W, k=args.k)
@@ -119,7 +148,7 @@ def main(argv=None):
         from repro.launch.serve_stream import stream_report
 
         params = EngineParams.lossless(
-            sp, args.slots, args.degree, spec_width=args.spec,
+            sp, args.slots, packed.max_degree, spec_width=args.spec,
             kernel_mode=args.kernel_mode, coalesce_qb=args.coalesce_qb)
         res = {
             "dataset": ds.name, "mode": "stream",
@@ -131,7 +160,10 @@ def main(argv=None):
                             dynamic_spec=args.spec_dynamic,
                             round_chunk=args.round_chunk,
                             injit_admit={"auto": None, "on": True,
-                                         "off": False}[args.injit_admit]),
+                                         "off": False}[args.injit_admit],
+                            routed=routed, topr=args.topr,
+                            leg_L=args.leg_L or None,
+                            spec_page_w=args.spec_page_w),
         }
         print(json.dumps(res, indent=1))
         if args.out:

@@ -67,22 +67,39 @@ class StreamingRetriever:
 
 def stream_report(consts, geom, params, entry, db, queries, *, slots,
                   arrival_rate, seed, dynamic_spec=False,
-                  refill=True, round_chunk=8, injit_admit=None) -> dict:
+                  refill=True, round_chunk=8, injit_admit=None,
+                  routed=None, topr=0, leg_L=None,
+                  spec_page_w=0.0) -> dict:
     """Run one streaming session and build the serving report shared by
     the `search --stream` and `serve_stream` CLIs: Poisson arrivals ->
-    scheduler -> recall vs brute force + stream_summary metrics."""
+    scheduler -> recall vs brute force + stream_summary metrics.
+
+    With ``routed`` (a :class:`repro.core.router.RoutedIndex`) and
+    ``topr`` > 0, queries go through the two-tier path: the coarse
+    router picks each query's top-R shards and the scheduler runs one
+    leg per target shard, fusing per-leg top-k at retire time."""
     arrivals = poisson_arrivals(arrival_rate, queries.shape[0], seed)
-    ids, _, st = stream_search(
-        consts, geom, params, entry, queries, num_slots=slots,
-        arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
-        round_chunk=round_chunk, injit_admit=injit_admit)
+    if routed is not None and topr > 0:
+        from repro.core.scheduler import routed_stream_search
+        ids, _, st = routed_stream_search(
+            consts, geom, params, entry, queries, router=routed.router,
+            topr=topr, num_slots=slots, arrivals=arrivals,
+            dynamic_spec=dynamic_spec, round_chunk=round_chunk,
+            injit_admit=injit_admit, shard_entries=routed.shard_entries,
+            leg_L=leg_L, spec_page_w=spec_page_w)
+    else:
+        ids, _, st = stream_search(
+            consts, geom, params, entry, queries, num_slots=slots,
+            arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
+            round_chunk=round_chunk, injit_admit=injit_admit,
+            spec_page_w=spec_page_w)
     k = params.search.k
     true_ids, _ = brute_force_topk(db, queries, k)
     return {
         "shards": geom.num_shards, "slots_per_shard": slots,
         "arrival_rate": arrival_rate, "refill": refill,
         "spec": params.spec_width, "spec_dynamic": dynamic_spec,
-        "round_chunk": round_chunk,
+        "round_chunk": round_chunk, "topr": topr,
         # injit_admit arrives via stream_summary: the scheduler's
         # *resolved* admission path, not a re-derivation of the flag
         "recall@k": round(float(recall_at_k(ids, true_ids)), 4),
@@ -111,6 +128,20 @@ def main(argv=None):
                     help="max speculative prefetch width")
     ap.add_argument("--spec-dynamic", action="store_true",
                     help="per-query hit-rate speculation controller")
+    ap.add_argument("--spec-page-w", type=float, default=0.0,
+                    help="page-efficiency weight for the dynamic "
+                         "controller: blend the per-round unique-page "
+                         "delta into the width update so widths that "
+                         "win proposals but touch many fresh pages "
+                         "narrow (0 = hit-rate only)")
+    ap.add_argument("--topr", type=int, default=0,
+                    help="two-tier routing: coarse-route each query to "
+                         "its top-R shards and run one leg per shard "
+                         "(0 = all-shard fan-out; builds a spatially "
+                         "partitioned index instead of the striped one)")
+    ap.add_argument("--leg-L", type=int, default=0,
+                    help="routed: per-leg candidate-list length "
+                         "(0 = L // R, floored at k)")
     ap.add_argument("--no-refill", action="store_true",
                     help="frozen-batch discipline (baseline): admit "
                          "only into an all-free pool")
@@ -139,14 +170,25 @@ def main(argv=None):
             ds = dataclasses.replace(ds, n=args.n)
     db0 = ds.materialize()
     queries = ds.queries(args.queries, seed=args.seed + 1)
-    db, packed = build_index(
-        db0, shards=args.shards, page_size=args.page_size, r=args.degree,
-        pref_width=args.spec, seed=args.seed)
+    routed = None
+    if args.topr > 0:
+        from repro.core.router import build_routed_index
+        grid = args.shards * args.page_size
+        routed = build_routed_index(
+            db0[:db0.shape[0] // grid * grid], shards=args.shards,
+            page_size=args.page_size, r=max(args.degree, args.shards),
+            pref_width=args.spec, seed=args.seed,
+            kernel_mode=args.kernel_mode)
+        db, packed = routed.db, routed.packed
+    else:
+        db, packed = build_index(
+            db0, shards=args.shards, page_size=args.page_size,
+            r=args.degree, pref_width=args.spec, seed=args.seed)
 
     consts, geom, entry = pack_for_engine(packed)
     sp = SearchParams(L=args.L, W=args.W, k=args.k)
     params = EngineParams.lossless(
-        sp, args.slots, args.degree, spec_width=args.spec,
+        sp, args.slots, packed.max_degree, spec_width=args.spec,
         kernel_mode=args.kernel_mode, coalesce_qb=args.coalesce_qb)
 
     res = {
@@ -159,7 +201,10 @@ def main(argv=None):
                         refill=not args.no_refill,
                         round_chunk=args.round_chunk,
                         injit_admit={"auto": None, "on": True,
-                                     "off": False}[args.injit_admit]),
+                                     "off": False}[args.injit_admit],
+                        routed=routed, topr=args.topr,
+                        leg_L=args.leg_L or None,
+                        spec_page_w=args.spec_page_w),
     }
     print(json.dumps(res, indent=1))
     if args.out:
