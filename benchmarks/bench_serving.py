@@ -32,6 +32,14 @@ the host-paced admission baseline (``injit off``: chunk length
 collapses toward one round while the queue drains, the PR-4 model).
 Results land in machine-readable ``BENCH_serving.json``.
 
+``--chaos`` adds the robustness sweep: goodput vs offered load against
+the bounded admission ring under both overload policies (``shed`` and
+``block``), a mid-run 1-of-8 shard kill under an in-jit deadline
+(recall bounded below by the truncated-query fraction), corrupted page
+reads quarantined by the guard, and an armed-but-idle gate — every
+robustness feature enabled but not firing must be bit-identical to the
+plain serving path.
+
 ``--smoke`` shrinks the workload and *asserts* the streaming
 invariants — refill occupancy/throughput above frozen, controller page
 reads at or below controller-off at equal recall, the dispatch gate
@@ -53,6 +61,7 @@ os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=8")
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -188,9 +197,182 @@ def routed_leg(*, n, d, nq, shards, page_size, r, L, k, slots,
     return rows, fanout_out, routed_out
 
 
+def chaos_leg(*, n, d, nq, page_size, r, L, k, kernel_mode, seed,
+              smoke):
+    """Overload + fault chaos sweep on an 8-shard workload (the
+    robustness PR's evidence):
+
+      * **overload** — offered load at multiple factors of the measured
+        clean capacity, against a bounded admission ring under both
+        policies: ``shed`` trades completeness for bounded latency
+        (goodput-vs-offered-load curve), ``block`` serves everything
+        with backpressure.
+      * **shard kill** — 1 of 8 shards dies mid-run under a deadline:
+        every query must retire, untouched queries bit-exact, and the
+        recall drop is bounded by the truncated-query fraction (each
+        force-retired query loses at most its own 1/nq of recall).
+      * **corruption** — NaN page reads at a deterministic rate with
+        the guard on: quarantined > 0, zero NaN in any output.
+      * **armed-but-idle identity** — deadline no query reaches + guard
+        + full-stream ring must be bit-identical to the plain refill
+        path (the zero-cost-when-off contract, gated end to end).
+
+    With ``smoke`` the invariants are hard asserts (the CI chaos gate);
+    the rows land in BENCH_serving.json either way."""
+    from repro.ft.inject import fault_plan
+
+    shards, slots = 8, 4
+    db, packed, queries = build_workload(
+        n=n, d=d, nq=nq, shards=shards, page_size=page_size, r=r,
+        spec_max=0, seed=seed + 11)
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=L, W=1, k=k)
+    true_ids, _ = brute_force_topk(db, queries, k)
+
+    def params_of(**kw):
+        p = EngineParams.lossless(sp, slots, packed.max_degree,
+                                  kernel_mode=kernel_mode)
+        return dataclasses.replace(p, **kw) if kw else p
+
+    def rec(ids):
+        return round(float(recall_at_k(np.asarray(ids)[:, :k],
+                                       true_ids)), 4)
+
+    base = params_of()
+    arr0 = np.zeros(nq, np.int64)
+    skw = dict(num_slots=slots, round_chunk=8)
+    ref_i, ref_d, ref_st = stream_search(consts, geom, base, entry,
+                                         queries, arrivals=arr0, **skw)
+    clean_recall = rec(ref_i)
+    cap_qpr = stream_summary(ref_st)["queries_per_round"]
+
+    # -- armed-but-idle identity: every robustness feature on, none
+    # firing — must be the plain refill path bit for bit
+    armed = params_of(deadline_rounds=10**6, guard_nonfinite=True)
+    ai, ad, ast = stream_search(consts, geom, armed, entry, queries,
+                                arrivals=arr0, ring_capacity=nq,
+                                overload="block", **skw)
+    identity = {
+        "ids_equal": bool(np.array_equal(np.asarray(ai),
+                                         np.asarray(ref_i))),
+        "dists_equal": bool(np.array_equal(np.asarray(ad),
+                                           np.asarray(ref_d))),
+        "rounds_equal": ast.total_rounds == ref_st.total_rounds,
+        "dispatches_equal": ast.host_dispatches == ref_st.host_dispatches,
+        "dispatches_per_query": round(ast.host_dispatches / nq, 3),
+    }
+
+    # -- overload: goodput vs offered load, shed and block.  The ring
+    # holds twice the slot pool: deep enough to never shed at <= 1x
+    # capacity, shallow enough that sustained overload overflows it
+    # well before the stream ends
+    factors = (1.0, 3.0) if smoke else (0.5, 1.0, 2.0, 4.0)
+    ring = 2 * slots
+    overload_rows = {"shed": [], "block": []}
+    for policy in ("shed", "block"):
+        for factor in factors:
+            arr = poisson_arrivals(cap_qpr * factor, nq, seed + 13)
+            ids_o, _, st_o = stream_search(
+                consts, geom, base, entry, queries, arrivals=arr,
+                ring_capacity=ring, overload=policy, **skw)
+            row = stream_summary(st_o)
+            overload_rows[policy].append({
+                "offered_factor": factor,
+                "offered_rate": round(cap_qpr * factor, 3),
+                "retired": row["queries"], "shed": row["shed"],
+                "goodput": row["goodput"],
+                "p99_latency_rounds": row["latency_rounds"]["p99"],
+            })
+
+    # -- shard kill mid-run, deadline above natural convergence
+    max_srv = max(q.service_rounds for q in ref_st.results)
+    kill_round = max(2, min(q.service_rounds for q in ref_st.results))
+    dl = max_srv + 4
+    kp = params_of(deadline_rounds=dl,
+                   faults=fault_plan(shards).kill(3, kill_round))
+    ki, kd, kst = stream_search(consts, geom, kp, entry, queries,
+                                arrivals=arr0, **skw)
+    kill_row = {
+        "killed_shard": 3, "kill_round": kill_round,
+        "deadline_rounds": dl, "retired": len(kst.results),
+        "truncated": kst.truncated, "recall": rec(ki),
+        "clean_recall": clean_recall,
+        "recall_floor": round(clean_recall - kst.truncated / nq, 4),
+        "nan_in_output": bool(np.isnan(np.asarray(kd)).any()),
+    }
+
+    # -- corruption + guard: quarantine instead of poisoning the merge
+    cp = params_of(guard_nonfinite=True,
+                   faults=fault_plan(shards).corrupt(0.02, "nan",
+                                                     seed=seed + 17))
+    ci, cd, cst = stream_search(consts, geom, cp, entry, queries,
+                                arrivals=arr0, **skw)
+    corrupt_row = {
+        "corrupt_rate": 0.02, "mode": "nan",
+        "quarantined": cst.quarantined, "retired": len(cst.results),
+        "recall": rec(ci), "clean_recall": clean_recall,
+        "nan_in_output": bool(np.isnan(np.asarray(cd)).any()),
+    }
+
+    emit([[p, row["offered_factor"], row["offered_rate"],
+           row["retired"], row["shed"], row["goodput"],
+           row["p99_latency_rounds"]]
+          for p in ("shed", "block") for row in overload_rows[p]],
+         ["policy", "factor", "rate", "retired", "shed", "goodput",
+          "p99_rounds"],
+         f"overload sweep (ring={ring}, capacity={cap_qpr} q/round)")
+    emit([[kill_row["killed_shard"], kill_row["kill_round"],
+           kill_row["truncated"], kill_row["recall"],
+           kill_row["recall_floor"], corrupt_row["quarantined"],
+           corrupt_row["recall"]]],
+         ["killed", "at_round", "truncated", "kill_recall",
+          "recall_floor", "quarantined", "corrupt_recall"],
+         f"fault injection (1 of {shards} shards killed mid-run; 2% "
+         f"NaN page reads + guard)")
+
+    if smoke:
+        for key, ok in identity.items():
+            if key.endswith("_equal"):
+                assert ok, (
+                    f"armed-but-idle robustness must be bit-identical "
+                    f"to the plain path: {key} failed")
+        hi = overload_rows["shed"][-1]
+        assert hi["shed"] > 0, (
+            f"shed policy must reject under {hi['offered_factor']}x "
+            f"overload with a {ring}-deep ring")
+        for row in overload_rows["shed"]:
+            assert row["goodput"] > 0, (
+                f"goodput collapsed to 0 at {row['offered_factor']}x "
+                f"offered load — shedding must protect admitted queries")
+            assert row["retired"] + row["shed"] == nq
+        for row in overload_rows["block"]:
+            assert row["shed"] == 0 and row["retired"] == nq, (
+                f"block policy must serve the whole stream: {row}")
+        assert kill_row["retired"] == nq, (
+            "shard kill: every query must retire (deadline force-"
+            "retire), none may hang")
+        assert kill_row["truncated"] > 0
+        assert not kill_row["nan_in_output"]
+        assert kill_row["recall"] >= kill_row["recall_floor"] - 1e-6, (
+            f"kill recall {kill_row['recall']} fell below the "
+            f"truncated-fraction floor {kill_row['recall_floor']}")
+        assert corrupt_row["quarantined"] > 0, (
+            "corruption ran but the guard quarantined nothing")
+        assert corrupt_row["retired"] == nq
+        assert not corrupt_row["nan_in_output"], (
+            "NaN page reads leaked into the output top-k")
+
+    return {"capacity_queries_per_round": cap_qpr,
+            "identity_when_off": identity,
+            "overload": overload_rows,
+            "shard_kill": kill_row,
+            "corruption": corrupt_row}
+
+
 def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         spec_max=8, L=32, rate=2.0, kernel_mode="jnp", seed=0,
-        round_chunk=1, smoke=False, out_json="BENCH_serving.json"):
+        round_chunk=1, smoke=False, chaos=False,
+        out_json="BENCH_serving.json"):
     if smoke:
         nq, n, slots, rate = 64, 2048, 4, 0.0
     db, packed, queries = build_workload(
@@ -290,6 +472,15 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         print(f"[routed leg skipped: n={routed_n} not on the "
               f"{routed_shards}x{page_size} grid]")
 
+    # chaos sweep: overload shedding/backpressure against the bounded
+    # admission ring, a mid-run shard kill under a deadline, corrupted
+    # page reads behind the guard, and the armed-but-idle identity gate
+    chaos_rows = {}
+    if chaos:
+        chaos_rows = chaos_leg(
+            n=min(n, 2048), d=d, nq=nq, page_size=page_size, r=r, L=L,
+            k=10, kernel_mode=kernel_mode, seed=seed, smoke=smoke)
+
     emit([[name, s["occupancy"], s["queries_per_round"],
            s["sustained_qps"], s["latency_rounds"]["p50"],
            s["latency_rounds"]["p99"], s["pages_unique"], s["recall"]]
@@ -384,6 +575,7 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
                               "shard_map_host_admission":
                                   chunk_shard_hostadm},
         "routed_sweep": routed_rows,
+        "chaos": chaos_rows,
         "checks": checks,
     }
     if out_json:
@@ -503,13 +695,20 @@ def main(argv=None):
                     help="rounds per device dispatch for the headline "
                          "discipline scenarios (the chunk sweep always "
                          "runs; 1 keeps the host-paced baseline)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="add the robustness sweep: goodput vs offered "
+                         "load under shed/block overload policies, a "
+                         "mid-run shard kill under a deadline, NaN page "
+                         "reads behind the guard, and the armed-but-"
+                         "idle bit-identity gate")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
     run(nq=args.queries, n=args.n, shards=args.shards, slots=args.slots,
         rate=args.rate, spec_max=args.spec_max,
         kernel_mode=args.kernel_mode, round_chunk=args.round_chunk,
-        seed=args.seed, smoke=args.smoke, out_json=args.out)
+        seed=args.seed, smoke=args.smoke, chaos=args.chaos,
+        out_json=args.out)
     return 0
 
 

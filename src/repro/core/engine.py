@@ -52,6 +52,9 @@ from repro.core.luncsr import PackedIndex
 from repro.core.ref_search import SearchParams
 from repro.core.traversal import (ID_SENTINEL, dedup_in_round,
                                   merge_candidates, select_expand)
+from repro.ft import inject as ftinject
+from repro.ft.guard import quarantine_distances
+from repro.ft.inject import NEVER, FaultSpec
 from repro.utils import BIG_DIST, bloom_insert, bloom_query
 
 INVALID = -1
@@ -124,6 +127,21 @@ class EngineParams:
                                     # other shards, so a slot row traverses
                                     # only its home shard's subgraph
                                     # (core/router.py two-tier search)
+    deadline_rounds: int = 0        # force-retire a row once it has aged
+                                    # this many serving-clock rounds since
+                                    # admission (best-so-far top-k, the
+                                    # `truncated` flag set); 0 = no
+                                    # deadline — bit-identical schedules
+    guard_nonfinite: bool = False   # quarantine corrupt (NaN/-inf-ish)
+                                    # phase-B distances to BIG_DIST and
+                                    # count them instead of letting them
+                                    # enter the bitonic merge (ft/guard.py)
+    faults: FaultSpec | None = None  # deterministic fault plan (ft/
+                                    # inject.py): shard kills/delays apply
+                                    # at in-jit round boundaries (admission
+                                    # path only), page corruption in the
+                                    # phase-B distance read. None compiles
+                                    # zero extra ops.
 
     @property
     def backend(self) -> KernelBackend:
@@ -148,12 +166,21 @@ class EngineState(NamedTuple):
     cand_e: jax.Array    # (Qs, L)
     bloom: jax.Array     # (Qs, W32)
     done: jax.Array      # (Qs,)
-    rounds: jax.Array    # (Qs,)
+    rounds: jax.Array    # (Qs,)  rounds the row actually worked
     n_dist: jax.Array    # (Qs,)
+    age: jax.Array       # (Qs,)  serving-clock rounds since admission —
+                         # advances even while the row's shard is
+                         # stalled (== rounds when nothing ever stalls)
+    deadline: jax.Array  # (Qs,)  age at which the row is force-retired
+                         # (NEVER when no deadline is configured)
+    truncated: jax.Array  # (Qs,) bool — retired by deadline with its
+                          # best-so-far top-k, not by convergence
     items_recv: jax.Array    # () items received by this shard's SiN
     pages_unique: jax.Array  # () unique page reads (dynamic allocating)
     drops_b: jax.Array       # () phase-B overflow drops at this source
     props_sent: jax.Array    # () accepted proposals sent by this source
+    quarantined: jax.Array   # () corrupt distances quarantined to
+                             # BIG_DIST by the guard (guard_nonfinite)
 
 
 # ---------------------------------------------------------------------------
@@ -182,8 +209,10 @@ def _init_state(queries, qq, entry_vec, entry_norm, entry_id,
                          jnp.ones((Qs, 1), dtype=bool))
     z = jnp.zeros((Qs,), jnp.int32)
     zs = jnp.int32(0)
+    dl = params.deadline_rounds if params.deadline_rounds > 0 else NEVER
     return EngineState(cand_d, cand_i, cand_e, bloom, z.astype(bool),
-                       z, z, zs, zs, zs, zs)
+                       z, z, z, jnp.full((Qs,), dl, jnp.int32),
+                       z.astype(bool), zs, zs, zs, zs, zs)
 
 
 def _fa_select(state: EngineState, params: EngineParams, geom: EngineGeom):
@@ -296,13 +325,20 @@ def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq, spec_w,
     return send, keep
 
 
-def _fd_distance(recv, db, vnorm, blk_perm, params: EngineParams,
-                 geom: EngineGeom):
+def _fd_distance(recv, db, vnorm, blk_perm, my_shard,
+                 params: EngineParams, geom: EngineGeom):
     """Owner SiN: translate id -> physical page/slot, compute distances.
 
     In gather_vectors mode returns the raw vectors instead (baseline).
     Also counts page-buffer statistics: unique pages (dynamic allocating
     shares a page read across assignments) vs raw items (no sharing).
+
+    ``my_shard`` is this shard's index — only read when a fault plan
+    with page corruption is configured, to salt the deterministic
+    bad-page hash (ft/inject.py): a corrupted read returns NaN or a
+    huge-negative distance exactly as damaged media would, on every
+    visit to that page. Corruption models the SiN distance read path,
+    so the gather_vectors baseline is exempt.
     """
     vid = recv["vid"]                              # (S, C_B)
     mask = recv["mask"]
@@ -328,6 +364,10 @@ def _fd_distance(recv, db, vnorm, blk_perm, params: EngineParams,
         dist = params.backend.item_distances(
             ppage, slot, flat_mask, recv["qvec"].reshape(S * C, -1),
             recv["qq"].reshape(-1), db, vnorm)
+        if params.faults is not None and params.faults.any_corrupt:
+            bad = ftinject.bad_page_mask(params.faults, ppage, my_shard)
+            dist = jnp.where(bad & flat_mask,
+                             ftinject.corrupt_value(params.faults), dist)
         send = {"dist": dist.reshape(S, C)}
     return send, items, uniq
 
@@ -354,6 +394,12 @@ def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
                                    keep_c["rank"], ok, params.capacity_b)
     accepted = ok.reshape(Qs, M)
     dist = jnp.where(accepted, dist.reshape(Qs, M), BIG_DIST)
+    quar = jnp.int32(0)
+    if params.guard_nonfinite:
+        # corrupt reads become worthless-but-harmless candidates: they
+        # still count as accepted proposals (the read happened) but a
+        # BIG_DIST entry can never displace a real one in the merge
+        dist, quar = quarantine_distances(dist, accepted, BIG_DIST)
 
     bloom = bloom_insert(state.bloom, props, accepted)
     cand_d, cand_i, cand_e = merge_candidates(
@@ -371,9 +417,11 @@ def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
     done = state.done | ~((~cand_e) & (cand_i != ID_SENTINEL)).any(axis=1)
     return EngineState(
         cand_d, cand_i, cand_e, bloom, done, rounds, n_dist,
+        state.age, state.deadline, state.truncated,
         state.items_recv + items, state.pages_unique + uniq,
         state.drops_b + keep_c["drops"],
-        state.props_sent + accepted.sum().astype(jnp.int32))
+        state.props_sent + accepted.sum().astype(jnp.int32),
+        state.quarantined + quar)
 
 
 # ---------------------------------------------------------------------------
@@ -395,7 +443,8 @@ def _round(state, consts, params: EngineParams, geom: EngineGeom, a2a,
                                  geom)
     recv_c = a2a(send_c)
     send_d, items, uniq = _fd_distance(recv_c, consts["db"], consts["vnorm"],
-                                       consts["blk_perm"], params, geom)
+                                       consts["blk_perm"], my_shard, params,
+                                       geom)
     recv_d = a2a(send_d)
     return _fe_merge(state, keep_a, keep_c, recv_d, items, uniq,
                      consts["queries"], consts["qq"], params, geom)
@@ -409,6 +458,7 @@ def _finalize(state: EngineState, k: int):
         "rounds": state.rounds, "n_dist": state.n_dist,
         "items_recv": state.items_recv, "pages_unique": state.pages_unique,
         "drops_b": state.drops_b, "props_sent": state.props_sent,
+        "truncated": state.truncated, "quarantined": state.quarantined,
     }
     return out_i, out_d, stats
 
@@ -454,7 +504,7 @@ def _sim_round(state, consts, queries, qq, spec_w, params: EngineParams,
     vfc = jax.vmap(functools.partial(_fc_propose, params=params, geom=geom),
                    in_axes=(0, 0, 0, 0, 0, 0, 0))
     vfd = jax.vmap(functools.partial(_fd_distance, params=params, geom=geom),
-                   in_axes=(0, 0, 0, 0))
+                   in_axes=(0, 0, 0, 0, 0))
     vfe = jax.vmap(functools.partial(_fe_merge, params=params, geom=geom),
                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
 
@@ -467,7 +517,7 @@ def _sim_round(state, consts, queries, qq, spec_w, params: EngineParams,
                          shard_ids)
     recv_c = a2a(send_c)
     send_d, items, uniq = vfd(recv_c, consts["db"], consts["vnorm"],
-                              consts["blk_perm"])
+                              consts["blk_perm"], shard_ids)
     recv_d = a2a(send_d)
     return vfe(state, keep_a, keep_c, recv_d, items, uniq, queries, qq)
 
@@ -626,7 +676,8 @@ class EngineStepper(NamedTuple):
                          #   live_cnt (K,), width_sum (K,),
                          #   admit_qidx (K, S, Qs), ret_i (K, S, Qs, k),
                          #   ret_d (K, S, Qs, k), ret_rounds (K, S, Qs),
-                         #   ret_ndist (K, S, Qs), cursor')
+                         #   ret_ndist (K, S, Qs), ret_age (K, S, Qs),
+                         #   ret_trunc (K, S, Qs), cursor')
 
 
 @functools.partial(jax.jit, static_argnames=("params", "geom"))
@@ -684,8 +735,11 @@ def _admit_rows(state: EngineState, queries, admit_mask, new_q,
         jnp.where(admit_mask, False, state.done),
         jnp.where(admit_mask, 0, state.rounds),
         jnp.where(admit_mask, 0, state.n_dist),
+        jnp.where(admit_mask, 0, state.age),
+        jnp.where(admit_mask, fresh.deadline, state.deadline),
+        jnp.where(admit_mask, False, state.truncated),
         state.items_recv, state.pages_unique, state.drops_b,
-        state.props_sent)
+        state.props_sent, state.quarantined)
     return state, q
 
 
@@ -719,7 +773,8 @@ def engine_retire(state: EngineState, k: int):
     return jax.vmap(lambda s: _finalize(s, k))(state)
 
 
-def _chunk_round(carry, round_fn, rounds_cap, dynamic, spec_cfg):
+def _chunk_round(carry, round_fn, rounds_cap, dynamic, spec_cfg,
+                 stall=None):
     """One in-chunk round, shared by the sim and shard_map while_loop
     bodies (sim-vs-shard_map bit-identity depends on this being the one
     place the loop-body semantics live): record the per-round traces,
@@ -727,13 +782,37 @@ def _chunk_round(carry, round_fn, rounds_cap, dynamic, spec_cfg):
     exact boundary the per-round scheduler would retire them, and — in
     dynamic mode — step the speculation widths with the served widths
     (ordering contract of :func:`spec_update`) and the round's unique-
-    page delta (the page-efficiency signal; a no-op at page_w=0)."""
+    page delta (the page-efficiency signal; a no-op at page_w=0).
+
+    ``stall`` (None, or a bool broadcastable against ``done``) marks
+    rows whose shard is not serving this round (ft/inject.py kill/delay
+    plans): they are parked for the round — no phase work, no merge, no
+    ``rounds`` advance — and un-parked afterwards with their traversal
+    state intact. The serving clock still ages every live row, stalled
+    or not, so the in-jit deadline below can retire rows a dead shard
+    will never finish: the degraded-fusion contract is "R legs become
+    R-f legs", never a stall."""
     st, sw, hi, pk, phi, ppk, prev_nd, prev_pg, j, lc, ws = carry
     worked = ~st.done
     lc = lc.at[j].set(worked.sum().astype(jnp.int32))
     ws = ws.at[j].set(jnp.where(worked, sw, 0).sum().astype(jnp.int32))
-    st = round_fn(st, sw)
+    if stall is None:
+        st = round_fn(st, sw)
+    else:
+        pre_done = st.done
+        st = st._replace(done=st.done | stall)
+        st = round_fn(st, sw)
+        st = st._replace(done=jnp.where(stall, pre_done, st.done))
     st = st._replace(done=st.done | (st.rounds >= rounds_cap))
+    # in-jit deadline: age every row that was live at round entry, then
+    # force-retire the ones at their deadline with best-so-far top-k.
+    # A row that converged this very round keeps truncated=False (its
+    # natural finish wins the tie); with no deadline configured the
+    # comparison never fires and the schedule is bit-identical.
+    age = st.age + worked.astype(jnp.int32)
+    hit = ~st.done & (age >= st.deadline)
+    st = st._replace(age=age, done=st.done | hit,
+                     truncated=st.truncated | hit)
     if dynamic:
         sw, hi, pk, phi, ppk = spec_update(
             sw, hi, pk, st.n_dist - prev_nd, worked, spec_cfg,
@@ -887,13 +966,30 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
     host-side — the scheduler jumps the serving clock without a
     dispatch.
 
+    With a fault plan on ``params`` (ft/inject.py), shard kill/delay
+    windows are evaluated against the global round ``t0 + j`` at every
+    boundary: a stalled shard's rows do no phase work that round but
+    keep aging, so the in-jit deadline retires them (``ret_age`` /
+    ``ret_trunc`` extend the evict traces with the serving-clock age
+    and truncation flag the host needs for exact accounting). This is
+    the only chunk driver that knows the global round, which is why
+    stall faults require the in-jit admission path.
+
     Returns ``(state, queries', spec_state', steps, live_cnt,
     width_sum, admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist,
-    cursor')``; the query buffer rides in the carry because admission
-    rewrites it mid-chunk.
+    ret_age, ret_trunc, cursor')``; the query buffer rides in the
+    carry because admission rewrites it mid-chunk.
     """
     k = params.search.k
     S, Qs = state.done.shape
+    stall_fn = None
+    if params.faults is not None and params.faults.any_stall:
+        if params.faults.num_shards != S:
+            raise ValueError(
+                f"fault plan covers {params.faults.num_shards} shards "
+                f"but the pool has {S}")
+        def stall_fn(t):
+            return ftinject.stall_at(params.faults, t)[:, None]  # (S, 1)
     spec_w, hit, peak, phit, ppeak = spec_state
     spec_w = jnp.broadcast_to(jnp.asarray(spec_w, jnp.int32), (S, Qs))
     budget = jnp.minimum(jnp.asarray(budget, jnp.int32), jnp.int32(K))
@@ -926,7 +1022,7 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
 
     def body(carry):
         (st, q, sw, hi, pk, phi, ppk, cur, prev_nd, prev_pg, j, lc, ws,
-         aq, ri, rd, rr, rn) = carry
+         aq, ri, rd, rr, rn, ra, rt) = carry
         # -- boundary j (global round t0 + j): record the would-be-
         # evicted rows' results, then seat arrived pending queries
         fin_i, fin_d = vfin(st)
@@ -934,6 +1030,8 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
         rd = rd.at[j].set(fin_d)
         rr = rr.at[j].set(st.rounds)
         rn = rn.at[j].set(st.n_dist)
+        ra = ra.at[j].set(st.age)
+        rt = rt.at[j].set(st.truncated)
         if per_shard:
             seat, pidx, new_q = vseat(
                 st.done, cur, avail_of(pend_arr, cur, t0 + j),
@@ -972,9 +1070,10 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
                  j, lc, ws),
                 lambda s, w: _sim_round(s, consts, q, qq, w, params,
                                         geom),
-                params.search.rounds_cap, dynamic, spec_cfg)
+                params.search.rounds_cap, dynamic, spec_cfg,
+                stall=None if stall_fn is None else stall_fn(t0 + j))
         return (st, q, sw, hi, pk, phi, ppk, cur, prev_nd, prev_pg, j,
-                lc, ws, aq, ri, rd, rr, rn)
+                lc, ws, aq, ri, rd, rr, rn, ra, rt)
 
     zeros_k = jnp.zeros((K,), jnp.int32)
     zeros_sq = jnp.zeros((K, S, Qs), jnp.int32)
@@ -982,13 +1081,15 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
              state.n_dist, state.pages_unique, jnp.int32(0), zeros_k,
              zeros_k, jnp.full((K, S, Qs), -1, jnp.int32),
              jnp.full((K, S, Qs, k), INVALID, jnp.int32),
-             jnp.zeros((K, S, Qs, k), jnp.float32), zeros_sq, zeros_sq)
+             jnp.zeros((K, S, Qs, k), jnp.float32), zeros_sq, zeros_sq,
+             zeros_sq, jnp.zeros((K, S, Qs), bool))
     (state, queries, spec_w, hit, peak, phit, ppeak, cursor, _, _, steps,
      live_cnt, width_sum, admit_qidx, ret_i, ret_d, ret_rounds,
-     ret_ndist) = jax.lax.while_loop(cond, body, carry)
+     ret_ndist, ret_age, ret_trunc) = jax.lax.while_loop(cond, body,
+                                                         carry)
     return (state, queries, (spec_w, hit, peak, phit, ppeak), steps,
             live_cnt, width_sum, admit_qidx, ret_i, ret_d, ret_rounds,
-            ret_ndist, cursor)
+            ret_ndist, ret_age, ret_trunc, cursor)
 
 
 def _shard_map_fn(fn, mesh, in_specs, out_specs):
@@ -1200,6 +1301,10 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
             t0i = jnp.asarray(t0, jnp.int32)
             spec_max = jnp.asarray(cfg[0], jnp.int32)
             myidx = jax.lax.axis_index(axis_name)
+            stall_fn = None
+            if params.faults is not None and params.faults.any_stall:
+                def stall_fn(t):   # this shard's own stall bit (scalar)
+                    return ftinject.stall_at(params.faults, t)[myidx]
             if routed:
                 # routed: this shard's own queue / cursor / entry block
                 pq = pend_q[0]
@@ -1223,12 +1328,14 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
 
             def body(carry):
                 (st, ql, sw, hi, pk, phi, ppk, cur, prev_nd, prev_pg, j,
-                 _, lcnt, wsum, aq, ri, rd, rr, rn) = carry
+                 _, lcnt, wsum, aq, ri, rd, rr, rn, ra, rt) = carry
                 fin_i, fin_d, _ = _finalize(st, k_out)
                 ri = ri.at[j].set(fin_i)
                 rd = rd.at[j].set(fin_d)
                 rr = rr.at[j].set(st.rounds)
                 rn = rn.at[j].set(st.n_dist)
+                ra = ra.at[j].set(st.age)
+                rt = rt.at[j].set(st.truncated)
                 avail = _pending_avail(parr, cur, t0i + j)
                 if routed:
                     # independent per-shard schedule: local free ranks
@@ -1265,10 +1372,12 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
                      st.pages_unique, j, lcnt, wsum),
                     lambda s, w: _round(s, lc, params, geom, a2a, w,
                                         myidx),
-                    sp.rounds_cap, dynamic, cfg)
+                    sp.rounds_cap, dynamic, cfg,
+                    stall=None if stall_fn is None
+                    else stall_fn(t0i + j))
                 return (st, ql, sw, hi, pk, phi, ppk, cur, prev_nd,
                         prev_pg, j, gsum(~st.done), lcnt, wsum,
-                        aq, ri, rd, rr, rn)
+                        aq, ri, rd, rr, rn, ra, rt)
 
             zeros_k = jnp.zeros((K,), jnp.int32)
             zeros_kq = jnp.zeros((K, Qs), jnp.int32)
@@ -1278,14 +1387,16 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
                      jnp.full((K, Qs), -1, jnp.int32),
                      jnp.full((K, Qs, k_out), INVALID, jnp.int32),
                      jnp.zeros((K, Qs, k_out), jnp.float32),
-                     zeros_kq, zeros_kq)
+                     zeros_kq, zeros_kq, zeros_kq,
+                     jnp.zeros((K, Qs), bool))
             (st, ql, sw, hi, pk, phi, ppk, cur, _, _, steps, _, lcnt,
-             wsum, aq, ri, rd, rr, rn) = jax.lax.while_loop(
+             wsum, aq, ri, rd, rr, rn, ra, rt) = jax.lax.while_loop(
                 cond, body, carry)
             return (tuple(leaf[None] for leaf in st), ql[None], sw[None],
                     hi[None], pk[None], phi[None], ppk[None],
                     steps[None], lcnt[None], wsum[None], aq[None],
-                    ri[None], rd[None], rr[None], rn[None], cur[None])
+                    ri[None], rd[None], rr[None], rn[None], ra[None],
+                    rt[None], cur[None])
 
         return local_chunk_admit
 
@@ -1296,7 +1407,7 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
     else:
         tail = (P(),) * 9
     admit_in = (P(axis_name),) * 11 + tail + (P(axis_name),) * nleaves
-    admit_out = ((P(axis_name),) * nleaves,) + (P(axis_name),) * 15
+    admit_out = ((P(axis_name),) * nleaves,) + (P(axis_name),) * 17
     admit_fns = {}
     for dyn in (False, True):
         admit_fns[dyn] = jax.jit(_shard_map_fn(
@@ -1310,7 +1421,7 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
                               queries.shape[:2])
         cfg = tuple(jnp.asarray(c) for c in spec_cfg)
         (leaves, q, sw, hi, pk, phi, ppk, steps, lcnt, wsum, aq, ri, rd,
-         rr, rn, cur) = admit_fns[bool(dynamic)](
+         rr, rn, ra, rt, cur) = admit_fns[bool(dynamic)](
             consts["db"], consts["vnorm"], consts["adj"], consts["pref"],
             consts["blk_perm"], queries, sw, hi, pk, phi, ppk, cfg,
             jnp.asarray(budget, jnp.int32), jnp.asarray(pend_q),
@@ -1326,7 +1437,8 @@ def make_stepper(params: EngineParams, geom: EngineGeom, mesh=None,
                 steps[0], lcnt.sum(axis=0), wsum.sum(axis=0),
                 jnp.swapaxes(aq, 0, 1), jnp.swapaxes(ri, 0, 1),
                 jnp.swapaxes(rd, 0, 1), jnp.swapaxes(rr, 0, 1),
-                jnp.swapaxes(rn, 0, 1), cur if routed else cur[0])
+                jnp.swapaxes(rn, 0, 1), jnp.swapaxes(ra, 0, 1),
+                jnp.swapaxes(rt, 0, 1), cur if routed else cur[0])
 
     return EngineStepper(init, rnd, admit, retire, run_chunk, K,
                          run_chunk_admit)

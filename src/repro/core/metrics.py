@@ -116,4 +116,16 @@ def stream_summary(stats) -> dict:
         "items_by_shard": list(getattr(stats, "items_by_shard", [])),
         "mean_spec_w": round(float(np.mean(stats.spec_trace)), 2)
         if stats.spec_trace else 0.0,
+        # robustness counters: overload-shed queries, incomplete
+        # (deadline / lost-leg) retirements, guard-quarantined corrupt
+        # distances, and the routed clean-legs-per-query histogram.
+        # goodput = retired clean / offered: the overload sweeps'
+        # headline number (benchmarks/bench_serving.py --chaos)
+        "shed": getattr(stats, "shed", 0),
+        "truncated": getattr(stats, "truncated", 0),
+        "quarantined": getattr(stats, "quarantined", 0),
+        "legs_fused_hist": list(getattr(stats, "legs_fused_hist", [])),
+        "goodput": round(
+            sum(1 for r in res if not r.truncated)
+            / max(n + getattr(stats, "shed", 0), 1), 4),
     }

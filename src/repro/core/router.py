@@ -257,8 +257,12 @@ def fuse_topk(leg_d, leg_i, backend: KernelBackend, k: int | None = None):
     leg_i = jnp.asarray(leg_i)
     if k is None:
         k = leg_d.shape[-1]
-    # Padded slots must sort last regardless of what distance they carry.
-    leg_d = jnp.where(leg_i == INVALID, BIG_DIST, leg_d)
+    # Padded slots must sort last regardless of what distance they
+    # carry, and a non-finite distance (a corrupt or dropped leg) must
+    # not poison the bitonic compare-exchanges — NaN compares are
+    # unordered and would silently scramble the merge.
+    leg_d = jnp.where((leg_i == INVALID) | ~jnp.isfinite(leg_d),
+                      BIG_DIST, leg_d)
     cur_d = [leg_d[:, j] for j in range(leg_d.shape[1])]
     cur_i = [leg_i[:, j] for j in range(leg_i.shape[1])]
     while len(cur_d) > 1:
@@ -272,4 +276,9 @@ def fuse_topk(leg_d, leg_i, backend: KernelBackend, k: int | None = None):
             nd.append(cur_d[-1][:, :k])
             ni.append(cur_i[-1][:, :k])
         cur_d, cur_i = nd, ni
-    return cur_d[0][:, :k], cur_i[0][:, :k]
+    fused_d, fused_i = cur_d[0][:, :k], cur_i[0][:, :k]
+    # All-INVALID inputs (every leg of a query dropped/empty) must come
+    # out as (INVALID, BIG_DIST) pairs, never INVALID ids over stale
+    # 0.0 distances a caller could mistake for perfect hits.
+    fused_d = jnp.where(fused_i == INVALID, BIG_DIST, fused_d)
+    return fused_d, fused_i

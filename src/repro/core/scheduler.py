@@ -94,6 +94,7 @@ import numpy as np
 from repro.core.engine import (EngineGeom, EngineParams, EngineStepper,
                                make_stepper, spec_update)
 from repro.core.metrics import slot_occupancy
+from repro.ft.inject import NEVER
 
 INVALID = -1
 
@@ -235,6 +236,15 @@ class QueryResult:
     service_rounds: int       # rounds the query actually worked
     n_dist: int
     wall_latency_s: float     # admit -> retire wall clock
+    truncated: bool = False   # retired incomplete: deadline hit, or a
+                              # routed leg dropped/deadlined — the ids
+                              # are the best-so-far, not a converged
+                              # traversal
+    legs_fused: int = 0       # routed: legs that finished cleanly and
+                              # were fused (0 on the flat path)
+    coverage: float = 1.0     # routed: legs_fused / R — the fraction
+                              # of the query's routed shards actually
+                              # searched to completion
 
     @property
     def wait_rounds(self) -> int:
@@ -272,6 +282,18 @@ class StreamStats:
     items_by_shard: list = dataclasses.field(default_factory=list)
                               # per-shard items_recv — the routed path's
                               # work-skew/idle-shard evidence
+    shed: int = 0             # queries rejected by the shed overload
+                              # policy (admission ring full at arrival)
+    truncated: int = 0        # queries retired incomplete: deadline
+                              # force-retire, or routed legs lost to a
+                              # down shard / leg deadline
+    quarantined: int = 0      # corrupt distances quarantined to
+                              # BIG_DIST by the guard instead of
+                              # entering the merge (guard_nonfinite)
+    legs_fused_hist: list = dataclasses.field(default_factory=list)
+                              # routed: legs_fused histogram, index f =
+                              # queries whose f legs finished cleanly
+                              # (length R+1; empty on the flat path)
 
     def by_qid(self):
         return {r.qid: r for r in self.results}
@@ -294,7 +316,8 @@ class StreamScheduler:
                  refill: bool = True, round_chunk: int = 1,
                  stepper: Optional[EngineStepper] = None,
                  injit_admit: Optional[bool] = None,
-                 routed: bool = False):
+                 routed: bool = False, ring_capacity: int = 0,
+                 overload: str = "block"):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if round_chunk < 1:
@@ -304,6 +327,12 @@ class StreamScheduler:
             # per-shard schedules are the point of routing; the frozen
             # all-free gate is a global condition that contradicts it
             raise ValueError("routed serving requires refill=True")
+        if overload not in ("shed", "block"):
+            raise ValueError(
+                f"overload must be 'shed' or 'block', got {overload!r}")
+        if ring_capacity < 0:
+            raise ValueError(
+                f"ring_capacity must be >= 0, got {ring_capacity}")
         self.consts = consts
         self.geom = geom
         self.params = params
@@ -336,6 +365,37 @@ class StreamScheduler:
             want_injit = False
         self.injit_admit = want_injit
         self.S = geom.num_shards
+        if ring_capacity > 0:
+            if not self.injit_admit:
+                raise ValueError(
+                    "ring_capacity > 0 bounds the *device* pending "
+                    "queue — it needs the in-jit admission path "
+                    "(refill=True, injit_admit not disabled)")
+            if routed:
+                raise ValueError(
+                    "ring_capacity applies to the flat pending queue; "
+                    "routed serving stages per-shard queues whose "
+                    "device footprint is already bounded by the "
+                    "bucket capacity")
+        if params.faults is not None:
+            f = params.faults
+            if f.num_shards != self.S:
+                raise ValueError(
+                    f"faults.num_shards={f.num_shards} != "
+                    f"num_shards={self.S}")
+            if f.any_stall and not self.injit_admit:
+                raise ValueError(
+                    "fault stalls (kill/delay) are evaluated on the "
+                    "in-jit serving clock — run with the in-jit "
+                    "admission path (refill=True, injit_admit not "
+                    "disabled)")
+            if f.any_kill and params.deadline_rounds == 0:
+                raise ValueError(
+                    "a killed shard never finishes its rows: set "
+                    "deadline_rounds > 0 so they force-retire with "
+                    "best-so-far results instead of hanging the run")
+        self.ring_capacity = int(ring_capacity)
+        self.overload = overload
 
     # -- host-side pool bookkeeping -----------------------------------------
     def _fresh_pool(self, d: int):
@@ -382,7 +442,7 @@ class StreamScheduler:
                 self.consts, state, qbuf, spec_state, cfg, 1, pend,
                 done_cur, 0, self.entry, dynamic=dyn)
             ids, dists, _ = self.stepper.retire(state)
-            jax.block_until_ready((out[0].done, out[11], ids, dists))
+            jax.block_until_ready((out[0].done, out[13], ids, dists))
             return time.time() - t0
         zmask = jnp.zeros((S, Qs), bool)
         wstate, wq = self.stepper.admit(state, qbuf, zmask, qbuf,
@@ -423,6 +483,15 @@ class StreamScheduler:
         idle = 0                                      # empty-pool rounds
         dispatches = 0                                # run_chunk launches
         injit = self.injit_admit and N > 0
+        # bounded admission ring (flat in-jit path only): the device
+        # pending queue is a sliding window of at most `ring` staged
+        # queries, restaged at each chunk boundary — memory stays flat
+        # however long the stream is. ring=0 keeps the stage-everything
+        # path (and its results) verbatim.
+        ring = self.ring_capacity if injit and not routed else 0
+        staged: list[int] = []        # ring window: qids, arrival order
+        shed_qids: list[int] = []     # rejected by the shed policy
+        stream_pos = 0                # ring cursor into `order`
         pend = None
         if routed:
             # per-shard admission queues, staged once via the Allocator
@@ -451,13 +520,19 @@ class StreamScheduler:
                 pend = (scatter_to_buckets(
                     dest, rank, valid, jnp.asarray(queries[order]), S,
                     cap), jnp.asarray(arr_by_shard))
-        elif injit:
+        elif injit and not ring:
             # device-side pending queue, staged once in admission order
             pend = (jnp.asarray(queries[order]),
                     jnp.asarray(arrivals[order], jnp.int32))
 
         state, qbuf = self._fresh_pool(d)
-        compile_s = self._warmup(state, qbuf, pend)
+        warm_pend = pend
+        if ring:
+            # the per-dispatch windows all share this (ring, d) shape,
+            # so one warmup compile covers every dispatch
+            warm_pend = (jnp.zeros((ring, d), jnp.float32),
+                         jnp.full((ring,), NEVER, jnp.int32))
+        compile_s = self._warmup(state, qbuf, warm_pend)
         owner = np.full((S, Qs), INVALID, np.int64)   # slot -> qid
         admit_t = np.zeros((S, Qs), np.int64)
         admit_wall = np.zeros((S, Qs), np.float64)
@@ -476,9 +551,14 @@ class StreamScheduler:
                 nas = [arr_by_shard[s, next_qs[s]] for s in range(S)
                        if next_qs[s] < counts[s]]
                 return int(min(nas)) if nas else None
+            if ring:
+                if staged:
+                    return int(arrivals[staged[0]])
+                return (int(arrivals[order[stream_pos]])
+                        if stream_pos < N else None)
             return int(arrivals[order[next_q]]) if next_q < N else None
 
-        while retired < N:
+        while retired + len(shed_qids) < N:
             if not injit and routed:
                 # -- host-paced routed admission: each shard fills its
                 # own free rows from its own arrived queue
@@ -554,10 +634,39 @@ class StreamScheduler:
                 # at the exact boundary, and the admit/evict traces let
                 # the host replay the accounting afterwards
                 launch_wall = time.time()
-                cursor = (jnp.asarray(next_qs, jnp.int32) if routed
-                          else next_q)
+                if ring:
+                    # -- bounded ring: slide the window forward (refill
+                    # in arrival order while seats are free), then — if
+                    # shedding — reject every query that has *arrived*
+                    # while the ring is full. Shed decisions are chunk-
+                    # granular: an arrival mid-chunk is judged against
+                    # the ring state at the next boundary.
+                    while len(staged) < ring and stream_pos < N:
+                        staged.append(int(order[stream_pos]))
+                        stream_pos += 1
+                    if self.overload == "shed":
+                        while (len(staged) == ring and stream_pos < N
+                               and arrivals[order[stream_pos]] <= t):
+                            shed_qids.append(int(order[stream_pos]))
+                            stream_pos += 1
+                    # restage the window (constant (ring, d) shape, so
+                    # the warmup compile is reused); NEVER-padded tails
+                    # sort after every real arrival for the in-jit
+                    # searchsorted, exactly like the routed padding
+                    win = list(staged)
+                    wq = np.zeros((ring, d), np.float32)
+                    wa = np.full((ring,), NEVER, np.int32)
+                    if win:
+                        wq[:len(win)] = queries[win]
+                        wa[:len(win)] = arrivals[win]
+                    pend = (jnp.asarray(wq), jnp.asarray(wa))
+                    cursor = 0
+                else:
+                    cursor = (jnp.asarray(next_qs, jnp.int32) if routed
+                              else next_q)
                 (state, qbuf, spec_state, steps, live_cnt, width_sum,
-                 admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist, cur) = \
+                 admit_qidx, ret_i, ret_d, ret_rounds, ret_ndist,
+                 ret_age, ret_trunc, cur) = \
                     self.stepper.run_chunk_admit(
                         self.consts, state, qbuf, spec_state, cfg, K,
                         pend, cursor, t, self.entry, dynamic=dyn)
@@ -570,13 +679,18 @@ class StreamScheduler:
                     ret_d = np.asarray(ret_d)
                     ret_rounds = np.asarray(ret_rounds)
                     ret_ndist = np.asarray(ret_ndist)
+                    ret_age = np.asarray(ret_age)
+                    ret_trunc = np.asarray(ret_trunc)
                     for j in range(steps):
                         for s, r in np.argwhere(admit_qidx[j] >= 0):
                             if owner[s, r] != INVALID:
                                 # the seated query evicted a finished
                                 # row — emit it from the boundary-j
                                 # capture (bit-identical to a host-side
-                                # retire on that round)
+                                # retire on that round). retire_round
+                                # advances by age, not rounds: a row
+                                # stalled by a fault aged on the serving
+                                # clock without working
                                 results.append(QueryResult(
                                     qid=int(owner[s, r]),
                                     ids=ret_i[j, s, r].copy(),
@@ -586,22 +700,29 @@ class StreamScheduler:
                                     admit_round=int(admit_t[s, r]),
                                     retire_round=int(
                                         admit_t[s, r]
-                                        + ret_rounds[j, s, r]),
+                                        + ret_age[j, s, r]),
                                     service_rounds=int(
                                         ret_rounds[j, s, r]),
                                     n_dist=int(ret_ndist[j, s, r]),
                                     wall_latency_s=now_wall
-                                    - admit_wall[s, r]))
+                                    - admit_wall[s, r],
+                                    truncated=bool(
+                                        ret_trunc[j, s, r])))
                                 retired += 1
-                            # routed: pidx indexes shard s's own queue
+                            # routed: pidx indexes shard s's own queue;
+                            # ring: pidx indexes this dispatch's window
                             owner[s, r] = (
                                 int(legidx[s, admit_qidx[j][s, r]])
                                 if routed
+                                else int(win[admit_qidx[j][s, r]])
+                                if ring
                                 else int(order[admit_qidx[j][s, r]]))
                             admit_t[s, r] = t + j
                             admit_wall[s, r] = launch_wall
                 if routed:
                     next_qs = np.asarray(cur, np.int64).copy()
+                elif ring:
+                    del staged[:int(cur)]   # consumed window seats
                 else:
                     next_q = int(cur)
             else:
@@ -649,6 +770,8 @@ class StreamScheduler:
             done = np.asarray(state.done)
             rounds = np.asarray(state.rounds)
             n_dist = np.asarray(state.n_dist)
+            age = np.asarray(state.age)
+            trunc = np.asarray(state.truncated)
 
             # -- retire finished rows (the chunk already parked rows
             # that hit the per-query round cap, at the exact round
@@ -661,16 +784,19 @@ class StreamScheduler:
                 now_wall = time.time()
                 for s, r in np.argwhere(fin):
                     # exact even when the finish was mid-chunk: the row
-                    # worked `rounds` consecutive rounds from admission
+                    # aged `age` consecutive serving rounds from
+                    # admission (== `rounds` worked unless a fault
+                    # stalled it mid-service)
                     results.append(QueryResult(
                         qid=int(owner[s, r]), ids=out_i[s, r].copy(),
                         dists=out_d[s, r].copy(),
                         arrival_round=int(arrivals[owner[s, r]]),
                         admit_round=int(admit_t[s, r]),
-                        retire_round=int(admit_t[s, r] + rounds[s, r]),
+                        retire_round=int(admit_t[s, r] + age[s, r]),
                         service_rounds=int(rounds[s, r]),
                         n_dist=int(n_dist[s, r]),
-                        wall_latency_s=now_wall - admit_wall[s, r]))
+                        wall_latency_s=now_wall - admit_wall[s, r],
+                        truncated=bool(trunc[s, r])))
                     owner[s, r] = INVALID
                 retired += int(fin.sum())
 
@@ -686,7 +812,10 @@ class StreamScheduler:
             host_dispatches=dispatches, compile_s=compile_s,
             idle_rounds=idle, injit_admit=self.injit_admit,
             items_by_shard=[int(x) for x in
-                            np.ravel(np.asarray(state.items_recv))])
+                            np.ravel(np.asarray(state.items_recv))],
+            shed=len(shed_qids),
+            truncated=sum(1 for r in results if r.truncated),
+            quarantined=int(np.asarray(state.quarantined).sum()))
 
 
 def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
@@ -721,15 +850,20 @@ def stream_search(consts, geom, params, entry, queries,
                   num_slots: int, arrivals=None, mesh=None,
                   dynamic_spec: bool = False, refill: bool = True,
                   round_chunk: int = 1, injit_admit=None,
-                  spec_page_w: float = 0.0):
+                  spec_page_w: float = 0.0, ring_capacity: int = 0,
+                  overload: str = "block"):
     """Convenience wrapper: run the streaming scheduler and return
-    (ids (N, k), dists (N, k), StreamStats) in query order."""
+    (ids (N, k), dists (N, k), StreamStats) in query order.  A query
+    shed by the overload policy keeps its INVALID/0 row in the output
+    (check ``stats.shed`` / absence from ``stats.results``)."""
     ctrl = _make_controller(params, geom, dynamic_spec, spec_page_w)
     sched = StreamScheduler(consts, geom, params, entry,
                             num_slots=num_slots, mesh=mesh,
                             controller=ctrl, refill=refill,
                             round_chunk=round_chunk,
-                            injit_admit=injit_admit)
+                            injit_admit=injit_admit,
+                            ring_capacity=ring_capacity,
+                            overload=overload)
     stats = sched.run(queries, arrivals)
     k = params.search.k
     n = np.asarray(queries).shape[0]
@@ -747,7 +881,7 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
                          dynamic_spec: bool = False,
                          round_chunk: int = 1, injit_admit=None,
                          shard_entries=None, leg_L=None,
-                         spec_page_w: float = 0.0):
+                         spec_page_w: float = 0.0, down_shards=None):
     """Two-tier routed serving (core/router.py): coarse-route each
     query to its top-R shards, serve one *leg* per (query, shard) on
     that shard's independent slot schedule, and fuse the per-leg top-k
@@ -767,8 +901,20 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
     ``stats.results`` holds fused per-query records (``n_dist`` summed
     over legs, latency = the slowest leg — a query retires only when
     all its legs have) and ``stats.legs`` the slot rows served.
+
+    **Degraded fusion** (``down_shards``): legs routed to a shard in
+    ``down_shards`` are dropped host-side before scheduling — the
+    healthy R-f legs run normally and the query fuses whatever
+    finished, reporting ``legs_fused`` / ``coverage`` and
+    ``truncated=True`` instead of stalling on a shard that will never
+    answer.  A shard that dies *mid-run* is the engine's job instead:
+    inject a kill via ``params.faults`` (with ``deadline_rounds`` set)
+    and its legs force-retire with best-so-far results, landing in the
+    same degraded-fusion accounting because a deadlined leg is a
+    non-clean leg.  A query whose every leg is down retires at its
+    arrival round with all-INVALID ids, coverage 0.
     """
-    from repro.core.router import fuse_topk
+    from repro.core.router import BIG_DIST, fuse_topk
 
     queries = np.asarray(queries, np.float32)
     N = queries.shape[0]
@@ -807,37 +953,80 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
     leg_arr = np.repeat(arrivals, R)
     leg_tgt = targets[:, :R].reshape(-1).astype(np.int32)
 
+    # degraded routing: drop legs whose target shard is known-down —
+    # the scheduler only ever sees alive legs, so nothing can stall on
+    # a dead shard's never-draining queue
+    down = np.zeros(S, bool)
+    if down_shards is not None:
+        ds = np.asarray(down_shards, np.int64).reshape(-1)
+        if ds.size and (ds.min() < 0 or ds.max() >= S):
+            raise ValueError(f"down_shards must be in [0, {S}), "
+                             f"got {sorted(set(ds.tolist()))}")
+        down[ds] = True
+        if down.all():
+            raise ValueError("every shard is down — nothing to serve")
+    alive_rows = np.flatnonzero(~down[leg_tgt])
+    # leg row id -> its position (= qid) in the scheduled alive subset
+    pos_of = {int(row): p for p, row in enumerate(alive_rows)}
+
     ctrl = _make_controller(leg_params, geom, dynamic_spec, spec_page_w)
     sched = StreamScheduler(consts, geom, leg_params, sh_entry,
                             num_slots=num_slots, mesh=mesh,
                             controller=ctrl, refill=True,
                             round_chunk=round_chunk,
                             injit_admit=injit_admit, routed=True)
-    leg_stats = sched.run(leg_q, leg_arr, target_shards=leg_tgt)
+    leg_stats = sched.run(leg_q[alive_rows], leg_arr[alive_rows],
+                          target_shards=leg_tgt[alive_rows])
 
     by = leg_stats.by_qid()
     leg_i = np.full((N, R, k), INVALID, np.int32)
     leg_d = np.zeros((N, R, k), np.float32)
-    for row, rec in by.items():
+    for p, rec in by.items():
+        row = int(alive_rows[p])
         leg_i[row // R, row % R] = rec.ids
         leg_d[row // R, row % R] = rec.dists
     if R == 1:
-        ids, dists = leg_i[:, 0], leg_d[:, 0]
+        ids, dists = leg_i[:, 0].copy(), leg_d[:, 0].copy()
+        # match fuse_topk's padding contract on the degenerate path: a
+        # dropped/absent leg reads (INVALID, BIG_DIST), not stale 0.0
+        dists[ids == INVALID] = BIG_DIST
     else:
         di, ii = fuse_topk(leg_d, leg_i, leg_params.backend)
         dists, ids = np.asarray(di), np.asarray(ii)
 
     results = []
+    hist = [0] * (R + 1)       # index f: queries with f clean legs
     for i in range(N):
-        legs = [by[i * R + j] for j in range(R)]
-        results.append(QueryResult(
-            qid=i, ids=ids[i].copy(), dists=dists[i].copy(),
-            arrival_round=int(arrivals[i]),
-            admit_round=min(lr.admit_round for lr in legs),
-            retire_round=max(lr.retire_round for lr in legs),
-            service_rounds=max(lr.service_rounds for lr in legs),
-            n_dist=sum(lr.n_dist for lr in legs),
-            wall_latency_s=max(lr.wall_latency_s for lr in legs)))
+        legs = [by[pos_of[i * R + j]] for j in range(R)
+                if i * R + j in pos_of]
+        # a leg is *fused cleanly* if it ran and converged; a deadlined
+        # (truncated) leg still contributed its best-so-far candidates
+        # but the query's coverage no longer spans that shard's subgraph
+        fused = sum(1 for lr in legs if not lr.truncated)
+        hist[fused] += 1
+        if legs:
+            results.append(QueryResult(
+                qid=i, ids=ids[i].copy(), dists=dists[i].copy(),
+                arrival_round=int(arrivals[i]),
+                admit_round=min(lr.admit_round for lr in legs),
+                retire_round=max(lr.retire_round for lr in legs),
+                service_rounds=max(lr.service_rounds for lr in legs),
+                n_dist=sum(lr.n_dist for lr in legs),
+                wall_latency_s=max(lr.wall_latency_s for lr in legs),
+                truncated=fused < R, legs_fused=fused,
+                coverage=fused / R))
+        else:
+            # every routed shard down: retire immediately, empty-handed
+            results.append(QueryResult(
+                qid=i, ids=ids[i].copy(), dists=dists[i].copy(),
+                arrival_round=int(arrivals[i]),
+                admit_round=int(arrivals[i]),
+                retire_round=int(arrivals[i]), service_rounds=0,
+                n_dist=0, wall_latency_s=0.0, truncated=True,
+                legs_fused=0, coverage=0.0))
     results.sort(key=lambda r: (r.retire_round, r.qid))
-    stats = dataclasses.replace(leg_stats, results=results, legs=N * R)
+    stats = dataclasses.replace(
+        leg_stats, results=results, legs=len(alive_rows),
+        truncated=sum(1 for r in results if r.truncated),
+        legs_fused_hist=hist)
     return ids, dists, stats

@@ -1,4 +1,7 @@
-from repro.ft.guard import all_finite, select_tree
+from repro.ft.guard import all_finite, quarantine_distances, select_tree
+from repro.ft.inject import FaultSpec, fault_plan, parse_fault_args
 from repro.ft.restart import RestartStats, run_with_restarts
 
-__all__ = ["all_finite", "select_tree", "RestartStats", "run_with_restarts"]
+__all__ = ["all_finite", "quarantine_distances", "select_tree",
+           "FaultSpec", "fault_plan", "parse_fault_args",
+           "RestartStats", "run_with_restarts"]

@@ -6,11 +6,22 @@ reduction — the parameter/optimizer update is suppressed for that step
 (identity update) and a counter increments. The step stays bulk-
 synchronous, so every data-parallel worker takes the same branch (the
 finiteness predicate is computed on globally-reduced grads).
+
+``quarantine_distances`` is the serving-side analogue: instead of
+suppressing a whole step, it rewrites individual corrupted distance
+entries to a sentinel (``BIG_DIST``) *before* they enter the bitonic
+merge — a NaN that reaches the merge network poisons every comparison
+downstream — and counts them, so corruption shows up in the serving
+metrics rather than in the results.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+#: distances at or below this are treated as corrupt garbage — no real
+#: squared distance is negative, let alone -1e30
+NEG_GARBAGE = -1.0e30
 
 
 def all_finite(tree) -> jax.Array:
@@ -26,3 +37,16 @@ def select_tree(pred, on_true, on_false):
     """Elementwise tree select (pred scalar bool)."""
     return jax.tree_util.tree_map(
         lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+def quarantine_distances(dist, valid, fill):
+    """Replace corrupt entries of ``dist`` (NaN/inf, or impossibly
+    negative — see :data:`NEG_GARBAGE`) with ``fill`` and count them.
+
+    Only entries where ``valid`` count as quarantined: invalid slots
+    are padding the caller already fills, not corruption. On clean data
+    every entry passes the predicate and the ``where`` is the identity,
+    so the guarded path stays bit-identical to the unguarded one.
+    Returns ``(clean_dist, n_quarantined (i32 scalar))``."""
+    bad = valid & (~jnp.isfinite(dist) | (dist <= NEG_GARBAGE))
+    return jnp.where(bad, fill, dist), bad.sum().astype(jnp.int32)

@@ -29,6 +29,21 @@ class RestartStats:
     restarts: int = 0
     steps_replayed: int = 0
     skipped_steps: int = 0
+    backoff_s: float = 0.0    # total seconds slept backing off between
+                              # restarts (exponential, jittered)
+
+
+def _backoff(attempt: int, base: float, cap: float,
+             jitter: float) -> float:
+    """Exponential backoff with deterministic jitter: base * 2^(a-1)
+    capped at ``cap``, then scaled by a per-attempt factor in
+    [1 - jitter, 1 + jitter].  The jitter is a pure function of the
+    attempt number (golden-ratio low-discrepancy sequence), so restart
+    schedules are reproducible yet de-synchronized across attempts —
+    the thundering-herd fix without an RNG dependency."""
+    wait = min(base * (2.0 ** (attempt - 1)), cap)
+    frac = (attempt * 0.6180339887498949) % 1.0
+    return wait * (1.0 + jitter * (2.0 * frac - 1.0))
 
 
 def run_with_restarts(
@@ -42,9 +57,20 @@ def run_with_restarts(
     ckpt_every: int = 50,
     max_restarts: int = 3,
     fail_injector: Optional[Callable[[int], None]] = None,
+    backoff_base: float = 0.01,
+    backoff_max: float = 1.0,
+    backoff_jitter: float = 0.25,
+    sleep_fn: Callable[[float], None] = time.sleep,
 ) -> tuple:
     """Supervised training loop. ``fail_injector(step)`` may raise to
-    simulate a node failure (used by the fault-tolerance tests)."""
+    simulate a node failure (used by the fault-tolerance tests).
+
+    Consecutive failures back off exponentially (``backoff_base`` * 2^n
+    up to ``backoff_max`` seconds, ±``backoff_jitter`` deterministic
+    jitter) before touching the checkpoint store again — an unhealthy
+    store or a crash-looping step shouldn't be hammered at full rate.
+    ``sleep_fn`` is injectable so tests assert the schedule without
+    sleeping."""
     stats = RestartStats()
     latest = ckpt.latest_step(ckpt_dir)
     if latest is not None:
@@ -68,9 +94,13 @@ def run_with_restarts(
             if stats.restarts > max_restarts:
                 raise RuntimeError(
                     f"exceeded {max_restarts} restarts") from e
-            log.warning("step %d failed (%s); restarting from checkpoint",
-                        step, e)
-            time.sleep(0.01)
+            wait = _backoff(stats.restarts, backoff_base, backoff_max,
+                            backoff_jitter)
+            log.warning("step %d failed (%s); restart %d/%d after "
+                        "%.3fs backoff", step, e, stats.restarts,
+                        max_restarts, wait)
+            sleep_fn(wait)
+            stats.backoff_s += wait
             latest = ckpt.latest_step(ckpt_dir)
             if latest is None:
                 step, state = init_state()

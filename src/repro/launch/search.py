@@ -100,6 +100,36 @@ def main(argv=None):
                          "chunk (auto = on whenever refill admission "
                          "is active; off = PR-4-style host-paced "
                          "admission with stop-on-finish chunks)")
+    ap.add_argument("--deadline-rounds", type=int, default=0,
+                    help="streaming: force-retire a query after this "
+                         "many serving rounds in a slot (truncated "
+                         "best-so-far results; 0 = no deadline)")
+    ap.add_argument("--ring", type=int, default=0,
+                    help="streaming: bounded device admission ring "
+                         "(0 = stage the whole stream)")
+    ap.add_argument("--overload", default="block",
+                    choices=["block", "shed"],
+                    help="streaming: full-ring policy — backpressure "
+                         "or reject-and-count")
+    ap.add_argument("--kill-shard", action="append", default=[],
+                    metavar="S:R",
+                    help="streaming fault injection: shard S dies at "
+                         "round R (repeatable; needs --deadline-rounds)")
+    ap.add_argument("--delay-shard", action="append", default=[],
+                    metavar="S:R:D",
+                    help="streaming fault injection: shard S stalls D "
+                         "rounds from round R (repeatable)")
+    ap.add_argument("--corrupt-pages", type=float, default=0.0,
+                    help="streaming fault injection: corrupt this "
+                         "fraction of page reads")
+    ap.add_argument("--corrupt-mode", default="nan",
+                    choices=["nan", "neg"])
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="streaming: quarantine non-finite/garbage "
+                         "distances to BIG_DIST before the merge")
+    ap.add_argument("--down-shards", default="",
+                    help="streaming routed: comma-separated shard ids "
+                         "known down — degraded fusion over the rest")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
@@ -150,6 +180,18 @@ def main(argv=None):
         params = EngineParams.lossless(
             sp, args.slots, packed.max_degree, spec_width=args.spec,
             kernel_mode=args.kernel_mode, coalesce_qb=args.coalesce_qb)
+        from repro.ft.inject import parse_fault_args
+        faults = parse_fault_args(
+            args.shards, kill=args.kill_shard, delay=args.delay_shard,
+            corrupt_rate=args.corrupt_pages,
+            corrupt_mode=args.corrupt_mode, seed=args.seed)
+        if args.deadline_rounds or args.nan_guard or faults is not None:
+            import dataclasses
+            params = dataclasses.replace(
+                params, deadline_rounds=args.deadline_rounds,
+                guard_nonfinite=args.nan_guard, faults=faults)
+        down = ([int(s) for s in args.down_shards.split(",")]
+                if args.down_shards else None)
         res = {
             "dataset": ds.name, "mode": "stream",
             "kernel_mode": args.kernel_mode, "n": int(db.shape[0]),
@@ -163,7 +205,9 @@ def main(argv=None):
                                          "off": False}[args.injit_admit],
                             routed=routed, topr=args.topr,
                             leg_L=args.leg_L or None,
-                            spec_page_w=args.spec_page_w),
+                            spec_page_w=args.spec_page_w,
+                            ring_capacity=args.ring,
+                            overload=args.overload, down_shards=down),
         }
         print(json.dumps(res, indent=1))
         if args.out:

@@ -26,6 +26,7 @@ from repro.core.metrics import stream_summary
 from repro.core.ref_search import SearchParams
 from repro.core.scheduler import poisson_arrivals, stream_search
 from repro.data.vectors import PAPER_DATASETS, VectorDataset
+from repro.ft.inject import parse_fault_args
 from repro.launch.search import build_index
 
 
@@ -69,7 +70,8 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
                   arrival_rate, seed, dynamic_spec=False,
                   refill=True, round_chunk=8, injit_admit=None,
                   routed=None, topr=0, leg_L=None,
-                  spec_page_w=0.0) -> dict:
+                  spec_page_w=0.0, ring_capacity=0, overload="block",
+                  down_shards=None) -> dict:
     """Run one streaming session and build the serving report shared by
     the `search --stream` and `serve_stream` CLIs: Poisson arrivals ->
     scheduler -> recall vs brute force + stream_summary metrics.
@@ -77,7 +79,13 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
     With ``routed`` (a :class:`repro.core.router.RoutedIndex`) and
     ``topr`` > 0, queries go through the two-tier path: the coarse
     router picks each query's top-R shards and the scheduler runs one
-    leg per target shard, fusing per-leg top-k at retire time."""
+    leg per target shard, fusing per-leg top-k at retire time.
+
+    Robustness knobs: ``ring_capacity``/``overload`` bound the flat
+    path's device admission queue; ``down_shards`` drops routed legs on
+    known-down shards (degraded fusion); deadlines, fault injection and
+    the corruption guard ride on ``params``
+    (``deadline_rounds`` / ``faults`` / ``guard_nonfinite``)."""
     arrivals = poisson_arrivals(arrival_rate, queries.shape[0], seed)
     if routed is not None and topr > 0:
         from repro.core.scheduler import routed_stream_search
@@ -86,13 +94,15 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
             topr=topr, num_slots=slots, arrivals=arrivals,
             dynamic_spec=dynamic_spec, round_chunk=round_chunk,
             injit_admit=injit_admit, shard_entries=routed.shard_entries,
-            leg_L=leg_L, spec_page_w=spec_page_w)
+            leg_L=leg_L, spec_page_w=spec_page_w,
+            down_shards=down_shards)
     else:
         ids, _, st = stream_search(
             consts, geom, params, entry, queries, num_slots=slots,
             arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
             round_chunk=round_chunk, injit_admit=injit_admit,
-            spec_page_w=spec_page_w)
+            spec_page_w=spec_page_w, ring_capacity=ring_capacity,
+            overload=overload)
     k = params.search.k
     true_ids, _ = brute_force_topk(db, queries, k)
     return {
@@ -100,6 +110,11 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
         "arrival_rate": arrival_rate, "refill": refill,
         "spec": params.spec_width, "spec_dynamic": dynamic_spec,
         "round_chunk": round_chunk, "topr": topr,
+        "deadline_rounds": params.deadline_rounds,
+        "ring": ring_capacity, "overload": overload,
+        "nan_guard": params.guard_nonfinite,
+        "faults": params.faults is not None,
+        "down_shards": sorted(int(s) for s in (down_shards or [])),
         # injit_admit arrives via stream_summary: the scheduler's
         # *resolved* admission path, not a re-derivation of the flag
         "recall@k": round(float(recall_at_k(ids, true_ids)), 4),
@@ -154,6 +169,41 @@ def main(argv=None):
                     help="seat arrived queries from a device-side "
                          "pending queue inside the round chunk (auto = "
                          "on whenever refill admission is active)")
+    ap.add_argument("--deadline-rounds", type=int, default=0,
+                    help="force-retire a query after this many serving "
+                         "rounds in a slot, flagging it truncated "
+                         "(0 = no deadline, bit-identical to before)")
+    ap.add_argument("--ring", type=int, default=0,
+                    help="bounded device admission ring: at most this "
+                         "many pending queries staged on device "
+                         "(0 = stage the whole stream)")
+    ap.add_argument("--overload", default="block",
+                    choices=["block", "shed"],
+                    help="full-ring policy: block (backpressure: "
+                         "arrivals wait host-side) or shed (reject "
+                         "arrivals while the ring is full)")
+    ap.add_argument("--kill-shard", action="append", default=[],
+                    metavar="S:R",
+                    help="fault injection: shard S dies at round R "
+                         "(repeatable; needs --deadline-rounds)")
+    ap.add_argument("--delay-shard", action="append", default=[],
+                    metavar="S:R:D",
+                    help="fault injection: shard S stalls D rounds "
+                         "from round R (repeatable)")
+    ap.add_argument("--corrupt-pages", type=float, default=0.0,
+                    help="fault injection: corrupt this fraction of "
+                         "page reads (deterministic per page)")
+    ap.add_argument("--corrupt-mode", default="nan",
+                    choices=["nan", "neg"],
+                    help="what a corrupt read returns: NaN or a huge "
+                         "negative distance")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="quarantine non-finite/garbage distances to "
+                         "BIG_DIST before the merge (and count them)")
+    ap.add_argument("--down-shards", default="",
+                    help="routed: comma-separated shard ids known down "
+                         "— their legs are dropped and queries fuse "
+                         "degraded (needs --topr)")
     ap.add_argument("--kernel-mode", default="jnp",
                     choices=["auto", "pallas", "interpret", "ref", "jnp"])
     ap.add_argument("--coalesce-qb", type=int, default=8)
@@ -190,6 +240,19 @@ def main(argv=None):
     params = EngineParams.lossless(
         sp, args.slots, packed.max_degree, spec_width=args.spec,
         kernel_mode=args.kernel_mode, coalesce_qb=args.coalesce_qb)
+    faults = parse_fault_args(
+        args.shards, kill=args.kill_shard, delay=args.delay_shard,
+        corrupt_rate=args.corrupt_pages, corrupt_mode=args.corrupt_mode,
+        seed=args.seed)
+    if (args.deadline_rounds or args.nan_guard
+            or faults is not None):
+        import dataclasses as _dc
+        params = _dc.replace(params,
+                             deadline_rounds=args.deadline_rounds,
+                             guard_nonfinite=args.nan_guard,
+                             faults=faults)
+    down = ([int(s) for s in args.down_shards.split(",")]
+            if args.down_shards else None)
 
     res = {
         "dataset": ds.name, "n": int(db.shape[0]),
@@ -204,7 +267,9 @@ def main(argv=None):
                                      "off": False}[args.injit_admit],
                         routed=routed, topr=args.topr,
                         leg_L=args.leg_L or None,
-                        spec_page_w=args.spec_page_w),
+                        spec_page_w=args.spec_page_w,
+                        ring_capacity=args.ring, overload=args.overload,
+                        down_shards=down),
     }
     print(json.dumps(res, indent=1))
     if args.out:

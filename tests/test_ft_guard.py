@@ -1,0 +1,252 @@
+"""Fault-tolerance primitives: guard edge cases (all_finite on
+non-float leaves, empty trees, select_tree broadcasting,
+quarantine_distances), the deterministic fault-injection plans, and the
+restart supervisor's exponential backoff."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft.guard import (NEG_GARBAGE, all_finite,
+                            quarantine_distances, select_tree)
+from repro.ft.inject import (NEVER, FaultSpec, bad_page_mask,
+                             corrupt_value, fault_plan,
+                             parse_fault_args, stall_at)
+from repro.ft.restart import RestartStats, _backoff
+
+
+# ---------------------------------------------------------------------------
+# guard.all_finite: non-float leaves, empty trees
+# ---------------------------------------------------------------------------
+def test_all_finite_ignores_int_and_bool_leaves():
+    """Integer/bool leaves have no non-finite values and must neither
+    crash the predicate nor flip it — only float leaves are checked."""
+    tree = {"step": jnp.int32(7),
+            "mask": jnp.ones((3,), bool),
+            "idx": jnp.arange(4, dtype=jnp.int32)}
+    assert bool(all_finite(tree))
+    tree["grad"] = jnp.array([1.0, jnp.nan], jnp.float32)
+    assert not bool(all_finite(tree))
+    # int extremes are not "inf" — still finite overall
+    assert bool(all_finite({"big": jnp.full((2,), 2**31 - 1, jnp.int32)}))
+
+
+def test_all_finite_empty_tree():
+    """No leaves -> vacuously finite (an optimizer with no float state
+    must not trip the guard)."""
+    assert bool(all_finite({}))
+    assert bool(all_finite([]))
+    assert bool(all_finite({"only_ints": jnp.zeros((2,), jnp.int32)}))
+
+
+def test_all_finite_mixed_dtypes_all_checked():
+    """Every float leaf participates: one bad f16 leaf among clean f32
+    leaves flips the verdict."""
+    tree = {"a": jnp.zeros((2, 2), jnp.float32),
+            "b": jnp.array([jnp.inf], jnp.float16)}
+    assert not bool(all_finite(tree))
+
+
+# ---------------------------------------------------------------------------
+# guard.select_tree: scalar and broadcastable predicates
+# ---------------------------------------------------------------------------
+def test_select_tree_scalar_pred():
+    a = {"x": jnp.ones((2, 3)), "n": jnp.int32(1)}
+    b = {"x": jnp.zeros((2, 3)), "n": jnp.int32(2)}
+    out_t = select_tree(jnp.bool_(True), a, b)
+    out_f = select_tree(jnp.bool_(False), a, b)
+    np.testing.assert_array_equal(np.asarray(out_t["x"]), 1.0)
+    assert int(out_t["n"]) == 1
+    np.testing.assert_array_equal(np.asarray(out_f["x"]), 0.0)
+    assert int(out_f["n"]) == 2
+
+
+def test_select_tree_array_pred_broadcasts():
+    """A per-row predicate broadcasts into each leaf like jnp.where —
+    the elementwise contract the docstring promises."""
+    pred = jnp.array([True, False])[:, None]
+    a = jnp.ones((2, 3))
+    b = jnp.zeros((2, 3))
+    out = select_tree(pred, [a], [b])[0]
+    np.testing.assert_array_equal(np.asarray(out),
+                                  [[1, 1, 1], [0, 0, 0]])
+
+
+# ---------------------------------------------------------------------------
+# guard.quarantine_distances
+# ---------------------------------------------------------------------------
+def test_quarantine_distances_rewrites_and_counts():
+    fill = jnp.float32(3.0e38)
+    dist = jnp.array([0.5, jnp.nan, jnp.inf, -2.0e30, 1.0], jnp.float32)
+    valid = jnp.ones(5, bool)
+    clean, n = quarantine_distances(dist, valid, fill)
+    assert int(n) == 3
+    np.testing.assert_array_equal(
+        np.asarray(clean), np.asarray([0.5, fill, fill, fill, 1.0],
+                                      np.float32))
+
+
+def test_quarantine_distances_respects_valid_mask():
+    """Invalid lanes are padding, not corruption: they are neither
+    counted nor rewritten."""
+    fill = jnp.float32(3.0e38)
+    dist = jnp.array([jnp.nan, jnp.nan], jnp.float32)
+    valid = jnp.array([True, False])
+    clean, n = quarantine_distances(dist, valid, fill)
+    assert int(n) == 1
+    assert float(np.asarray(clean)[0]) == float(fill)
+    assert np.isnan(np.asarray(clean)[1])          # padding untouched
+
+
+def test_quarantine_distances_identity_on_clean():
+    """On clean data the guard is bit-identical pass-through (the
+    zero-overhead-when-healthy contract)."""
+    dist = jnp.linspace(0.0, 5.0, 8).astype(jnp.float32)
+    clean, n = quarantine_distances(dist, jnp.ones(8, bool),
+                                    jnp.float32(3.0e38))
+    assert int(n) == 0
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(dist))
+    # the garbage threshold is documented and extreme
+    assert NEG_GARBAGE == -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# inject.FaultSpec: plan building, validation, traced evaluation
+# ---------------------------------------------------------------------------
+def test_fault_plan_builders_and_defaults():
+    spec = fault_plan(4)
+    assert spec.kill_round == (NEVER,) * 4
+    assert not (spec.any_stall or spec.any_kill or spec.any_corrupt)
+    spec = spec.kill(1, 10).delay(2, 3, 5).corrupt(0.1, "neg", seed=7)
+    assert spec.kill_round == (NEVER, 10, NEVER, NEVER)
+    assert spec.delay_from == (NEVER, NEVER, 3, NEVER)
+    assert spec.delay_rounds == (0, 0, 5, 0)
+    assert spec.any_stall and spec.any_kill and spec.any_corrupt
+    # frozen + tuple-only fields -> hashable (jit-static requirement)
+    assert hash(spec) == hash(dataclasses.replace(spec))
+    np.testing.assert_array_equal(spec.down_at(9), [0, 0, 0, 0])
+    np.testing.assert_array_equal(spec.down_at(10), [0, 1, 0, 0])
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="kill_round"):
+        FaultSpec(num_shards=4, kill_round=(1, 2))
+    with pytest.raises(ValueError, match="corrupt_mode"):
+        FaultSpec(num_shards=2, corrupt_mode="zeros")
+    with pytest.raises(ValueError, match="corrupt_rate"):
+        FaultSpec(num_shards=2, corrupt_rate=1.5)
+
+
+def test_stall_at_windows():
+    spec = fault_plan(3).kill(0, 5).delay(1, 2, 3)
+    rows = np.stack([np.asarray(stall_at(spec, t)) for t in range(8)])
+    np.testing.assert_array_equal(rows[:, 0],
+                                  [0, 0, 0, 0, 0, 1, 1, 1])  # dead at 5+
+    np.testing.assert_array_equal(rows[:, 1],
+                                  [0, 0, 1, 1, 1, 0, 0, 0])  # [2, 5)
+    assert not rows[:, 2].any()                               # healthy
+
+
+def test_bad_page_mask_deterministic_rate():
+    """The corruption mask is a pure function of (page, shard, seed)
+    and hits close to the requested rate."""
+    spec = fault_plan(4).corrupt(0.1, seed=3)
+    pages = jnp.arange(20000, dtype=jnp.int32)
+    m0 = np.asarray(bad_page_mask(spec, pages, 0))
+    m0b = np.asarray(bad_page_mask(spec, pages, 0))
+    m1 = np.asarray(bad_page_mask(spec, pages, 1))
+    np.testing.assert_array_equal(m0, m0b)        # deterministic
+    assert (m0 != m1).any()                       # shard-salted
+    assert abs(m0.mean() - 0.1) < 0.02
+    other = fault_plan(4).corrupt(0.1, seed=4)
+    assert (np.asarray(bad_page_mask(other, pages, 0)) != m0).any()
+    assert np.isnan(float(corrupt_value(spec)))
+    assert float(corrupt_value(
+        fault_plan(1).corrupt(0.5, "neg"))) < NEG_GARBAGE
+
+
+def test_parse_fault_args():
+    spec = parse_fault_args(4, kill=["1:10"], delay=["2:3:5"],
+                            corrupt_rate=0.05, corrupt_mode="neg",
+                            seed=9)
+    assert spec.kill_round[1] == 10
+    assert spec.delay_from[2] == 3 and spec.delay_rounds[2] == 5
+    assert spec.corrupt_rate == 0.05 and spec.seed == 9
+    assert parse_fault_args(4) is None            # all-healthy -> None
+
+
+# ---------------------------------------------------------------------------
+# restart: exponential, jittered, capped backoff between restarts
+# ---------------------------------------------------------------------------
+def test_backoff_schedule_shape():
+    base, cap, jit = 0.01, 1.0, 0.25
+    waits = [_backoff(a, base, cap, jit) for a in range(1, 12)]
+    # within the jitter band of base * 2^(a-1), capped
+    for a, w in enumerate(waits, start=1):
+        ideal = min(base * 2 ** (a - 1), cap)
+        assert ideal * (1 - jit) <= w <= ideal * (1 + jit)
+    assert max(waits) <= cap * (1 + jit)
+    # deterministic (no RNG), jitter de-synchronizes attempts
+    assert waits == [_backoff(a, base, cap, jit) for a in range(1, 12)]
+    assert len({round(w / min(base * 2 ** (a - 1), cap), 6)
+                for a, w in enumerate(waits, start=1)}) > 1
+    assert _backoff(3, 0.01, 1.0, 0.0) == 0.04    # jitter-free exact
+
+
+def test_run_with_restarts_backs_off(tmp_path):
+    """Three consecutive failures sleep ~base, ~2*base, ~4*base via the
+    injectable sleep_fn, and the total lands in RestartStats.backoff_s;
+    the run still completes with the exact final state."""
+    from repro.ft.restart import run_with_restarts
+
+    fails = {3: 2, 7: 1}          # step -> remaining induced failures
+    slept = []
+
+    def injector(step):
+        if fails.get(step, 0) > 0:
+            fails[step] -= 1
+            raise RuntimeError(f"induced @ {step}")
+
+    step, state, stats = run_with_restarts(
+        init_state=lambda: (0, 0),
+        restore_state=lambda s: (s, s),
+        run_step=lambda s, x: x + 1,
+        save_state=lambda s, x: None,
+        total_steps=10,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=100,            # no checkpoints -> restart from init
+        max_restarts=5,
+        fail_injector=injector,
+        backoff_base=0.01, backoff_max=1.0, backoff_jitter=0.25,
+        sleep_fn=slept.append)
+    assert (step, state) == (10, 10)
+    assert stats.restarts == 3
+    assert len(slept) == 3
+    for a, w in enumerate(slept, start=1):
+        ideal = 0.01 * 2 ** (a - 1)
+        assert ideal * 0.75 <= w <= ideal * 1.25
+    assert stats.backoff_s == pytest.approx(sum(slept))
+    assert slept[1] > slept[0] and slept[2] > slept[1]
+
+
+def test_run_with_restarts_exhausts_budget(tmp_path):
+    """max_restarts is a hard cap: one more failure raises, after
+    having backed off max_restarts times."""
+    from repro.ft.restart import run_with_restarts
+
+    slept = []
+
+    def injector(step):
+        raise RuntimeError("always down")
+
+    with pytest.raises(RuntimeError, match="exceeded 2 restarts"):
+        run_with_restarts(
+            init_state=lambda: (0, 0),
+            restore_state=lambda s: (s, s),
+            run_step=lambda s, x: x + 1,
+            save_state=lambda s, x: None,
+            total_steps=5, ckpt_dir=str(tmp_path),
+            max_restarts=2, fail_injector=injector,
+            sleep_fn=slept.append)
+    assert len(slept) == 2

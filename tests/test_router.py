@@ -218,3 +218,117 @@ def test_idle_shard_zero_distance_work(rds, injit):
     assert items[1] == 0 and items[3] == 0      # never routed there
     assert items[0] > 0 and items[2] > 0
     assert len(st.results) == queries.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# fusion corner cases: all-INVALID legs, non-finite leg distances
+# ---------------------------------------------------------------------------
+def test_fuse_topk_all_invalid_legs():
+    """A query whose every leg is INVALID-padded (all its routed shards
+    down) must fuse to all-INVALID ids over BIG_DIST — never INVALID
+    ids over stale 0.0 distances a caller could read as perfect hits."""
+    from repro.core.router import BIG_DIST
+
+    k, R = 6, 3
+    leg_d = np.zeros((3, R, k), np.float32)          # stale zeros
+    leg_i = np.full((3, R, k), INVALID, np.int32)
+    # row 1 keeps one real entry to prove partial rows still work
+    leg_i[1, 0, 0] = 42
+    leg_d[1, 0, 0] = 0.5
+    fd, fi = fuse_topk(leg_d, leg_i, KernelBackend(mode="jnp"))
+    fd, fi = np.asarray(fd), np.asarray(fi)
+    assert (fi[0] == INVALID).all() and (fi[2] == INVALID).all()
+    assert (fd[0] == BIG_DIST).all() and (fd[2] == BIG_DIST).all()
+    assert fi[1, 0] == 42 and fd[1, 0] == np.float32(0.5)
+    assert (fi[1, 1:] == INVALID).all()
+    assert (fd[1, 1:] == BIG_DIST).all()
+
+
+def test_fuse_topk_quarantines_nonfinite():
+    """NaN leg distances (a corrupt leg) must not scramble the bitonic
+    merge: they sort last like padding, and real entries win."""
+    k, R = 4, 2
+    leg_d = np.array([[[0.1, 0.2, 0.3, 0.4],
+                       [np.nan, np.nan, np.nan, np.nan]]], np.float32)
+    leg_i = np.array([[[1, 2, 3, 4], [5, 6, 7, 8]]], np.int32)
+    fd, fi = fuse_topk(leg_d, leg_i, KernelBackend(mode="jnp"))
+    np.testing.assert_array_equal(np.asarray(fi)[0], [1, 2, 3, 4])
+    assert np.isfinite(np.asarray(fd)).all()
+
+
+# ---------------------------------------------------------------------------
+# degraded routed fusion: known-down shards drop legs, queries never stall
+# ---------------------------------------------------------------------------
+def test_routed_down_shard_degrades(rds):
+    """One routed shard marked down: its legs are dropped host-side,
+    every query retires from its surviving legs with coverage < 1 where
+    a leg was lost, the fused output of affected queries is exactly the
+    surviving leg's list, and the legs_fused histogram adds up."""
+    db, queries, ri = rds
+    consts, geom, entry = pack_for_engine(ri.packed)
+    sp = SearchParams(L=32, W=1, k=8)
+    params = EngineParams.lossless(sp, 4, geom.max_degree)
+    nq = queries.shape[0]
+    arr = np.zeros(nq, np.int64)
+    kw = dict(router=ri.router, topr=2, num_slots=4, arrivals=arr,
+              shard_entries=ri.shard_entries)
+    ids0, _, st0 = routed_stream_search(consts, geom, params, entry,
+                                        queries, **kw)
+    ids, dists, st = routed_stream_search(consts, geom, params, entry,
+                                          queries, down_shards=[1], **kw)
+    assert len(st.results) == nq                 # nobody stalls
+    tgt = np.asarray(ri.router.route(queries, 2))
+    hit = (tgt == 1).any(-1)
+    assert st.truncated == int(hit.sum()) > 0
+    assert st.legs == 2 * nq - int(hit.sum())
+    assert sum(st.legs_fused_hist) == nq
+    assert st.legs_fused_hist[2] == nq - int(hit.sum())
+    by = st.by_qid()
+    for i in range(nq):
+        r = by[i]
+        if hit[i]:
+            assert r.truncated and r.legs_fused == 1
+            assert r.coverage == pytest.approx(0.5)
+        else:
+            assert not r.truncated and r.legs_fused == 2
+            assert r.coverage == 1.0
+            # untouched queries fuse bit-identically to the healthy run
+            np.testing.assert_array_equal(np.asarray(ids)[i],
+                                          np.asarray(ids0)[i])
+    # surviving results never surface INVALID ids over 0.0 distances
+    masked = np.asarray(dists)[np.asarray(ids) == INVALID]
+    assert (masked > 1e30).all() if masked.size else True
+
+
+def test_routed_all_shards_down_query(rds):
+    """A query routed only to down shards retires immediately with
+    all-INVALID ids over BIG_DIST and coverage 0 (R=1 normalization)."""
+    db, queries, ri = rds
+    consts, geom, entry = pack_for_engine(ri.packed)
+    sp = SearchParams(L=16, W=1, k=8)
+    params = EngineParams.lossless(sp, 4, geom.max_degree)
+    nq = 8
+    q = queries[:nq]
+    # R=1 path: topr >= S routes one leg per query
+    tgt = np.asarray(ri.router.route(q, 1))[:, 0]
+    down = int(tgt[0])
+    ids, dists, st = routed_stream_search(
+        consts, geom, params, entry, q, router=ri.router, topr=S,
+        num_slots=4, down_shards=[down])
+    assert len(st.results) == nq
+    by = st.by_qid()
+    dead = np.flatnonzero(tgt == down)
+    assert dead.size > 0
+    for i in range(nq):
+        r = by[i]
+        if tgt[i] == down:
+            assert r.truncated and r.legs_fused == 0
+            assert r.coverage == 0.0 and r.service_rounds == 0
+            assert (np.asarray(ids)[i] == INVALID).all()
+            assert (np.asarray(dists)[i] > 1e30).all()
+        else:
+            assert not r.truncated and r.coverage == 1.0
+    with pytest.raises(ValueError, match="every shard"):
+        routed_stream_search(consts, geom, params, entry, q,
+                             router=ri.router, topr=S, num_slots=4,
+                             down_shards=list(range(S)))

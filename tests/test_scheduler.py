@@ -447,6 +447,11 @@ def test_stream_summary_covers_stats_fields(ds):
         assert f.name in summ, (
             f"stream_summary dropped StreamStats.{f.name}")
     assert summ["props_sent"] == st.props_sent > 0
+    # robustness counters are part of the frozen contract (and a clean
+    # run must report them at rest)
+    assert summ["shed"] == 0 and summ["truncated"] == 0
+    assert summ["quarantined"] == 0 and summ["legs_fused_hist"] == []
+    assert summ["goodput"] == 1.0
 
 
 def test_poisson_arrivals_rounds_half_up():
@@ -525,3 +530,305 @@ def test_stream_kernel_mode_ref_bitexact(ds):
                                   queries[:16], num_slots=4)
     np.testing.assert_array_equal(ids, ref_i)
     np.testing.assert_array_equal(dists, ref_d)
+
+
+# ---------------------------------------------------------------------------
+# Robustness: deadlines, bounded admission ring, overload policies, faults
+# ---------------------------------------------------------------------------
+def _robust_params(sp, slots, geom, **kw):
+    import dataclasses
+
+    return dataclasses.replace(
+        EngineParams.lossless(sp, slots, geom.max_degree), **kw)
+
+
+@pytest.mark.parametrize("injit", [False, True])
+def test_deadline_force_retires(ds, injit):
+    """Every query retires at most deadline_rounds after admission,
+    flagged truncated with finite best-so-far results, on both the
+    host-paced and in-jit admission paths."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = _robust_params(sp, 2, geom, deadline_rounds=3)
+    ids, dists, st = stream_search(consts, geom, params, entry,
+                                   queries[:16], num_slots=2,
+                                   round_chunk=8, injit_admit=injit)
+    assert len(st.results) == 16
+    assert st.truncated == 16      # 3 rounds is far below convergence
+    for r in st.results:
+        assert r.truncated
+        assert r.retire_round - r.admit_round == 3
+        assert r.service_rounds == 3
+        # best-so-far top-k, not garbage: the entry point at least
+        assert (r.ids != INVALID).any()
+        assert np.isfinite(r.dists[r.ids != INVALID]).all()
+
+
+@pytest.mark.parametrize("injit", [False, True])
+def test_deadline_off_bit_identity(ds, injit):
+    """A deadline no query ever reaches is bit-identical to no
+    deadline at all — the whole deadline column is pure plumbing until
+    it fires (schedule, traces and accounting included)."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    arrivals = np.random.default_rng(5).integers(0, 12, 16)
+
+    def run(params):
+        _, _, st = stream_search(consts, geom, params, entry,
+                                 queries[:16], num_slots=3,
+                                 arrivals=arrivals, round_chunk=8,
+                                 injit_admit=injit)
+        return st
+
+    base = run(EngineParams.lossless(sp, 3, geom.max_degree))
+    huge = run(_robust_params(sp, 3, geom, deadline_rounds=10**6))
+    assert _result_records(huge) == _result_records(base)
+    assert huge.total_rounds == base.total_rounds
+    assert huge.occupancy_trace == base.occupancy_trace
+    assert huge.truncated == 0
+
+
+def test_ring_full_capacity_bit_identity(ds):
+    """A ring holding the whole stream reproduces the unbounded staging
+    path exactly: schedule, traces, accounting — the sliding window at
+    C >= N is the stage-everything path by construction."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 3, geom.max_degree)
+    arrivals = np.random.default_rng(6).integers(0, 15, queries.shape[0])
+
+    def run(ring):
+        _, _, st = stream_search(consts, geom, params, entry, queries,
+                                 num_slots=3, arrivals=arrivals,
+                                 round_chunk=8, ring_capacity=ring)
+        return st
+
+    base = run(0)
+    ringed = run(queries.shape[0])
+    assert _result_records(ringed) == _result_records(base)
+    assert ringed.total_rounds == base.total_rounds
+    assert ringed.occupancy_trace == base.occupancy_trace
+    assert ringed.shed == 0
+
+
+def test_ring_block_property_any_capacity(ds):
+    """Hypothesis: under the block policy, any ring capacity >= 1
+    serves every query with bit-identical per-query results (admission
+    order is arrival order either way; the window only bounds device
+    memory, adding backpressure rounds at worst)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=8, W=1, k=5)
+    nq = 12
+    q = queries[:nq]
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+    arrivals = np.random.default_rng(9).integers(0, 8, nq)
+    ref_i, ref_d, ref_st = stream_search(
+        consts, geom, params, entry, q, num_slots=2, arrivals=arrivals,
+        round_chunk=8)
+
+    @given(st.integers(1, nq + 4))
+    @settings(max_examples=8, deadline=None)
+    def check(ring):
+        ids, dists, stx = stream_search(
+            consts, geom, params, entry, q, num_slots=2,
+            arrivals=arrivals, round_chunk=8, ring_capacity=ring,
+            overload="block")
+        np.testing.assert_array_equal(ids, ref_i)
+        np.testing.assert_array_equal(dists, ref_d)
+        assert stx.shed == 0 and len(stx.results) == nq
+
+    check()
+
+
+def test_ring_shed_overload(ds):
+    """Shed policy under a burst far beyond ring capacity: overflow
+    queries are rejected and counted, every admitted query still
+    retires with exact results, and shed + retired covers the stream.
+    Shed queries keep INVALID rows in the wrapper output."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 1, geom.max_degree)
+    nq = queries.shape[0]
+    arrivals = np.zeros(nq, np.int64)          # one burst at round 0
+    ids, dists, st = stream_search(consts, geom, params, entry, queries,
+                                   num_slots=1, arrivals=arrivals,
+                                   round_chunk=8, ring_capacity=4,
+                                   overload="shed")
+    assert st.shed > 0
+    assert st.shed + len(st.results) == nq
+    served = {r.qid for r in st.results}
+    ref_i, ref_d, _ = stream_search(consts, geom, params, entry, queries,
+                                    num_slots=1, arrivals=arrivals,
+                                    round_chunk=8)
+    for r in st.results:     # admitted queries are exact
+        np.testing.assert_array_equal(r.ids, ref_i[r.qid])
+    for qid in range(nq):
+        if qid not in served:
+            assert (ids[qid] == INVALID).all()
+
+
+def test_ring_validation(ds):
+    """Ring knobs are validated at construction: bad policy names, the
+    host-paced path and routed serving are all rejected."""
+    from repro.core.scheduler import StreamScheduler
+
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    params = EngineParams.lossless(sp, 2, geom.max_degree)
+    with pytest.raises(ValueError, match="overload"):
+        StreamScheduler(consts, geom, params, entry, num_slots=2,
+                        overload="panic")
+    with pytest.raises(ValueError, match="in-jit"):
+        StreamScheduler(consts, geom, params, entry, num_slots=2,
+                        injit_admit=False, ring_capacity=4)
+    with pytest.raises(ValueError, match="routed"):
+        StreamScheduler(consts, geom, params, entry, num_slots=2,
+                        routed=True, ring_capacity=4)
+
+
+def test_fault_kill_shard_retires_all(ds):
+    """Kill one shard mid-run (with a deadline): every query still
+    retires — rows on the dead shard age to the deadline and force-
+    retire truncated; rows elsewhere finish clean and bit-exact."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    from repro.ft.inject import fault_plan
+
+    sp = SearchParams(L=16, W=1, k=10)
+    nq = 16
+    clean = EngineParams.lossless(sp, 2, geom.max_degree)
+    ref_i, _, ref_st = stream_search(consts, geom, clean, entry,
+                                     queries[:nq], num_slots=2,
+                                     round_chunk=8)
+    # a deadline no healthy query reaches: only stalled rows truncate
+    dl = max(r.service_rounds for r in ref_st.results) + 4
+    faults = fault_plan(geom.num_shards).kill(1, 4)
+    params = _robust_params(sp, 2, geom, deadline_rounds=dl,
+                            faults=faults)
+    ids, dists, st = stream_search(consts, geom, params, entry,
+                                   queries[:nq], num_slots=2,
+                                   round_chunk=8)
+    assert len(st.results) == nq               # nothing hangs
+    assert 0 < st.truncated < nq               # shard 1's rows only
+    for r in st.results:
+        if r.truncated:
+            # aged on the serving clock to the deadline while stalled
+            assert r.retire_round - r.admit_round == dl
+            assert r.service_rounds < dl
+        else:
+            np.testing.assert_array_equal(r.ids, ref_i[r.qid])
+
+
+def test_fault_delay_is_transparent(ds):
+    """A transient stall preserves traversal state: results are
+    bit-identical to the healthy run, only the stalled rows' serving-
+    clock latency grows by the delay."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    from repro.ft.inject import fault_plan
+
+    sp = SearchParams(L=16, W=1, k=10)
+    nq = 16
+    clean = EngineParams.lossless(sp, 2, geom.max_degree)
+    ref_i, ref_d, ref_st = stream_search(consts, geom, clean, entry,
+                                         queries[:nq], num_slots=2,
+                                         round_chunk=8)
+    faults = fault_plan(geom.num_shards).delay(0, 2, 5)
+    params = _robust_params(sp, 2, geom, faults=faults)
+    ids, dists, st = stream_search(consts, geom, params, entry,
+                                   queries[:nq], num_slots=2,
+                                   round_chunk=8)
+    np.testing.assert_array_equal(ids, ref_i)
+    np.testing.assert_array_equal(dists, ref_d)
+    assert st.truncated == 0
+    lat = {r.qid: r.latency_rounds for r in st.results}
+    ref_lat = {r.qid: r.latency_rounds for r in ref_st.results}
+    assert all(lat[q] >= ref_lat[q] for q in lat)
+    assert any(lat[q] > ref_lat[q] for q in lat)   # someone stalled
+    svc = {r.qid: r.service_rounds for r in st.results}
+    ref_svc = {r.qid: r.service_rounds for r in ref_st.results}
+    assert svc == ref_svc        # worked rounds unchanged by the stall
+
+
+def test_fault_corruption_guard(ds):
+    """Deterministic page corruption + guard: corrupt reads are
+    quarantined and counted, outputs stay finite, every query retires.
+    The same plan without the guard is the negative control: garbage
+    reaches the results."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    from repro.ft.inject import fault_plan
+
+    sp = SearchParams(L=16, W=1, k=10)
+    nq = 16
+    faults = fault_plan(geom.num_shards).corrupt(0.08, "neg", seed=3)
+    guarded = _robust_params(sp, 2, geom, faults=faults,
+                             guard_nonfinite=True)
+    ids, dists, st = stream_search(consts, geom, guarded, entry,
+                                   queries[:nq], num_slots=2,
+                                   round_chunk=8)
+    assert len(st.results) == nq
+    assert st.quarantined > 0
+    assert np.isfinite(dists[ids != INVALID]).all()
+    assert (dists[ids != INVALID] >= 0).all()     # no negative garbage
+    unguarded = _robust_params(sp, 2, geom, faults=faults)
+    _, dists_u, st_u = stream_search(consts, geom, unguarded, entry,
+                                     queries[:nq], num_slots=2,
+                                     round_chunk=8)
+    assert st_u.quarantined == 0
+    assert (np.asarray(dists_u) < 0).any()        # garbage got through
+
+
+def test_guard_identity_on_clean_data(ds):
+    """guard_nonfinite on clean data is the identity — the quarantine
+    predicate never fires, results and accounting are bit-identical."""
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    nq = 16
+    base_p = EngineParams.lossless(sp, 2, geom.max_degree)
+    ref_i, ref_d, base = stream_search(consts, geom, base_p, entry,
+                                       queries[:nq], num_slots=2,
+                                       round_chunk=8)
+    guarded = _robust_params(sp, 2, geom, guard_nonfinite=True)
+    ids, dists, st = stream_search(consts, geom, guarded, entry,
+                                   queries[:nq], num_slots=2,
+                                   round_chunk=8)
+    np.testing.assert_array_equal(ids, ref_i)
+    np.testing.assert_array_equal(dists, ref_d)
+    assert st.quarantined == 0
+    assert _result_records(st) == _result_records(base)
+
+
+def test_fault_validation(ds):
+    """Hazardous fault configs are rejected up front: a kill with no
+    deadline would hang the host loop; stalls need the in-jit serving
+    clock; a spec sized for the wrong mesh is caught."""
+    from repro.core.scheduler import StreamScheduler
+    from repro.ft.inject import fault_plan
+
+    db, queries, packed = ds
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=10)
+    S = geom.num_shards
+    kill = fault_plan(S).kill(0, 5)
+    params = _robust_params(sp, 2, geom, faults=kill)
+    with pytest.raises(ValueError, match="deadline"):
+        StreamScheduler(consts, geom, params, entry, num_slots=2)
+    ok = _robust_params(sp, 2, geom, faults=kill, deadline_rounds=8)
+    with pytest.raises(ValueError, match="in-jit"):
+        StreamScheduler(consts, geom, ok, entry, num_slots=2,
+                        injit_admit=False)
+    wrong = _robust_params(sp, 2, geom, deadline_rounds=8,
+                           faults=fault_plan(S + 1).kill(0, 5))
+    with pytest.raises(ValueError, match="num_shards"):
+        StreamScheduler(consts, geom, wrong, entry, num_slots=2)
