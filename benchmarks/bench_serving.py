@@ -32,6 +32,12 @@ the host-paced admission baseline (``injit off``: chunk length
 collapses toward one round while the queue drains, the PR-4 model).
 Results land in machine-readable ``BENCH_serving.json``.
 
+A tiered-page-store leg always rides along: throughput vs device-
+resident fraction (1.0 -> 0.25) on a paced-arrival workload, prefetch
+vs demand-only at each tiered point, with the fraction-1.0
+bit-identity gate and the half-residency prefetch-must-win gate under
+``--smoke`` (see ``tiered_leg``).
+
 ``--chaos`` adds the robustness sweep: goodput vs offered load against
 the bounded admission ring under both overload policies (``shed`` and
 ``block``), a mid-run 1-of-8 shard kill under an in-jit deadline
@@ -195,6 +201,138 @@ def routed_leg(*, n, d, nq, shards, page_size, r, L, k, slots,
         rows[label] = row
         routed_out[label] = (np.asarray(ids), np.asarray(dists))
     return rows, fanout_out, routed_out
+
+
+def tiered_leg(*, kernel_mode, seed, smoke):
+    """Tiered-page-store sweep: throughput vs resident fraction.
+
+    A paced-arrival serving workload (Poisson ~0.25 queries/round, 2
+    slots/shard) runs with the device frame cache shrunk from the full
+    store (fraction 1.0) down to a quarter, with double-buffered
+    speculative prefetch on and off at each tiered point:
+
+      * fraction 1.0 must be **bit-identical** to the untiered path —
+        the translation table is the identity, no stall can occur
+        (gated under ``--smoke``);
+      * at fraction 0.5 speculative prefetch must beat demand-only
+        fetching: nonzero prefetch hit rate, strictly fewer stall
+        rounds, more queries per clock round (the smoke gate);
+      * fraction 0.25 is reported for the curve: the per-chunk working
+        set approaches the whole cache there, so prefetch degenerates
+        toward demand-only (the pressure throttle in
+        ``PageStore._stage`` backs speculation off as demand fetches
+        consume the shard's slack).
+
+    Clock rounds (busy + idle) are the throughput denominator: stalls
+    stretch a query's wall time even when the round schedule stays
+    dense, and paced arrivals leave idle gaps a faster store can close.
+    The arrival pacing matters — under an all-at-round-0 closed batch
+    the working set is every in-flight query's frontier at once and
+    *any* speculative install evicts a demanded page (zero-sum); the
+    open-loop regime is where the paper's prefetch overlap pays."""
+    from repro.core.pagestore import PageStore
+    from repro.launch.search import build_index
+
+    n, d, nq, shards = 2048, 32, 48, 4
+    page_size, rdeg, slots, K = 8, 8, 2, 4
+    ds = VectorDataset("tiered-bench", n=n, dim=d, clusters=8, seed=seed)
+    db0 = ds.materialize()
+    queries = ds.queries(nq, seed=seed + 1)
+    db, packed = build_index(db0, shards=shards, page_size=page_size,
+                             r=rdeg, pref_width=2, seed=seed)
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=16, W=1, k=8)
+    params = EngineParams.lossless(sp, slots, packed.max_degree,
+                                   spec_width=2, kernel_mode=kernel_mode)
+    NP = consts["db"].shape[1]
+    pt = dataclasses.replace(params, store_pages=NP)
+    arrivals = poisson_arrivals(0.25, nq, seed + 7)
+    skw = dict(num_slots=slots, round_chunk=K, arrivals=arrivals)
+
+    base_i, base_d, base_st = stream_search(consts, geom, params, entry,
+                                            queries, **skw)
+
+    def one(pdev, prefetch):
+        ps = PageStore(consts, geom, pdev, w_select=sp.W,
+                       prefetch=prefetch)
+        ids, dists, st = stream_search(consts, geom, pt, entry, queries,
+                                       pagestore=ps, **skw)
+        clock = st.total_rounds + st.idle_rounds
+        row = stream_summary(st)
+        row.update(device_pages=ps.P_dev,
+                   resident_fraction=round(ps.resident_fraction, 4),
+                   prefetch=prefetch, clock_rounds=clock,
+                   queries_per_clock_round=round(nq / max(clock, 1), 4),
+                   **ps.counters())
+        return row, (np.asarray(ids), np.asarray(dists))
+
+    fracs = (1.0, 0.5) if smoke else (1.0, 0.75, 0.5, 0.25)
+    rows, outs = [], {}
+    for frac in fracs:
+        pdev = max(1, int(round(NP * frac)))
+        for prefetch in ((True,) if frac == 1.0 else (True, False)):
+            row, out = one(pdev, prefetch)
+            rows.append(row)
+            outs[(frac, prefetch)] = (row, out)
+
+    emit([[row["resident_fraction"], row["device_pages"],
+           row["prefetch"], row["stalls"],
+           row["stall_rounds_per_query"], row["prefetch_hit_rate"],
+           row["clock_rounds"], row["queries_per_clock_round"],
+           row["sustained_qps"]] for row in rows],
+         ["fraction", "frames", "prefetch", "stalls", "stalls/query",
+          "hit_rate", "clock", "q/clock_round", "qps"],
+         f"tiered page store (NP={NP} pages/shard, paced arrivals, "
+         f"{shards}x{slots} slots, chunk={K})")
+
+    if smoke:
+        full_row, (fi, fd) = outs[(1.0, True)]
+        np.testing.assert_array_equal(
+            fi, np.asarray(base_i),
+            err_msg="tiered fraction 1.0 changed result ids vs the "
+                    "untiered path")
+        np.testing.assert_array_equal(
+            fd, np.asarray(base_d),
+            err_msg="tiered fraction 1.0 changed distances vs the "
+                    "untiered path")
+        assert full_row["stalls"] == 0, (
+            f"fraction 1.0 must never stall (identity translation "
+            f"table): {full_row['stalls']} stall rounds")
+        on, (oi, _) = outs[(0.5, True)]
+        off, (xi, _) = outs[(0.5, False)]
+        np.testing.assert_array_equal(
+            oi, np.asarray(base_i),
+            err_msg="tiered fraction 0.5 changed final result ids — "
+                    "stalls may delay, never corrupt")
+        np.testing.assert_array_equal(
+            xi, np.asarray(base_i),
+            err_msg="demand-only fraction 0.5 changed final result ids")
+        assert on["prefetch_hit_rate"] > off["prefetch_hit_rate"], (
+            f"speculative prefetch must land hits demand-only cannot: "
+            f"{on['prefetch_hit_rate']} vs {off['prefetch_hit_rate']}")
+        assert on["stalls"] < off["stalls"], (
+            f"prefetch on must stall strictly less than demand-only at "
+            f"half residency: {on['stalls']} vs {off['stalls']}")
+        assert (on["queries_per_clock_round"]
+                > off["queries_per_clock_round"]), (
+            f"prefetch on must sustain more queries/clock-round than "
+            f"demand-only at half residency: "
+            f"{on['queries_per_clock_round']} vs "
+            f"{off['queries_per_clock_round']}")
+
+    half_on = outs[(0.5, True)][0]
+    half_off = outs[(0.5, False)][0]
+    return rows, {
+        "tiered_full_identity": bool(
+            np.array_equal(outs[(1.0, True)][1][0], np.asarray(base_i))
+            and outs[(1.0, True)][0]["stalls"] == 0),
+        "tiered_half_stall_ratio": round(
+            half_on["stalls"] / max(half_off["stalls"], 1), 4),
+        "tiered_half_qpcr_ratio": round(
+            half_on["queries_per_clock_round"]
+            / max(half_off["queries_per_clock_round"], 1e-9), 4),
+        "tiered_half_hit_rate": half_on["prefetch_hit_rate"],
+    }
 
 
 def chaos_leg(*, n, d, nq, page_size, r, L, k, kernel_mode, seed,
@@ -472,6 +610,11 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         print(f"[routed leg skipped: n={routed_n} not on the "
               f"{routed_shards}x{page_size} grid]")
 
+    # tiered page store: throughput vs resident fraction, prefetch vs
+    # demand-only, with the fraction-1.0 bit-identity gate
+    tiered_rows, tiered_checks = tiered_leg(
+        kernel_mode=kernel_mode, seed=seed, smoke=smoke)
+
     # chaos sweep: overload shedding/backpressure against the bounded
     # admission ring, a mid-run shard kill under a deadline, corrupted
     # page reads behind the guard, and the armed-but-idle identity gate
@@ -559,6 +702,7 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
             / max(fo["queries_per_round"], 1e-9), 4)
         checks["routed_r2_recall_delta"] = round(
             r2["recall"] - fo["recall"], 4)
+    checks.update(tiered_checks)
     results = {
         "config": {"nq": nq, "n": n, "d": d, "shards": shards,
                    "slots": slots, "rate": rate, "spec_max": spec_max,
@@ -575,6 +719,7 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
                               "shard_map_host_admission":
                                   chunk_shard_hostadm},
         "routed_sweep": routed_rows,
+        "tiered_sweep": tiered_rows,
         "chaos": chaos_rows,
         "checks": checks,
     }

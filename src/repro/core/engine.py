@@ -142,6 +142,17 @@ class EngineParams:
                                     # path only), page corruption in the
                                     # phase-B distance read. None compiles
                                     # zero extra ops.
+    store_pages: int = 0            # tiered page store (core/pagestore.py):
+                                    # logical pages per shard when the
+                                    # phase-B distance read goes through a
+                                    # residency translation table
+                                    # (consts["ttab"]) into a fixed-
+                                    # capacity device frame buffer — a
+                                    # non-resident page stalls its owner
+                                    # queries for the round instead of
+                                    # reading garbage. 0 = device-resident
+                                    # store, zero extra ops (bit-identical
+                                    # to every pre-tiered path).
 
     @property
     def backend(self) -> KernelBackend:
@@ -181,6 +192,14 @@ class EngineState(NamedTuple):
     props_sent: jax.Array    # () accepted proposals sent by this source
     quarantined: jax.Array   # () corrupt distances quarantined to
                              # BIG_DIST by the guard (guard_nonfinite)
+    page_touch: jax.Array    # (store_pages,) bool — logical pages this
+                             # shard served from resident frames since
+                             # the last chunk boundary ((0,) when the
+                             # tiered store is off)
+    page_miss: jax.Array     # (store_pages,) bool — logical pages
+                             # demanded but not resident (the demand-
+                             # fetch set the scheduler serves at the
+                             # next chunk boundary)
 
 
 # ---------------------------------------------------------------------------
@@ -210,9 +229,10 @@ def _init_state(queries, qq, entry_vec, entry_norm, entry_id,
     z = jnp.zeros((Qs,), jnp.int32)
     zs = jnp.int32(0)
     dl = params.deadline_rounds if params.deadline_rounds > 0 else NEVER
+    pz = jnp.zeros((params.store_pages,), bool)
     return EngineState(cand_d, cand_i, cand_e, bloom, z.astype(bool),
                        z, z, z, jnp.full((Qs,), dl, jnp.int32),
-                       z.astype(bool), zs, zs, zs, zs, zs)
+                       z.astype(bool), zs, zs, zs, zs, zs, pz, pz)
 
 
 def _fa_select(state: EngineState, params: EngineParams, geom: EngineGeom):
@@ -326,7 +346,7 @@ def _fc_propose(state: EngineState, keep_a, recv_b, queries, qq, spec_w,
 
 
 def _fd_distance(recv, db, vnorm, blk_perm, my_shard,
-                 params: EngineParams, geom: EngineGeom):
+                 params: EngineParams, geom: EngineGeom, ttab=None):
     """Owner SiN: translate id -> physical page/slot, compute distances.
 
     In gather_vectors mode returns the raw vectors instead (baseline).
@@ -339,6 +359,16 @@ def _fd_distance(recv, db, vnorm, blk_perm, my_shard,
     huge-negative distance exactly as damaged media would, on every
     visit to that page. Corruption models the SiN distance read path,
     so the gather_vectors baseline is exempt.
+
+    With the tiered page store (``params.store_pages > 0``) ``db`` /
+    ``vnorm`` are the fixed-capacity device *frame* buffers and
+    ``ttab`` the (store_pages,) residency translation table: the read
+    goes through :meth:`KernelBackend.translated_item_distances`, a
+    ``"miss"`` lane rides the reply so the requester can stall queries
+    that demanded a cold page, and the stage additionally returns the
+    shard's per-chunk page touch/miss bitmaps (the prefetcher's demand
+    + hit-accounting signal). An identity table over a full store is
+    bit-identical to the untranslated read.
     """
     vid = recv["vid"]                              # (S, C_B)
     mask = recv["mask"]
@@ -346,7 +376,8 @@ def _fd_distance(recv, db, vnorm, blk_perm, my_shard,
     flat_vid = jnp.clip(vid.reshape(-1), 0, geom.n - 1)
     flat_mask = mask.reshape(-1)
     ppage = geom.phys_page(flat_vid, blk_perm)
-    ppage = jnp.clip(ppage, 0, db.shape[0] - 1)
+    npages = params.store_pages if params.store_pages else db.shape[0]
+    ppage = jnp.clip(ppage, 0, npages - 1)
     slot = flat_vid % geom.page_size
 
     items = flat_mask.sum().astype(jnp.int32)
@@ -354,6 +385,29 @@ def _fd_distance(recv, db, vnorm, blk_perm, my_shard,
     first = jnp.concatenate(
         [jnp.ones((1,), bool), sorted_pages[1:] != sorted_pages[:-1]])
     uniq = (first & (sorted_pages != 2**30)).sum().astype(jnp.int32)
+
+    if params.store_pages:
+        if params.gather_vectors:
+            raise NotImplementedError(
+                "the gather_vectors baseline moves raw vectors, not "
+                "page reads — it has no tiered page store")
+        dist, resident = params.backend.translated_item_distances(
+            ttab, ppage, slot, flat_mask, recv["qvec"].reshape(S * C, -1),
+            recv["qq"].reshape(-1), db, vnorm)
+        if params.faults is not None and params.faults.any_corrupt:
+            bad = ftinject.bad_page_mask(params.faults, ppage, my_shard)
+            dist = jnp.where(bad & flat_mask,
+                             ftinject.corrupt_value(params.faults), dist)
+        missed = flat_mask & ~resident
+        send = {"dist": dist.reshape(S, C), "miss": missed.reshape(S, C)}
+        # per-chunk page bitmaps: scatter True at the touched/missed
+        # logical pages (masked lanes write OOB and drop)
+        touch = jnp.zeros((npages,), bool).at[
+            jnp.where(flat_mask & resident, ppage, npages)].set(
+            True, mode="drop")
+        pmiss = jnp.zeros((npages,), bool).at[
+            jnp.where(missed, ppage, npages)].set(True, mode="drop")
+        return send, items, uniq, touch, pmiss
 
     if params.gather_vectors:
         v = db[ppage, slot].astype(jnp.float32)    # (S*C, d)
@@ -373,8 +427,21 @@ def _fd_distance(recv, db, vnorm, blk_perm, my_shard,
 
 
 def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
-              queries, qq, params: EngineParams, geom: EngineGeom):
-    """Requester: recover distances, bloom-insert, merge, re-terminate."""
+              queries, qq, page_touch=None, page_miss=None,
+              params: EngineParams = None, geom: EngineGeom = None):
+    """Requester: recover distances, bloom-insert, merge, re-terminate.
+
+    Tiered store (``params.store_pages > 0``): the reply's ``"miss"``
+    lane marks assignments whose page was not device-resident. A query
+    with any missed assignment **stalls** — its entire round is masked
+    exactly like a ``done`` row's (candidates, bloom, rounds, n_dist
+    all restored), so next round it re-selects the same frontier and
+    re-proposes the same set, by which time the scheduler has demand-
+    fetched the page at the chunk boundary. Stalled rounds show up as
+    ``age - rounds`` (the serving clock advances, the work clock does
+    not). ``page_touch`` / ``page_miss`` are this shard's stage-D
+    bitmaps, OR-accumulated into the state for the boundary fetcher.
+    """
     sp = params.search
     Qs, L = state.cand_d.shape
     props = keep_c["props"]                        # (Qs, M)
@@ -394,34 +461,53 @@ def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
                                    keep_c["rank"], ok, params.capacity_b)
     accepted = ok.reshape(Qs, M)
     dist = jnp.where(accepted, dist.reshape(Qs, M), BIG_DIST)
+    if params.store_pages:
+        # any missed page stalls the whole query for the round: mask it
+        # like a done row (state restored below) so it retries the
+        # identical round after the boundary fetch. A live row always
+        # has an unexpanded candidate (else it would be done), so a
+        # stalled row can never be re-terminated by the done update.
+        missf = gather_from_buckets(recv_d["miss"], keep_c["dest"],
+                                    keep_c["rank"], ok, params.capacity_b)
+        stall = ((missf.reshape(Qs, M) & accepted).any(axis=1)
+                 & ~state.done)
+        keep = state.done | stall
+        acc_eff = accepted & ~stall[:, None]
+    else:
+        keep = state.done
+        acc_eff = accepted
     quar = jnp.int32(0)
     if params.guard_nonfinite:
         # corrupt reads become worthless-but-harmless candidates: they
         # still count as accepted proposals (the read happened) but a
         # BIG_DIST entry can never displace a real one in the merge
-        dist, quar = quarantine_distances(dist, accepted, BIG_DIST)
+        dist, quar = quarantine_distances(dist, acc_eff, BIG_DIST)
 
     bloom = bloom_insert(state.bloom, props, accepted)
     cand_d, cand_i, cand_e = merge_candidates(
         state.cand_d, state.cand_i, keep_a["cand_e2"], dist, props,
         accepted, L, backend=params.backend)
-    worked = ~state.done
-    keep = state.done
+    worked = ~keep
     cand_d = jnp.where(keep[:, None], state.cand_d, cand_d)
     cand_i = jnp.where(keep[:, None], state.cand_i, cand_i)
     cand_e = jnp.where(keep[:, None], state.cand_e, cand_e)
     bloom = jnp.where(keep[:, None], state.bloom, bloom)
     rounds = state.rounds + worked.astype(jnp.int32)
-    n_dist = state.n_dist + jnp.where(worked, accepted.sum(-1), 0
+    n_dist = state.n_dist + jnp.where(worked, acc_eff.sum(-1), 0
                                       ).astype(jnp.int32)
     done = state.done | ~((~cand_e) & (cand_i != ID_SENTINEL)).any(axis=1)
+    if params.store_pages:
+        p_touch = state.page_touch | page_touch
+        p_miss = state.page_miss | page_miss
+    else:
+        p_touch, p_miss = state.page_touch, state.page_miss
     return EngineState(
         cand_d, cand_i, cand_e, bloom, done, rounds, n_dist,
         state.age, state.deadline, state.truncated,
         state.items_recv + items, state.pages_unique + uniq,
         state.drops_b + keep_c["drops"],
-        state.props_sent + accepted.sum().astype(jnp.int32),
-        state.quarantined + quar)
+        state.props_sent + acc_eff.sum().astype(jnp.int32),
+        state.quarantined + quar, p_touch, p_miss)
 
 
 # ---------------------------------------------------------------------------
@@ -429,6 +515,13 @@ def _fe_merge(state: EngineState, keep_a, keep_c, recv_d, items, uniq,
 # ---------------------------------------------------------------------------
 def _round(state, consts, params: EngineParams, geom: EngineGeom, a2a,
            spec_w=None, my_shard=None):
+    if params.store_pages:
+        # residency translation + boundary fetches are wired through the
+        # sim stepper (core/scheduler.py StreamScheduler(pagestore=...));
+        # the shard_map leg keeps the device-resident store
+        raise NotImplementedError(
+            "tiered page store (store_pages > 0) runs on the sim "
+            "driver only")
     if spec_w is None:
         spec_w = jnp.int32(params.spec_width)
     if my_shard is None:
@@ -447,7 +540,8 @@ def _round(state, consts, params: EngineParams, geom: EngineGeom, a2a,
                                        geom)
     recv_d = a2a(send_d)
     return _fe_merge(state, keep_a, keep_c, recv_d, items, uniq,
-                     consts["queries"], consts["qq"], params, geom)
+                     consts["queries"], consts["qq"], params=params,
+                     geom=geom)
 
 
 def _finalize(state: EngineState, k: int):
@@ -503,10 +597,6 @@ def _sim_round(state, consts, queries, qq, spec_w, params: EngineParams,
                    in_axes=(0, 0, 0))
     vfc = jax.vmap(functools.partial(_fc_propose, params=params, geom=geom),
                    in_axes=(0, 0, 0, 0, 0, 0, 0))
-    vfd = jax.vmap(functools.partial(_fd_distance, params=params, geom=geom),
-                   in_axes=(0, 0, 0, 0, 0))
-    vfe = jax.vmap(functools.partial(_fe_merge, params=params, geom=geom),
-                   in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
 
     shard_ids = jnp.arange(state.done.shape[0], dtype=jnp.int32)
     send_a, keep_a = vfa(state)
@@ -516,6 +606,26 @@ def _sim_round(state, consts, queries, qq, spec_w, params: EngineParams,
     send_c, keep_c = vfc(state, keep_a, recv_b, queries, qq, spec_w,
                          shard_ids)
     recv_c = a2a(send_c)
+    if params.store_pages:
+        # tiered store: stage D reads frames through the translation
+        # table and returns per-shard touch/miss bitmaps, which the
+        # merge accumulates into the state (and stalls missed queries)
+        vfd = jax.vmap(
+            lambda recv, db, vn, bp, ms, tt: _fd_distance(
+                recv, db, vn, bp, ms, params, geom, tt))
+        vfe = jax.vmap(
+            lambda st, ka, kc, rd, it, uq, q, qn, tch, pm: _fe_merge(
+                st, ka, kc, rd, it, uq, q, qn, tch, pm, params, geom))
+        send_d, items, uniq, touch, pmiss = vfd(
+            recv_c, consts["db"], consts["vnorm"], consts["blk_perm"],
+            shard_ids, consts["ttab"])
+        recv_d = a2a(send_d)
+        return vfe(state, keep_a, keep_c, recv_d, items, uniq, queries,
+                   qq, touch, pmiss)
+    vfd = jax.vmap(functools.partial(_fd_distance, params=params, geom=geom),
+                   in_axes=(0, 0, 0, 0, 0))
+    vfe = jax.vmap(functools.partial(_fe_merge, params=params, geom=geom),
+                   in_axes=(0, 0, 0, 0, 0, 0, 0, 0))
     send_d, items, uniq = vfd(recv_c, consts["db"], consts["vnorm"],
                               consts["blk_perm"], shard_ids)
     recv_d = a2a(send_d)
@@ -739,7 +849,8 @@ def _admit_rows(state: EngineState, queries, admit_mask, new_q,
         jnp.where(admit_mask, fresh.deadline, state.deadline),
         jnp.where(admit_mask, False, state.truncated),
         state.items_recv, state.pages_unique, state.drops_b,
-        state.props_sent, state.quarantined)
+        state.props_sent, state.quarantined,
+        state.page_touch, state.page_miss)
     return state, q
 
 

@@ -125,6 +125,31 @@ def stream_summary(stats) -> dict:
         "truncated": getattr(stats, "truncated", 0),
         "quarantined": getattr(stats, "quarantined", 0),
         "legs_fused_hist": list(getattr(stats, "legs_fused_hist", [])),
+        # tiered page store (core/pagestore.py): stall rounds are
+        # serving-clock rounds a query aged without working (page
+        # misses / fault stalls), prefetch hit rate is touched-before-
+        # evicted over staged pages, resident_fraction the device
+        # cache size over the logical store (1.0 = untiered)
+        "stalls": getattr(stats, "stalls", 0),
+        "stall_rounds_per_query": round(
+            getattr(stats, "stalls", 0) / n, 3) if n else 0.0,
+        "prefetch_hits": getattr(stats, "prefetch_hits", 0),
+        "prefetch_issued": getattr(stats, "prefetch_issued", 0),
+        "prefetch_hit_rate": round(
+            getattr(stats, "prefetch_hits", 0)
+            / getattr(stats, "prefetch_issued", 1), 4)
+        if getattr(stats, "prefetch_issued", 0) else 0.0,
+        "resident_fraction": round(
+            float(getattr(stats, "resident_fraction", 1.0)), 4),
+        # goodput = retired clean / offered. The three robustness
+        # counters partition differently and cannot double-count a
+        # query: `truncated` is a per-result flag (each query retires
+        # exactly once, so a truncated-and-quarantined query is still
+        # one non-clean retirement), `quarantined` counts corrupt
+        # *distances* (not queries), and a shed query never enters
+        # `results` at all — so the denominator n + shed covers each
+        # offered query exactly once (regression-tested in
+        # tests/test_scheduler.py).
         "goodput": round(
             sum(1 for r in res if not r.truncated)
             / max(n + getattr(stats, "shed", 0), 1), 4),

@@ -84,6 +84,7 @@ benchmarks can measure exactly what compaction buys.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Optional
 
@@ -97,6 +98,12 @@ from repro.core.metrics import slot_occupancy
 from repro.ft.inject import NEVER
 
 INVALID = -1
+
+# tiered store: consecutive no-round-progress chunk boundaries for one
+# live row before the scheduler declares a livelock (the round's page
+# working set cannot fit the device cache, so demand fetches thrash
+# forever). A legitimate page stall clears at the next boundary.
+_LIVELOCK_BOUNDARIES = 256
 
 
 @dataclasses.dataclass
@@ -245,6 +252,12 @@ class QueryResult:
     coverage: float = 1.0     # routed: legs_fused / R — the fraction
                               # of the query's routed shards actually
                               # searched to completion
+    stall_rounds: int = 0     # serving-clock rounds the query aged
+                              # without working: tiered-store page
+                              # misses (core/pagestore.py) and fault
+                              # stalls both mask the row's round while
+                              # its age advances (routed: summed over
+                              # legs)
 
     @property
     def wait_rounds(self) -> int:
@@ -294,6 +307,18 @@ class StreamStats:
                               # routed: legs_fused histogram, index f =
                               # queries whose f legs finished cleanly
                               # (length R+1; empty on the flat path)
+    stalls: int = 0           # total stall rounds across retired
+                              # queries (sum of QueryResult.
+                              # stall_rounds) — tiered-store page
+                              # misses and fault stalls
+    prefetch_hits: int = 0    # tiered store: prefetched pages that
+                              # were actually touched before eviction
+    prefetch_issued: int = 0  # tiered store: pages staged by the
+                              # speculative prefetcher
+    resident_fraction: float = 1.0
+                              # tiered store: device frames / logical
+                              # pages per shard (1.0 = fully resident
+                              # or no tiered store)
 
     def by_qid(self):
         return {r.qid: r for r in self.results}
@@ -317,7 +342,7 @@ class StreamScheduler:
                  stepper: Optional[EngineStepper] = None,
                  injit_admit: Optional[bool] = None,
                  routed: bool = False, ring_capacity: int = 0,
-                 overload: str = "block"):
+                 overload: str = "block", pagestore=None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if round_chunk < 1:
@@ -333,6 +358,40 @@ class StreamScheduler:
         if ring_capacity < 0:
             raise ValueError(
                 f"ring_capacity must be >= 0, got {ring_capacity}")
+        self.pagestore = pagestore
+        if pagestore is not None:
+            # tiered page store: sim driver only (the distributed round
+            # body refuses store_pages > 0), flat pool only (routed
+            # legs re-enter the scheduler; tier the flat leg instead)
+            if mesh is not None:
+                raise ValueError(
+                    "the tiered page store runs on the sim driver only "
+                    "(mesh must be None)")
+            if routed:
+                raise ValueError(
+                    "routed serving does not support the tiered page "
+                    "store")
+            if params.store_pages != pagestore.num_pages:
+                raise ValueError(
+                    f"params.store_pages={params.store_pages} != "
+                    f"pagestore.num_pages={pagestore.num_pages}")
+            if pagestore.S != geom.num_shards:
+                raise ValueError(
+                    f"pagestore built for {pagestore.S} shards, "
+                    f"geom has {geom.num_shards}")
+            # the scheduler's consts view swaps the full-resident pages
+            # for the frame buffer + translation table; boundary() keeps
+            # this view current as residency changes
+            consts = dict(consts)
+            consts.update(pagestore.device_view())
+            # livelock watch: per-slot count of consecutive boundaries
+            # with no round progress (see the boundary hook)
+            self._stall_rounds_prev = None
+            self._stall_count = None
+        elif params.store_pages > 0:
+            raise ValueError(
+                "params.store_pages > 0 needs a PageStore (pass "
+                "pagestore=...) to own the translation table")
         self.consts = consts
         self.geom = geom
         self.params = params
@@ -707,7 +766,10 @@ class StreamScheduler:
                                     wall_latency_s=now_wall
                                     - admit_wall[s, r],
                                     truncated=bool(
-                                        ret_trunc[j, s, r])))
+                                        ret_trunc[j, s, r]),
+                                    stall_rounds=int(
+                                        ret_age[j, s, r]
+                                        - ret_rounds[j, s, r])))
                                 retired += 1
                             # routed: pidx indexes shard s's own queue;
                             # ring: pidx indexes this dispatch's window
@@ -759,6 +821,46 @@ class StreamScheduler:
                 steps = int(steps)                    # host sync point
             t += steps
             stepped += steps
+            if self.pagestore is not None and steps:
+                # -- tiered-store boundary: fold the chunk's touch/miss
+                # bitmaps into residency, commit the payload staged at
+                # the previous boundary (its device_put overlapped this
+                # chunk's compute), demand-fetch the misses, and stage
+                # the next speculative fetch set; then refresh the
+                # consts view the next dispatch traces against
+                upd = self.pagestore.boundary(
+                    state.page_touch, state.page_miss,
+                    np.asarray(state.cand_i), np.asarray(state.cand_e),
+                    np.asarray(state.done))
+                self.consts.update(upd)
+                pz = jnp.zeros_like(state.page_touch)
+                state = state._replace(page_touch=pz, page_miss=pz)
+                # livelock watch: when one round's page working set
+                # exceeds the cache, every boundary's demand installs
+                # evict pages the same round still needs — fetches
+                # happen (so the store's own no-progress guard never
+                # fires) but the round never completes. A live row
+                # whose round counter is frozen across this many
+                # consecutive boundaries is that configuration error
+                # (a legitimate stall clears at the next boundary's
+                # demand fetch), not a transient.
+                ra = np.asarray(state.rounds)
+                dn = np.asarray(state.done)
+                if self._stall_count is None:
+                    self._stall_count = np.zeros(ra.shape, np.int64)
+                else:
+                    stuck = ~dn & (ra == self._stall_rounds_prev)
+                    self._stall_count = np.where(
+                        stuck, self._stall_count + 1, 0)
+                    if (self._stall_count >= _LIVELOCK_BOUNDARIES).any():
+                        raise RuntimeError(
+                            "tiered page store livelock: a query made "
+                            f"no round progress for {_LIVELOCK_BOUNDARIES}"
+                            " consecutive chunk boundaries — "
+                            "device_pages is smaller than a single "
+                            "round's page working set on its shard; "
+                            "raise --device-pages")
+                self._stall_rounds_prev = ra
             if self.controller is not None:
                 self.controller.store(spec_state)
             live_cnt = np.asarray(live_cnt)[:steps]
@@ -796,7 +898,8 @@ class StreamScheduler:
                         service_rounds=int(rounds[s, r]),
                         n_dist=int(n_dist[s, r]),
                         wall_latency_s=now_wall - admit_wall[s, r],
-                        truncated=bool(trunc[s, r])))
+                        truncated=bool(trunc[s, r]),
+                        stall_rounds=int(age[s, r] - rounds[s, r])))
                     owner[s, r] = INVALID
                 retired += int(fin.sum())
 
@@ -815,7 +918,14 @@ class StreamScheduler:
                             np.ravel(np.asarray(state.items_recv))],
             shed=len(shed_qids),
             truncated=sum(1 for r in results if r.truncated),
-            quarantined=int(np.asarray(state.quarantined).sum()))
+            quarantined=int(np.asarray(state.quarantined).sum()),
+            stalls=sum(r.stall_rounds for r in results),
+            prefetch_hits=(self.pagestore.prefetch_hits
+                           if self.pagestore is not None else 0),
+            prefetch_issued=(self.pagestore.prefetch_issued
+                             if self.pagestore is not None else 0),
+            resident_fraction=(self.pagestore.resident_fraction
+                               if self.pagestore is not None else 1.0))
 
 
 def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
@@ -846,12 +956,29 @@ def _make_controller(params, geom, dynamic_spec, spec_page_w=0.0):
                           page_w=float(spec_page_w))
 
 
+def default_leg_L(n_shard: int, max_degree: int, k: int) -> int:
+    """Routed per-leg candidate-list length from per-shard graph depth.
+
+    A Vamana-style leg converges after roughly the shard graph's
+    greedy-path depth ``log_R(n_shard)`` hops, each hop displacing at
+    most a few frontier entries — so the list needs the k result seats
+    plus headroom proportional to that depth, *independent of the
+    global L the caller tuned for the full graph*. The old default
+    ``max(k, L // R)`` silently moved the pages-vs-recall crossover
+    whenever the shard graphs got deeper (PR 6 caveat); this one tracks
+    the shard size directly. ``--leg-L`` stays the explicit override.
+    """
+    depth = math.ceil(math.log(max(n_shard, 2))
+                      / math.log(max(max_degree, 2)))
+    return k + 2 * depth
+
+
 def stream_search(consts, geom, params, entry, queries,
                   num_slots: int, arrivals=None, mesh=None,
                   dynamic_spec: bool = False, refill: bool = True,
                   round_chunk: int = 1, injit_admit=None,
                   spec_page_w: float = 0.0, ring_capacity: int = 0,
-                  overload: str = "block"):
+                  overload: str = "block", pagestore=None):
     """Convenience wrapper: run the streaming scheduler and return
     (ids (N, k), dists (N, k), StreamStats) in query order.  A query
     shed by the overload policy keeps its INVALID/0 row in the output
@@ -863,7 +990,7 @@ def stream_search(consts, geom, params, entry, queries,
                             round_chunk=round_chunk,
                             injit_admit=injit_admit,
                             ring_capacity=ring_capacity,
-                            overload=overload)
+                            overload=overload, pagestore=pagestore)
     stats = sched.run(queries, arrivals)
     k = params.search.k
     n = np.asarray(queries).shape[0]
@@ -895,7 +1022,9 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
     shard's subgraph (``local_only``) seeded at that shard's own medoid
     (``shard_entries``, as built by ``build_routed_index``), with the
     per-leg candidate list scaled to ``leg_L`` (default
-    ``max(k, L // R)`` so R legs do roughly one fan-out query's work).
+    :func:`default_leg_L` — derived from the per-shard graph depth, so
+    deeper shard graphs don't silently move the pages-vs-recall
+    crossover).
 
     Returns (ids (N, k), dists (N, k), StreamStats) in query order;
     ``stats.results`` holds fused per-query records (``n_dist`` summed
@@ -940,7 +1069,8 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
                 "topr < num_shards needs per-shard entries "
                 "(shard_entries; build_routed_index provides them)")
         targets = np.asarray(router.route(queries, R))
-        lg = int(leg_L) if leg_L else params.search.L // R
+        lg = (int(leg_L) if leg_L
+              else default_leg_L(geom.n // S, geom.max_degree, k))
         leg_params = dataclasses.replace(
             params,
             search=dataclasses.replace(params.search, L=max(k, lg)),
@@ -1014,7 +1144,8 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
                 n_dist=sum(lr.n_dist for lr in legs),
                 wall_latency_s=max(lr.wall_latency_s for lr in legs),
                 truncated=fused < R, legs_fused=fused,
-                coverage=fused / R))
+                coverage=fused / R,
+                stall_rounds=sum(lr.stall_rounds for lr in legs)))
         else:
             # every routed shard down: retire immediately, empty-handed
             results.append(QueryResult(
@@ -1028,5 +1159,6 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
     stats = dataclasses.replace(
         leg_stats, results=results, legs=len(alive_rows),
         truncated=sum(1 for r in results if r.truncated),
-        legs_fused_hist=hist)
+        legs_fused_hist=hist,
+        stalls=sum(r.stall_rounds for r in results))
     return ids, dists, stats

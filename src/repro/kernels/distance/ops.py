@@ -44,15 +44,24 @@ def coalesce_num_tiles(items: int, npages: int, qb: int) -> int:
     """Static (page, tile) grid-step bound after coalescing ``items``
     assignments into per-page query tiles of width ``qb``.
 
-    Each page key contributes ``ceil(c_p / qb)`` tiles, which summed over
-    pages is at most ``floor(items/qb)`` full tiles plus one partial tile
-    per distinct key; the masked-item sentinel adds one more key. Every
-    tile holds at least one assignment, so the count never exceeds
-    ``items`` (the per-item path's grid).
+    Page key p with ``c_p`` assignments packs into ``floor(c_p / qb)``
+    full (dominant-page) tiles plus at most one partial (orphan) tile —
+    ``ceil(c_p / qb)`` tiles, never a second partial. Summed exactly:
+    ``sum_p ceil(c_p/qb) = (items + sum_p r_p) / qb`` with
+    ``r_p = (-c_p) mod qb <= qb - 1`` per distinct key, and at most
+    ``K = min(npages + 1, items)`` distinct keys can be occupied (the
+    masked-item sentinel is the ``+ 1``). Hence the bound
+    ``(items + K * (qb - 1)) // qb`` — tighter at low reuse than the
+    old ``items // qb + K`` (whose ``+ K`` overpays one *full* tile per
+    key instead of one *remainder*), e.g. 124 vs 129 grid steps at
+    (items=1024, npages=64, qb=16). Every tile holds at least one
+    assignment, so the count never exceeds ``items`` (the per-item
+    path's grid).
     """
     if qb <= 0:
         raise ValueError(f"qb must be positive, got {qb}")
-    return max(1, min(items, items // qb + min(npages + 1, items)))
+    K = min(npages + 1, items)
+    return max(1, min(items, (items + K * (qb - 1)) // qb))
 
 
 def coalesced_distance_op(ppage: jax.Array, slot: jax.Array,

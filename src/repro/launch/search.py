@@ -87,7 +87,20 @@ def main(argv=None):
                          "spatially partitioned one)")
     ap.add_argument("--leg-L", type=int, default=0,
                     help="streaming routed: per-leg candidate-list "
-                         "length (0 = L // R, floored at k)")
+                         "length (0 = auto from per-shard graph "
+                         "depth: k + 2*log_deg(n/S))")
+    ap.add_argument("--device-pages", type=int, default=0,
+                    help="streaming: tiered page store — device-"
+                         "resident vector pages per shard, rest cold "
+                         "in host RAM (0 = untiered)")
+    ap.add_argument("--prefetch", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="streaming tiered: speculative prefetch at "
+                         "chunk boundaries (--no-prefetch = "
+                         "demand-only)")
+    ap.add_argument("--prefetch-page-w", type=float, default=1.0,
+                    help="streaming tiered: stored-prefetch-list "
+                         "weight in the prediction score")
     ap.add_argument("--round-chunk", type=int, default=8,
                     help="streaming: engine rounds per device dispatch "
                          "(engine_run_chunk); the host syncs only at "
@@ -207,7 +220,10 @@ def main(argv=None):
                             leg_L=args.leg_L or None,
                             spec_page_w=args.spec_page_w,
                             ring_capacity=args.ring,
-                            overload=args.overload, down_shards=down),
+                            overload=args.overload, down_shards=down,
+                            device_pages=args.device_pages,
+                            prefetch=args.prefetch,
+                            prefetch_page_w=args.prefetch_page_w),
         }
         print(json.dumps(res, indent=1))
         if args.out:

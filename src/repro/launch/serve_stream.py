@@ -71,7 +71,8 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
                   refill=True, round_chunk=8, injit_admit=None,
                   routed=None, topr=0, leg_L=None,
                   spec_page_w=0.0, ring_capacity=0, overload="block",
-                  down_shards=None) -> dict:
+                  down_shards=None, device_pages=0, prefetch=True,
+                  prefetch_page_w=1.0) -> dict:
     """Run one streaming session and build the serving report shared by
     the `search --stream` and `serve_stream` CLIs: Poisson arrivals ->
     scheduler -> recall vs brute force + stream_summary metrics.
@@ -85,8 +86,27 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
     path's device admission queue; ``down_shards`` drops routed legs on
     known-down shards (degraded fusion); deadlines, fault injection and
     the corruption guard ride on ``params``
-    (``deadline_rounds`` / ``faults`` / ``guard_nonfinite``)."""
+    (``deadline_rounds`` / ``faults`` / ``guard_nonfinite``).
+
+    ``device_pages`` > 0 turns on the tiered page store (core/
+    pagestore.py): only that many vector pages per shard stay device-
+    resident, the rest live cold in host RAM and fetch on demand at
+    chunk boundaries — plus double-buffered speculative prefetch when
+    ``prefetch`` is set (``prefetch_page_w`` weighs the stored
+    prefetch lists in the prediction score)."""
     arrivals = poisson_arrivals(arrival_rate, queries.shape[0], seed)
+    pagestore = None
+    if device_pages > 0:
+        if routed is not None and topr > 0:
+            raise SystemExit("--device-pages needs the flat path "
+                             "(tiered store is not routed-aware)")
+        import dataclasses as _dc
+
+        from repro.core.pagestore import PageStore
+        pagestore = PageStore(
+            consts, geom, device_pages, w_select=params.search.W,
+            prefetch=prefetch, page_w=prefetch_page_w)
+        params = _dc.replace(params, store_pages=pagestore.num_pages)
     if routed is not None and topr > 0:
         from repro.core.scheduler import routed_stream_search
         ids, _, st = routed_stream_search(
@@ -102,7 +122,7 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
             arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
             round_chunk=round_chunk, injit_admit=injit_admit,
             spec_page_w=spec_page_w, ring_capacity=ring_capacity,
-            overload=overload)
+            overload=overload, pagestore=pagestore)
     k = params.search.k
     true_ids, _ = brute_force_topk(db, queries, k)
     return {
@@ -112,6 +132,7 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
         "round_chunk": round_chunk, "topr": topr,
         "deadline_rounds": params.deadline_rounds,
         "ring": ring_capacity, "overload": overload,
+        "device_pages": (pagestore.P_dev if pagestore else 0),
         "nan_guard": params.guard_nonfinite,
         "faults": params.faults is not None,
         "down_shards": sorted(int(s) for s in (down_shards or [])),
@@ -156,7 +177,22 @@ def main(argv=None):
                          "partitioned index instead of the striped one)")
     ap.add_argument("--leg-L", type=int, default=0,
                     help="routed: per-leg candidate-list length "
-                         "(0 = L // R, floored at k)")
+                         "(0 = auto from per-shard graph depth: "
+                         "k + 2*log_deg(n/S))")
+    ap.add_argument("--device-pages", type=int, default=0,
+                    help="tiered page store: device-resident vector "
+                         "pages per shard; the rest live cold in host "
+                         "RAM and fetch at chunk boundaries "
+                         "(0 = fully device-resident, untiered)")
+    ap.add_argument("--prefetch", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="tiered: double-buffered speculative prefetch "
+                         "at chunk boundaries (--no-prefetch = "
+                         "demand-only fetching)")
+    ap.add_argument("--prefetch-page-w", type=float, default=1.0,
+                    help="tiered: weight of the stored speculative "
+                         "prefetch lists in the prediction score "
+                         "(adjacency neighbors weigh 1)")
     ap.add_argument("--no-refill", action="store_true",
                     help="frozen-batch discipline (baseline): admit "
                          "only into an all-free pool")
@@ -269,7 +305,10 @@ def main(argv=None):
                         leg_L=args.leg_L or None,
                         spec_page_w=args.spec_page_w,
                         ring_capacity=args.ring, overload=args.overload,
-                        down_shards=down),
+                        down_shards=down,
+                        device_pages=args.device_pages,
+                        prefetch=args.prefetch,
+                        prefetch_page_w=args.prefetch_page_w),
     }
     print(json.dumps(res, indent=1))
     if args.out:

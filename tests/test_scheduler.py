@@ -452,6 +452,99 @@ def test_stream_summary_covers_stats_fields(ds):
     assert summ["shed"] == 0 and summ["truncated"] == 0
     assert summ["quarantined"] == 0 and summ["legs_fused_hist"] == []
     assert summ["goodput"] == 1.0
+    # tiered-page-store counters joined the frozen contract: an
+    # untiered run reports them at rest (fully resident, no stalls)
+    assert summ["stalls"] == 0 and summ["stall_rounds_per_query"] == 0.0
+    assert summ["prefetch_hits"] == 0 and summ["prefetch_issued"] == 0
+    assert summ["prefetch_hit_rate"] == 0.0
+    assert summ["resident_fraction"] == 1.0
+
+
+def test_goodput_counts_each_query_once():
+    """Goodput regression: a query that is both truncated and had
+    quarantined distances is still exactly one non-clean retirement —
+    `truncated` is a per-result flag and `quarantined` counts corrupt
+    distance lanes, so neither can double-count a query in the goodput
+    denominator (retired clean / offered, offered = retired + shed)."""
+    import dataclasses
+
+    from repro.core.metrics import stream_summary
+    from repro.core.scheduler import QueryResult, StreamStats
+
+    def qr(qid, truncated):
+        return QueryResult(
+            qid=qid, ids=np.zeros(4, np.int32),
+            dists=np.zeros(4, np.float32), arrival_round=0,
+            admit_round=0, retire_round=5, service_rounds=5, n_dist=10,
+            wall_latency_s=0.1, truncated=truncated)
+
+    # 4 retired (1 truncated — the same query also tripped the
+    # quarantine guard twice) + 2 shed: offered = 6, clean = 3
+    st = StreamStats(
+        results=[qr(0, False), qr(1, True), qr(2, False), qr(3, False)],
+        total_rounds=10, occupancy=0.5, occupancy_trace=[],
+        pages_unique=1, items_recv=1, props_sent=1, drops_b=0,
+        spec_trace=[], wall_s=1.0, shed=2, truncated=1, quarantined=2)
+    summ = stream_summary(st)
+    assert summ["goodput"] == round(3 / 6, 4)
+    # quarantined distances never enter the denominator: only
+    # retirement (once per query) and shed do
+    st2 = dataclasses.replace(st, quarantined=10**6)
+    assert stream_summary(st2)["goodput"] == summ["goodput"]
+
+
+def test_default_leg_l_tracks_shard_depth():
+    """The routed per-leg list length derives from per-shard graph
+    depth (k + 2*ceil(log_deg n_shard)) — monotone in shard size,
+    shrinking in graph degree, independent of the global L."""
+    from repro.core.scheduler import default_leg_L
+
+    assert default_leg_L(128, 8, 8) == 8 + 2 * 3
+    assert default_leg_L(256, 16, 10) == 10 + 2 * 2
+    # monotone non-decreasing in n_shard at fixed degree/k
+    vals = [default_leg_L(n, 8, 8) for n in (2, 64, 512, 4096, 2**15)]
+    assert vals == sorted(vals)
+    # deeper graphs (smaller degree) need longer lists
+    assert default_leg_L(4096, 4, 8) > default_leg_L(4096, 32, 8)
+    # degenerate sizes stay sane: at least k result seats + headroom
+    assert default_leg_L(1, 2, 5) >= 5
+    assert default_leg_L(1, 1, 5) >= 5
+
+
+def test_routed_leg_l_override_wins(ds):
+    """An explicit leg_L must override the auto default: the two runs
+    differ observably (per-leg list length bounds n_dist), and the
+    explicit value reproduces itself bit for bit."""
+    from repro.core.router import build_routed_index
+    from repro.core.scheduler import routed_stream_search
+
+    rng = np.random.default_rng(3)
+    n, d, S = 512, 16, 4
+    db = rng.standard_normal((n, d)).astype(np.float32)
+    queries = rng.standard_normal((6, d)).astype(np.float32)
+    ri = build_routed_index(db, shards=S, page_size=16, r=8, seed=0)
+    consts, geom, entry = pack_for_engine(ri.packed)
+    sp = SearchParams(L=16, W=1, k=4)
+    params = EngineParams.lossless(sp, 2, ri.packed.max_degree)
+
+    def run(leg_l):
+        ids, dists, st = routed_stream_search(
+            consts, geom, params, entry, queries, router=ri.router,
+            topr=2, num_slots=2, shard_entries=ri.shard_entries,
+            leg_L=leg_l)
+        return (np.asarray(ids), np.asarray(dists),
+                sum(r.n_dist for r in st.results))
+
+    auto_i, auto_d, auto_nd = run(None)
+    big_i, big_d, big_nd = run(16)
+    # the override took effect: a 16-entry leg list does strictly more
+    # distance work than the auto default (k + 2*depth < 16 here)
+    assert big_nd > auto_nd
+    # and the explicit value is reproducible
+    again_i, again_d, again_nd = run(16)
+    np.testing.assert_array_equal(big_i, again_i)
+    np.testing.assert_array_equal(big_d, again_d)
+    assert big_nd == again_nd
 
 
 def test_poisson_arrivals_rounds_half_up():
