@@ -335,6 +335,60 @@ def tiered_leg(*, kernel_mode, seed, smoke):
     }
 
 
+def compile_guard_leg(*, kernel_mode, seed, smoke):
+    """One-warmup-compile gate (analysis layer 3): a fresh serving
+    session — multi-chunk, ring-bounded admission, half-resident tiered
+    store, every consts view swapped at every boundary — must dispatch
+    against exactly one ``engine_run_chunk_admit`` compilation: the
+    warmup's.  Workload shapes are unique to this leg (d=40) so the
+    process-wide jit cache cannot have pre-warmed the signature and
+    cannot mask a recompile either way."""
+    from repro.analysis.compile_guard import CompileGuard
+    from repro.core.pagestore import PageStore
+    from repro.launch.search import build_index
+
+    n, d, nq, shards = 1024, 40, 24, 2
+    page_size, slots, K, ring = 8, 3, 2, 6
+    ds = VectorDataset("guard-bench", n=n, dim=d, clusters=8, seed=seed)
+    queries = ds.queries(nq, seed=seed + 1)
+    _, packed = build_index(ds.materialize(), shards=shards,
+                            page_size=page_size, r=8, pref_width=2,
+                            seed=seed)
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=12, W=1, k=8)
+    params = EngineParams.lossless(sp, slots, packed.max_degree,
+                                   spec_width=2, kernel_mode=kernel_mode)
+    NP = consts["db"].shape[1]
+    params = dataclasses.replace(params, store_pages=NP)
+    ps = PageStore(consts, geom, max(1, NP // 2), w_select=sp.W)
+    arrivals = poisson_arrivals(0.5, nq, seed + 3)
+    with CompileGuard() as cg:
+        _, _, st = stream_search(consts, geom, params, entry, queries,
+                                 num_slots=slots, round_chunk=K,
+                                 arrivals=arrivals, injit_admit=True,
+                                 ring_capacity=ring, pagestore=ps)
+    n_compiles = cg.count("engine_run_chunk_admit")
+    row = {"stepper_compiles": n_compiles,
+           "host_dispatches": st.host_dispatches,
+           "compile_s": round(st.compile_s, 3),
+           "resident_fraction": round(ps.resident_fraction, 4)}
+    emit([[n_compiles, st.host_dispatches, row["compile_s"],
+           row["resident_fraction"], ring]],
+         ["stepper_compiles", "dispatches", "compile_s", "resident",
+          "ring"],
+         "compile guard (one warmup compile covers every dispatch)")
+    if smoke:
+        assert st.host_dispatches > 1, (
+            "guard leg degenerated to a single dispatch; the claim "
+            "needs a multi-chunk session")
+        assert n_compiles == 1, (
+            "one warmup compile must cover every dispatch of the "
+            f"session: saw {n_compiles} engine_run_chunk_admit "
+            f"compilations over {st.host_dispatches} dispatches: "
+            f"{[x for x in cg.names if 'chunk' in x]}")
+    return row
+
+
 def chaos_leg(*, n, d, nq, page_size, r, L, k, kernel_mode, seed,
               smoke):
     """Overload + fault chaos sweep on an 8-shard workload (the
@@ -615,6 +669,11 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
     tiered_rows, tiered_checks = tiered_leg(
         kernel_mode=kernel_mode, seed=seed, smoke=smoke)
 
+    # compile guard: machine-check that one warmup compile covers every
+    # dispatch of a ring + tiered serving session (analysis layer 3)
+    guard_row = compile_guard_leg(kernel_mode=kernel_mode, seed=seed,
+                                  smoke=smoke)
+
     # chaos sweep: overload shedding/backpressure against the bounded
     # admission ring, a mid-run shard kill under a deadline, corrupted
     # page reads behind the guard, and the armed-but-idle identity gate
@@ -703,6 +762,8 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         checks["routed_r2_recall_delta"] = round(
             r2["recall"] - fo["recall"], 4)
     checks.update(tiered_checks)
+    checks["compile_guard_stepper_compiles"] = guard_row[
+        "stepper_compiles"]
     results = {
         "config": {"nq": nq, "n": n, "d": d, "shards": shards,
                    "slots": slots, "rate": rate, "spec_max": spec_max,
@@ -720,6 +781,7 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
                                   chunk_shard_hostadm},
         "routed_sweep": routed_rows,
         "tiered_sweep": tiered_rows,
+        "compile_guard": guard_row,
         "chaos": chaos_rows,
         "checks": checks,
     }

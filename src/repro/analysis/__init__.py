@@ -1,0 +1,23 @@
+"""Trace-discipline analysis suite.
+
+Three layers, one discipline: the host stays off the critical path.
+
+- ``analysis.lint`` (layer 1): AST linter with repo-specific rules
+  NDS001-NDS005 catching host/device mixing, traced branching, implicit
+  syncs, device math in host-only modules and jit static-arg hazards.
+- ``analysis.jaxpr_audit`` (layer 2): traces the jitted steppers to
+  closed jaxprs and checks structural invariants (no callbacks, no
+  float64, donation honored) plus a primitive-count snapshot committed
+  as ``ANALYSIS_baseline.json``.
+- ``analysis.compile_guard`` (layer 3): a ``CompileGuard`` context
+  manager counting XLA compilations, used to machine-check that one
+  warmup compile covers every dispatch of a serving session.
+
+CLI: ``python -m repro.analysis lint src/`` and
+``python -m repro.analysis audit``.
+
+This package deliberately keeps layer 1 import-light (pure ``ast``, no
+jax) so linting stays fast; jax is imported only by the audit layers.
+"""
+
+__all__ = ["lint", "jaxpr_audit", "compile_guard"]

@@ -1,0 +1,63 @@
+"""CLI for the trace-discipline suite.
+
+  python -m repro.analysis lint src/              # layer 1 (fast, no jax)
+  python -m repro.analysis audit                  # layer 2 (traces steppers)
+  python -m repro.analysis audit --update         # refresh the snapshot
+
+Baselines default to the repo root (found relative to this package when
+not running from a checkout root): ``ANALYSIS_lint_baseline.json`` for
+lint suppressions, ``ANALYSIS_baseline.json`` for the jaxpr snapshot.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+LINT_BASELINE = "ANALYSIS_lint_baseline.json"
+AUDIT_BASELINE = "ANALYSIS_baseline.json"
+
+
+def _default_baseline(name: str) -> Path:
+    cwd = Path.cwd() / name
+    if cwd.exists():
+        return cwd
+    # src/repro/analysis/__main__.py -> repo root is parents[3]
+    root = Path(__file__).resolve().parents[3] / name
+    return root if root.exists() else cwd
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trace-discipline lint / jaxpr audit / compile guard")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    lp = sub.add_parser("lint", help="AST lint (NDS001-NDS005)")
+    lp.add_argument("paths", nargs="+")
+    lp.add_argument("--baseline", default=None,
+                    help=f"suppression baseline (default: {LINT_BASELINE})")
+    lp.add_argument("--no-baseline", action="store_true",
+                    help="show all findings, ignoring the baseline")
+
+    ap = sub.add_parser("audit", help="jaxpr structural audit")
+    ap.add_argument("--baseline", default=None,
+                    help=f"snapshot baseline (default: {AUDIT_BASELINE})")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the snapshot from the current tree")
+
+    args = p.parse_args(argv)
+    if args.cmd == "lint":
+        from repro.analysis.lint import run_lint
+        baseline = args.baseline or _default_baseline(LINT_BASELINE)
+        return run_lint(args.paths, baseline_path=baseline,
+                        show_all=args.no_baseline)
+    if args.cmd == "audit":
+        from repro.analysis.jaxpr_audit import run_audit
+        baseline = args.baseline or _default_baseline(AUDIT_BASELINE)
+        return run_audit(baseline, update=args.update)
+    return 2  # pragma: no cover
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,287 @@
+"""Layer 2: structural audit of the jitted steppers' closed jaxprs.
+
+Traces every public stepper over a tiny but real index (built with the
+repo's own Vamana/LUN-CSR builders, so the traced program is the
+production program) and checks the invariants the serving model rests
+on:
+
+- **no host callbacks** on the chunk hot path: ``pure_callback`` /
+  ``io_callback`` / ``debug_callback`` primitives would re-enter Python
+  mid-chunk;
+- **no float64**: no f64 avals anywhere in the jaxpr and no
+  ``convert_element_type`` to f64 (the PR 5 lowering-divergence class,
+  pinned from the dtype side);
+- **donation honored**: the pagestore's ``_scatter_frames`` donates its
+  frame buffers (``donate_argnums=(0, 1)``) — the lowered computation
+  must carry the input/output aliasing, else every residency swap pays
+  a full frame-buffer copy;
+- **primitive-count snapshot**: the per-stepper primitive histogram is
+  committed as ``ANALYSIS_baseline.json`` so hot-loop growth is a
+  reviewed diff, not a surprise.  Counts are compared strictly when the
+  running jax version matches the baseline's; on a version mismatch a
+  drift downgrades to a warning (jax is free to re-lower), while the
+  structural invariants above stay strict.
+
+Run via ``python -m repro.analysis audit`` (``--update`` refreshes the
+baseline).
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+
+import numpy as np
+
+FORBIDDEN_PRIMITIVES = {
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call",
+}
+
+# Tiny problem: small enough to trace in seconds, big enough that every
+# stage (speculation, paging, admission) is structurally present.
+TINY = dict(n=256, d=16, S=2, page=8, slots=2, k=4, L=8, W=1,
+            spec_width=2, max_degree=6, K=4, pend=4)
+
+
+def build_tiny_problem():
+    """A real packed index + engine params at toy scale."""
+    import jax.numpy as jnp
+    from repro.core.engine import EngineParams, engine_init, pack_for_engine
+    from repro.core.graph import build_vamana
+    from repro.core.luncsr import Geometry, LUNCSR, pack_index
+    from repro.core.ref_search import SearchParams
+    from repro.core.scheduler import _make_controller
+
+    t = TINY
+    rng = np.random.default_rng(0)
+    db = rng.integers(-8, 9, size=(t["n"], t["d"])).astype(np.float32)
+    adj, medoid = build_vamana(db, r=t["max_degree"], alpha=1.2, seed=0)
+    geo = Geometry(num_shards=t["S"], page_size=t["page"],
+                   pages_per_block=2, dim=t["d"])
+    index = LUNCSR.from_adjacency(db, adj, geo, entry=medoid, pref_width=2)
+    packed = pack_index(index, max_degree=t["max_degree"])
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=t["L"], W=t["W"], k=t["k"])
+    params = EngineParams.lossless(sp, t["slots"], geom.max_degree,
+                                   spec_width=t["spec_width"])
+    S, Qs, d = t["S"], t["slots"], t["d"]
+    queries = jnp.asarray(
+        rng.integers(-8, 9, size=(S, Qs, d)).astype(np.float32))
+    state = engine_init(consts, queries, *entry, params=params, geom=geom)
+    ctrl = _make_controller(params, geom, dynamic_spec=True)
+    ctrl._ensure((S, Qs))
+    return dict(consts=consts, geom=geom, entry=entry, params=params,
+                queries=queries, state=state, spec_state=ctrl.state(),
+                spec_cfg=ctrl.cfg)
+
+
+def _pend_args(prob, per_shard=False):
+    import jax.numpy as jnp
+    t = TINY
+    d, S, cap = t["d"], t["S"], t["pend"]
+    if per_shard:
+        return (jnp.zeros((S, cap, d), jnp.float32),
+                jnp.zeros((S, cap), jnp.int32),
+                jnp.zeros((S,), jnp.int32))
+    return (jnp.zeros((cap, d), jnp.float32),
+            jnp.zeros((cap,), jnp.int32),
+            jnp.int32(0))
+
+
+def _per_shard_entry(prob):
+    import jax.numpy as jnp
+    ev, en, ei = prob["entry"]
+    S = TINY["S"]
+    return (jnp.broadcast_to(jnp.asarray(ev), (S,) + jnp.shape(ev)),
+            jnp.broadcast_to(jnp.asarray(en), (S,)),
+            jnp.broadcast_to(jnp.asarray(ei), (S,)))
+
+
+def trace_steppers(prob=None):
+    """name -> {"traced": jax.stages.Traced, "lowered_text": str|None}."""
+    import dataclasses
+
+    import jax.numpy as jnp
+    from repro.core import engine
+    from repro.core.pagestore import PageStore, _scatter_frames
+
+    prob = prob or build_tiny_problem()
+    p, g = prob["params"], prob["geom"]
+    base = (prob["consts"], prob["state"], prob["queries"],
+            prob["spec_state"], prob["spec_cfg"], TINY["K"])
+    out = {}
+
+    tr = engine.engine_run_chunk.trace(
+        *base, True, params=p, geom=g, K=TINY["K"], dynamic=True)
+    out["run_chunk"] = {"traced": tr, "lowered_text": None}
+
+    pend = _pend_args(prob)
+    tr = engine.engine_run_chunk_admit.trace(
+        *base, *pend, 0, *prob["entry"],
+        params=p, geom=g, K=TINY["K"], dynamic=True)
+    out["run_chunk_admit"] = {"traced": tr, "lowered_text": None}
+
+    pend = _pend_args(prob, per_shard=True)
+    tr = engine.engine_run_chunk_admit.trace(
+        *base, *pend, 0, *_per_shard_entry(prob),
+        params=p, geom=g, K=TINY["K"], dynamic=True)
+    out["run_chunk_admit_routed"] = {"traced": tr, "lowered_text": None}
+
+    # Tiered leg: consts carry the frame buffer + translation table.
+    NP = prob["consts"]["db"].shape[1]
+    ps = PageStore(prob["consts"], g, NP, w_select=1)
+    tiered_params = dataclasses.replace(p, store_pages=NP)
+    tiered_consts = {**prob["consts"], **ps.device_view()}
+    tiered_state = engine.engine_init(
+        tiered_consts, prob["queries"], *prob["entry"],
+        params=tiered_params, geom=g)
+    tr = engine.engine_run_chunk_admit.trace(
+        tiered_consts, tiered_state, prob["queries"], prob["spec_state"],
+        prob["spec_cfg"], TINY["K"], *_pend_args(prob), 0, *prob["entry"],
+        params=tiered_params, geom=g, K=TINY["K"], dynamic=True)
+    out["run_chunk_admit_tiered"] = {"traced": tr, "lowered_text": None}
+
+    # Pagestore commit/stage scatter: donated frame buffers.
+    M = 4
+    sidx = jnp.zeros((M,), jnp.int32)
+    fidx = jnp.zeros((M,), jnp.int32)
+    pay_db = jnp.zeros((M,) + ps.frames.shape[2:], ps.frames.dtype)
+    pay_vn = jnp.zeros((M,) + ps.vnf.shape[2:], ps.vnf.dtype)
+    args = (ps.frames, ps.vnf, sidx, fidx, pay_db, pay_vn)
+    tr = _scatter_frames.trace(*args, pdev=ps.P_dev)
+    low = _scatter_frames.lower(*args, pdev=ps.P_dev).as_text()
+    out["scatter_frames"] = {"traced": tr, "lowered_text": low}
+    return out
+
+
+def _walk_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for p in eqn.params.values():
+            subs = p if isinstance(p, (list, tuple)) else [p]
+            for sub in subs:
+                inner = getattr(sub, "jaxpr", None)
+                if hasattr(sub, "eqns"):
+                    yield from _walk_eqns(sub)
+                elif inner is not None and hasattr(inner, "eqns"):
+                    yield from _walk_eqns(inner)
+
+
+def audit_stepper(traced):
+    """Histogram + invariant scan of one traced stepper."""
+    jaxpr = traced.jaxpr.jaxpr
+    prims = Counter()
+    callbacks, f64 = [], []
+    for eqn in _walk_eqns(jaxpr):
+        name = eqn.primitive.name
+        prims[name] += 1
+        if name in FORBIDDEN_PRIMITIVES:
+            callbacks.append(name)
+        if name == "convert_element_type" and \
+                str(eqn.params.get("new_dtype", "")) == "float64":
+            f64.append(f"{name} -> float64")
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if str(getattr(aval, "dtype", "")) == "float64":
+                f64.append(f"{name}: f64 aval")
+    return {"primitives": dict(sorted(prims.items())),
+            "total": sum(prims.values()),
+            "callbacks": callbacks,
+            "f64": f64}
+
+
+def collect_report(prob=None):
+    """Full audit report over every stepper."""
+    import jax
+    specs = trace_steppers(prob)
+    steppers = {}
+    for name, spec in specs.items():
+        steppers[name] = audit_stepper(spec["traced"])
+    aliases = specs["scatter_frames"]["lowered_text"].count(
+        "tf.aliasing_output")
+    return {"jax_version": jax.__version__,
+            "problem": dict(TINY),
+            "steppers": steppers,
+            "invariants": {"scatter_donation_aliases": aliases}}
+
+
+def baseline_payload(report):
+    """The committed subset: drop volatile fields, keep the snapshot."""
+    return {
+        "jax_version": report["jax_version"],
+        "problem": report["problem"],
+        "steppers": {
+            name: {"total": s["total"], "primitives": s["primitives"]}
+            for name, s in report["steppers"].items()},
+        "invariants": report["invariants"],
+    }
+
+
+def run_audit(baseline_path, update=False, out=None) -> int:
+    """CLI body: returns the process exit code."""
+    import sys
+    out = out or sys.stdout
+    report = collect_report()
+    ok = True
+
+    for name, s in report["steppers"].items():
+        if s["callbacks"]:
+            ok = False
+            print(f"FAIL {name}: host callback primitives on the hot "
+                  f"path: {s['callbacks']}", file=out)
+        if s["f64"]:
+            ok = False
+            print(f"FAIL {name}: float64 leaked into the stepper: "
+                  f"{sorted(set(s['f64']))[:5]}", file=out)
+    if report["invariants"]["scatter_donation_aliases"] < 2:
+        ok = False
+        print("FAIL scatter_frames: donated frame buffers lost their "
+              "input/output aliasing in the lowered computation", file=out)
+
+    path = Path(baseline_path)
+    if update:
+        if ok:
+            path.write_text(json.dumps(baseline_payload(report), indent=2,
+                                       sort_keys=True) + "\n")
+            print(f"baseline written: {path}", file=out)
+        else:
+            print("refusing to write a baseline from a failing audit",
+                  file=out)
+        return 0 if ok else 1
+
+    if not path.exists():
+        ok = False
+        print(f"FAIL: baseline {path} missing "
+              f"(run `python -m repro.analysis audit --update`)", file=out)
+    else:
+        base = json.loads(path.read_text())
+        import jax
+        same_jax = base.get("jax_version") == jax.__version__
+        cur = baseline_payload(report)
+        for name in sorted(set(base["steppers"]) | set(cur["steppers"])):
+            b = base["steppers"].get(name)
+            c = cur["steppers"].get(name)
+            if b is None or c is None:
+                ok = False
+                print(f"FAIL: stepper set changed: {name} "
+                      f"{'added' if b is None else 'removed'}", file=out)
+                continue
+            if b["primitives"] != c["primitives"]:
+                drift = {
+                    k: (b["primitives"].get(k, 0), c["primitives"].get(k, 0))
+                    for k in set(b["primitives"]) | set(c["primitives"])
+                    if b["primitives"].get(k, 0) != c["primitives"].get(k, 0)}
+                msg = (f"{name}: primitive counts drifted from baseline "
+                       f"(total {b['total']} -> {c['total']}): {drift}")
+                if same_jax:
+                    ok = False
+                    print(f"FAIL {msg}", file=out)
+                else:
+                    print(f"WARN {msg} [jax "
+                          f"{base.get('jax_version')} -> {jax.__version__}, "
+                          "count drift downgraded to warning]", file=out)
+    if ok:
+        print("OK: jaxpr audit passed "
+              f"({len(report['steppers'])} steppers)", file=out)
+    return 0 if ok else 1

@@ -1,0 +1,808 @@
+"""Layer 1: AST linter for the repo's trace-discipline rules.
+
+Rules (NDS = near-data search):
+
+- NDS001  host value mixed with a traced/device value in arithmetic or
+          comparison.  The PR 8 bug class: comparing a host numpy array
+          against a device scalar (``ID_SENTINEL``) silently promotes
+          the whole host predictor to traced jax ops.  Fires in
+          hot-path modules and in jit-reachable functions.
+- NDS002  Python ``if``/``while``/``for`` driven by a traced value
+          inside a jit-reachable function.  Traced control flow must go
+          through ``lax.cond``/``lax.while_loop``/``jnp.where``.
+- NDS003  implicit device sync inside a hot-path module: ``.item()`` /
+          ``.tolist()`` on a device value, ``int()``/``float()``/
+          ``bool()`` casts of device values, ``np.asarray``/``np.array``
+          on device values, or host branching on a device value.  The
+          sanctioned sync primitive is an explicit ``jax.device_get``
+          (one batched transfer per chunk boundary), which this rule
+          never flags.
+- NDS004  device math (``jnp.*`` / compute-side ``jax.*``) in a
+          designated host-only module or ``# nds: host-only`` function.
+          Host-only code (metrics, restart, launch plumbing) must stay
+          pure numpy so importing it never touches a device.
+- NDS005  jit static-argument hazards: mutable default arguments on
+          jitted / jit-reachable functions, and ``static_argnames``
+          entries that name no parameter of the jitted function.
+
+Scope is decided per module by path (see ``HOT_PATH_KEYS`` /
+``HOST_ONLY_KEYS``) or by in-file markers so fixture modules in tests
+can opt in: ``# nds: hot-path-module`` / ``# nds: host-only-module``
+anywhere in the file, ``# nds: host-only`` on a ``def`` line.
+
+Suppressions live in a committed baseline (``ANALYSIS_lint_baseline
+.json``) keyed by (file, rule, function, source text) -- line-number
+independent -- and every entry carries a one-line justification.
+
+This module imports no jax: it must stay cheap enough to run on every
+CI push and in editor hooks.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+RULES = {
+    "NDS001": "host value mixed with traced/device value in arithmetic",
+    "NDS002": "Python control flow on a traced value in jit-reachable code",
+    "NDS003": "implicit device sync in a hot-path module",
+    "NDS004": "device math in a host-only module/function",
+    "NDS005": "jit static-argument hazard (mutable default / bad static name)",
+}
+
+# Module classification by normalized key (path from the last "repro"
+# component).  Markers extend these sets for out-of-tree fixtures.
+HOT_PATH_KEYS = {
+    "repro/core/engine.py",
+    "repro/core/scheduler.py",
+    "repro/core/pagestore.py",
+    "repro/core/backend.py",
+    "repro/core/dispatch.py",
+    "repro/core/traversal.py",
+}
+HOST_ONLY_KEYS = {
+    "repro/core/metrics.py",
+    "repro/ft/restart.py",
+    "repro/launch/serve_stream.py",
+    "repro/launch/mesh.py",
+    "repro/launch/hloanalysis.py",
+    "repro/launch/search.py",
+}
+
+# jax.* attributes that are host-side plumbing, fine in host-only code.
+HOST_OK_JAX_ATTRS = {
+    "device_get", "device_put", "devices", "device_count",
+    "local_device_count", "process_index", "process_count", "config",
+    "block_until_ready", "make_mesh", "clear_caches", "tree_util",
+    "tree", "sharding", "Device", "distributed", "default_backend",
+}
+
+# Parameters of jit-root functions that are static by convention when
+# no static_argnames declaration is visible (HOF roots: vmapped or
+# lax-loop bodies, where the binding site is out of reach).
+STATIC_PARAM_NAMES = {
+    "self", "params", "geom", "sp", "cfg", "mesh", "axis_name",
+    "backend", "mode", "pdev", "dynamic", "routed", "K", "k",
+    "page_size", "opts",
+}
+
+SYNC_METHODS = {"item", "tolist"}
+CAST_BUILTINS = {"int", "float", "bool", "complex"}
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+# Names that, when called, hand back a traced/device value.
+JAX_HOF_NAMES = {
+    "jit", "vmap", "pmap", "grad", "value_and_grad", "checkpoint",
+    "remat", "while_loop", "scan", "cond", "fori_loop", "switch",
+    "shard_map", "custom_vjp", "custom_jvp", "named_call",
+}
+
+# Tag lattice for the per-function value classifier.
+DEVICE, HOST, STATIC, UNKNOWN = "device", "host", "static", "unknown"
+
+
+def normalize_key(path) -> str:
+    """Stable module key: the posix path from the last ``repro`` part.
+
+    Keys survive copying the tree somewhere else (tests copy ``src/``
+    into a tmp dir and seed violations), so baseline entries keep
+    matching.
+    """
+    parts = Path(path).as_posix().split("/")
+    for i in range(len(parts) - 1, -1, -1):
+        if parts[i] == "repro":
+            return "/".join(parts[i:])
+    return "/".join(parts[-2:]) if len(parts) >= 2 else parts[-1]
+
+
+@dataclass
+class Finding:
+    path: str
+    key: str
+    rule: str
+    line: int
+    func: str
+    text: str
+
+    @property
+    def suppression_key(self):
+        return (self.key, self.rule, self.func, self.text)
+
+    def render(self):
+        return (f"{self.path}:{self.line}: {self.rule} [{self.func}] "
+                f"{RULES[self.rule]}\n    {self.text}")
+
+
+@dataclass
+class FuncInfo:
+    qualname: str
+    node: ast.AST  # FunctionDef | AsyncFunctionDef
+    module: "ModuleInfo"
+    parent: Optional[str] = None          # enclosing function qualname
+    jit_root: bool = False                # direct jit decorator
+    hof_root: bool = False                # referenced inside jit/vmap/lax HOF
+    static_params: set = field(default_factory=set)
+    host_only: bool = False               # "# nds: host-only" on def line
+    reachable: bool = False
+
+
+@dataclass
+class ModuleInfo:
+    path: str
+    key: str
+    tree: ast.Module
+    lines: list
+    aliases: dict = field(default_factory=dict)       # local name -> module
+    from_imports: dict = field(default_factory=dict)  # name -> (module, orig)
+    device_consts: set = field(default_factory=set)
+    static_consts: set = field(default_factory=set)
+    funcs: dict = field(default_factory=dict)         # qualname -> FuncInfo
+    traced_refs: set = field(default_factory=set)     # names inside HOF calls
+    hot_path: bool = False
+    host_only: bool = False
+
+
+def _line_text(mod: ModuleInfo, lineno: int) -> str:
+    if 1 <= lineno <= len(mod.lines):
+        return mod.lines[lineno - 1].strip()
+    return ""
+
+
+def _dotted(node, aliases) -> Optional[str]:
+    """Resolve an attribute chain to a dotted module path, or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = aliases.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def _is_jax_dotted(dotted: Optional[str]) -> bool:
+    return bool(dotted) and (
+        dotted.startswith("jax.") or dotted == "jax")
+
+
+def _is_numpy_dotted(dotted: Optional[str]) -> bool:
+    return bool(dotted) and (
+        dotted.startswith("numpy.") or dotted == "numpy")
+
+
+def _mutable_default(node) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call):
+        fn = node.func
+        name = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else "")
+        return name in {"list", "dict", "set", "bytearray", "array",
+                        "asarray", "zeros", "ones", "empty"}
+    return False
+
+
+def _decorator_jit(dec, aliases):
+    """Return static param names if `dec` makes the function a jit root."""
+    # @jax.jit / @jit
+    if _dotted(dec, aliases) in ("jax.jit", "jit"):
+        return set()
+    if isinstance(dec, ast.Call):
+        fn_dotted = _dotted(dec.func, aliases)
+        inner = None
+        if fn_dotted in ("jax.jit", "jit"):
+            inner = dec
+        elif fn_dotted in ("functools.partial", "partial") and dec.args and \
+                _dotted(dec.args[0], aliases) in ("jax.jit", "jit"):
+            inner = dec
+        if inner is not None:
+            statics = set()
+            for kw in inner.keywords:
+                if kw.arg == "static_argnames":
+                    for sub in ast.walk(kw.value):
+                        if isinstance(sub, ast.Constant) and \
+                                isinstance(sub.value, str):
+                            statics.add(sub.value)
+            return statics
+    return None
+
+
+def _collect_module(path) -> Optional[ModuleInfo]:
+    src = Path(path).read_text()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError:
+        return None
+    key = normalize_key(path)
+    mod = ModuleInfo(path=str(path), key=key, tree=tree,
+                     lines=src.splitlines())
+    joined = src
+    mod.hot_path = key in HOT_PATH_KEYS or "# nds: hot-path-module" in joined
+    mod.host_only = key in HOST_ONLY_KEYS or \
+        "# nds: host-only-module" in joined
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                mod.aliases[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                mod.from_imports[a.asname or a.name] = (node.module, a.name)
+
+    # Module-level constants: NAME = jnp.*(...) -> device; literal -> static.
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                isinstance(stmt.targets[0], ast.Name):
+            name = stmt.targets[0].id
+            v = stmt.value
+            if isinstance(v, ast.Call) and \
+                    _is_jax_dotted(_dotted(v.func, mod.aliases)):
+                mod.device_consts.add(name)
+            elif all(isinstance(n, (ast.Constant, ast.BinOp, ast.UnaryOp,
+                                    ast.Tuple, ast.operator, ast.unaryop,
+                                    ast.expr_context))
+                     for n in ast.walk(v)):
+                mod.static_consts.add(name)
+
+    def add_func(node, prefix, parent):
+        qual = f"{prefix}{node.name}" if prefix else node.name
+        statics = None
+        for dec in node.decorator_list:
+            s = _decorator_jit(dec, mod.aliases)
+            if s is not None:
+                statics = s if statics is None else statics | s
+        def_text = _line_text(mod, node.lineno)
+        fi = FuncInfo(qualname=qual, node=node, module=mod, parent=parent,
+                      jit_root=statics is not None,
+                      static_params=statics or set(),
+                      host_only="# nds: host-only" in def_text)
+        mod.funcs[qual] = fi
+        for child in node.body:
+            _walk_defs(child, f"{qual}.", qual)
+
+    def _walk_defs(node, prefix, parent):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            add_func(node, prefix, parent)
+        elif isinstance(node, ast.ClassDef):
+            for child in node.body:
+                _walk_defs(child, f"{node.name}.", parent)
+        elif hasattr(node, "body") and isinstance(getattr(node, "body"), list):
+            for child in node.body:
+                _walk_defs(child, prefix, parent)
+            for child in getattr(node, "orelse", []) or []:
+                _walk_defs(child, prefix, parent)
+
+    for stmt in tree.body:
+        _walk_defs(stmt, "", None)
+
+    # Names referenced inside jit/vmap/lax-HOF call expressions become
+    # trace roots (vmapped stage fns, lax loop bodies, jit-wrapped
+    # closures built in make_stepper, ...).
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            d = _dotted(node.func, mod.aliases) or ""
+            last = d.rsplit(".", 1)[-1]
+            if _is_jax_dotted(d) and last in JAX_HOF_NAMES or \
+                    last in ("shard_map",):
+                # Names *passed* into the HOF become trace roots; names
+                # *called* inside the argument expressions stay host
+                # (their return value is what gets traced, not them).
+                called = {sub.func.id for sub in ast.walk(node)
+                          if isinstance(sub, ast.Call) and
+                          isinstance(sub.func, ast.Name)}
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Name) and \
+                            isinstance(sub.ctx, ast.Load) and \
+                            sub.id not in called:
+                        mod.traced_refs.add(sub.id)
+    return mod
+
+
+class Workspace:
+    """All scanned modules plus the cross-module registries."""
+
+    def __init__(self, modules):
+        self.modules = {m.key: m for m in modules}
+        self._resolve_imported_consts()
+        self._mark_reachability()
+
+    @staticmethod
+    def _module_key_of(dotted_module: str) -> str:
+        # "repro.core.traversal" -> "repro/core/traversal.py"
+        return dotted_module.replace(".", "/") + ".py"
+
+    def _resolve_imported_consts(self):
+        for _ in range(2):  # two passes: one hop of re-export is enough
+            for mod in self.modules.values():
+                for name, (src_mod, orig) in mod.from_imports.items():
+                    src = self.modules.get(self._module_key_of(src_mod))
+                    if src is None:
+                        continue
+                    if orig in src.device_consts:
+                        mod.device_consts.add(name)
+                    elif orig in src.static_consts:
+                        mod.static_consts.add(name)
+
+    def _func_index(self):
+        idx = {}
+        for mod in self.modules.values():
+            for qual, fi in mod.funcs.items():
+                idx.setdefault((mod.key, qual.rsplit(".", 1)[-1]), []) \
+                    .append(fi)
+        return idx
+
+    def _mark_reachability(self):
+        idx = self._func_index()
+        work = []
+        for mod in self.modules.values():
+            for fi in mod.funcs.values():
+                if fi.jit_root:
+                    fi.reachable = True
+                    work.append(fi)
+                elif fi.qualname.rsplit(".", 1)[-1] in mod.traced_refs:
+                    fi.hof_root = fi.reachable = True
+                    work.append(fi)
+
+        def callees(fi):
+            mod = fi.module
+            out = []
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Name) and \
+                        isinstance(node.ctx, ast.Load):
+                    for cand in idx.get((mod.key, node.id), []):
+                        out.append(cand)
+                    imp = mod.from_imports.get(node.id)
+                    if imp:
+                        tgt = self._module_key_of(imp[0])
+                        for cand in idx.get((tgt, imp[1]), []):
+                            out.append(cand)
+            # nested defs trace with their parent
+            for qual, sub in mod.funcs.items():
+                if sub.parent == fi.qualname:
+                    out.append(sub)
+            return out
+
+        while work:
+            fi = work.pop()
+            for callee in callees(fi):
+                if not callee.reachable:
+                    callee.reachable = True
+                    work.append(callee)
+
+
+class _FuncAnalyzer:
+    """Single-pass, flow-ordered value classifier + rule checks."""
+
+    def __init__(self, ws: Workspace, mod: ModuleInfo, fi: FuncInfo,
+                 findings: list):
+        self.ws, self.mod, self.fi = ws, mod, fi
+        self.findings = findings
+        self.env = {}
+        node = fi.node
+        args = node.args
+        all_params = ([a.arg for a in getattr(args, "posonlyargs", [])] +
+                      [a.arg for a in args.args] +
+                      [a.arg for a in args.kwonlyargs])
+        # *args / **kwargs bind python containers: truthiness is length.
+        for va in (args.vararg, args.kwarg):
+            if va is not None:
+                self.env[va.arg] = STATIC
+        for p in all_params:
+            if p in fi.static_params or p in STATIC_PARAM_NAMES:
+                self.env[p] = STATIC
+            elif fi.jit_root or fi.hof_root:
+                self.env[p] = DEVICE
+            else:
+                self.env[p] = UNKNOWN
+
+    # -- reporting ---------------------------------------------------------
+    def flag(self, rule, node):
+        self.findings.append(Finding(
+            path=self.mod.path, key=self.mod.key, rule=rule,
+            line=node.lineno, func=self.fi.qualname,
+            text=_line_text(self.mod, node.lineno)))
+
+    # -- tagging -----------------------------------------------------------
+    def _combine(self, tags):
+        if DEVICE in tags:
+            return DEVICE
+        if HOST in tags:
+            return HOST
+        if tags and all(t == STATIC for t in tags):
+            return STATIC
+        return UNKNOWN
+
+    def _check_mixing(self, node, tags):
+        if DEVICE in tags and HOST in tags and \
+                (self.mod.hot_path or self.fi.reachable):
+            self.flag("NDS001", node)
+
+    def tag(self, node):  # noqa: C901 - a visitor is one big dispatch
+        if node is None:
+            return STATIC
+        if isinstance(node, ast.Constant):
+            return STATIC
+        if isinstance(node, ast.Name):
+            if node.id in self.env:
+                return self.env[node.id]
+            if node.id in self.mod.device_consts:
+                return DEVICE
+            if node.id in self.mod.static_consts:
+                return STATIC
+            return UNKNOWN
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return STATIC
+            d = _dotted(node, self.mod.aliases)
+            if _is_jax_dotted(d):
+                return DEVICE
+            if _is_numpy_dotted(d):
+                return HOST
+            return self.tag(node.value)
+        if isinstance(node, ast.Subscript):
+            self.tag(node.slice)
+            return self.tag(node.value)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return self._combine([self.tag(e) for e in node.elts])
+        if isinstance(node, ast.Starred):
+            return self.tag(node.value)
+        if isinstance(node, ast.Call):
+            return self._tag_call(node)
+        if isinstance(node, ast.BinOp):
+            tags = [self.tag(node.left), self.tag(node.right)]
+            self._check_mixing(node, tags)
+            return self._combine(tags)
+        if isinstance(node, ast.Compare):
+            tags = [self.tag(node.left)] + \
+                [self.tag(c) for c in node.comparators]
+            if all(isinstance(op, (ast.In, ast.NotIn, ast.Is, ast.IsNot))
+                   for op in node.ops):
+                return STATIC  # membership/identity: host-static result
+            self._check_mixing(node, tags)
+            return self._combine(tags)
+        if isinstance(node, ast.BoolOp):
+            tags = [self.tag(v) for v in node.values]
+            self._check_mixing(node, tags)
+            return self._combine(tags)
+        if isinstance(node, ast.UnaryOp):
+            return self.tag(node.operand)
+        if isinstance(node, ast.IfExp):
+            t = self.tag(node.test)
+            self._maybe_flag_branch(node, t)
+            return self._combine([self.tag(node.body), self.tag(node.orelse)])
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            for gen in node.generators:
+                self.tag(gen.iter)
+            return UNKNOWN
+        if isinstance(node, ast.Lambda):
+            return STATIC
+        if isinstance(node, ast.JoinedStr):
+            for v in node.values:
+                if isinstance(v, ast.FormattedValue):
+                    self.tag(v.value)
+            return STATIC
+        return UNKNOWN
+
+    def _tag_call(self, node: ast.Call):
+        arg_tags = [self.tag(a) for a in node.args] + \
+            [self.tag(kw.value) for kw in node.keywords]
+        any_device = DEVICE in arg_tags
+        fn = node.func
+        d = _dotted(fn, self.mod.aliases)
+
+        if _is_jax_dotted(d):
+            last = d.rsplit(".", 1)[-1]
+            if d.startswith("jax.numpy.") and last in ("ndim", "shape",
+                                                       "size", "result_type"):
+                return STATIC
+            if last in ("device_get", "block_until_ready"):
+                # the sanctioned, explicit sync: host result, never flagged
+                return HOST if last == "device_get" else DEVICE
+            parts = d.split(".")
+            if len(parts) >= 2 and parts[1] in HOST_OK_JAX_ATTRS:
+                return STATIC  # jax host plumbing (default_backend, ...)
+            return DEVICE
+        if _is_numpy_dotted(d):
+            last = d.rsplit(".", 1)[-1]
+            if last in ("asarray", "array", "copy") and any_device and \
+                    self.mod.hot_path:
+                self.flag("NDS003", node)
+            return HOST
+        if d and d.split(".")[0] in ("math", "time", "os", "random",
+                                     "itertools", "collections"):
+            return STATIC
+
+        if isinstance(fn, ast.Name):
+            if fn.id in CAST_BUILTINS:
+                if any_device and self.mod.hot_path:
+                    self.flag("NDS003", node)
+                return STATIC
+            if fn.id in ("len", "range", "isinstance", "getattr", "hasattr",
+                         "sorted", "enumerate", "zip", "min", "max", "sum",
+                         "abs", "str", "repr", "print", "tuple", "list",
+                         "dict", "set"):
+                return self._combine(arg_tags) \
+                    if fn.id in ("min", "max", "sum", "abs") else STATIC
+            target = self._resolve_func(fn.id)
+            if target is not None and target.reachable:
+                # shape-math helpers over static scalars stay static
+                if arg_tags and all(t == STATIC for t in arg_tags):
+                    return STATIC
+                return DEVICE
+            return UNKNOWN
+
+        if isinstance(fn, ast.Attribute):
+            base_tag = self.tag(fn.value)
+            if fn.attr in SYNC_METHODS and base_tag == DEVICE:
+                if self.mod.hot_path:
+                    self.flag("NDS003", node)
+                return STATIC
+            chain = []
+            cur = fn
+            while isinstance(cur, ast.Attribute):
+                chain.append(cur.attr)
+                cur = cur.value
+            if isinstance(cur, ast.Name) and cur.id == "self" and \
+                    "stepper" in chain:
+                return DEVICE  # scheduler dispatch: device results
+            if base_tag in (DEVICE, HOST):
+                return base_tag
+            return UNKNOWN
+        return UNKNOWN
+
+    def _resolve_func(self, name):
+        for qual, fi in self.mod.funcs.items():
+            if qual.rsplit(".", 1)[-1] == name:
+                return fi
+        imp = self.mod.from_imports.get(name)
+        if imp:
+            src = self.ws.modules.get(Workspace._module_key_of(imp[0]))
+            if src:
+                for qual, fi in src.funcs.items():
+                    if qual.rsplit(".", 1)[-1] == imp[1]:
+                        return fi
+        return None
+
+    # -- statements --------------------------------------------------------
+    def _maybe_flag_branch(self, node, test_tag):
+        if test_tag != DEVICE:
+            return
+        if self.fi.reachable:
+            self.flag("NDS002", node)
+        elif self.mod.hot_path:
+            self.flag("NDS003", node)  # host branch on device == hidden sync
+
+    def _assign_target(self, target, tag):
+        if isinstance(target, ast.Name):
+            self.env[target.id] = tag
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign_target(e, tag)
+        elif isinstance(target, ast.Starred):
+            self._assign_target(target.value, tag)
+
+    def run(self):
+        self._visit_block(self.fi.node.body)
+
+    def _visit_block(self, stmts):
+        for stmt in stmts:
+            self._visit_stmt(stmt)
+
+    def _visit_stmt(self, stmt):  # noqa: C901
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.env[stmt.name] = STATIC  # analyzed as its own function
+            return
+        if isinstance(stmt, ast.ClassDef):
+            return
+        if isinstance(stmt, ast.Assign):
+            tag = self.tag(stmt.value)
+            if isinstance(stmt.value, ast.Tuple) and \
+                    len(stmt.targets) == 1 and \
+                    isinstance(stmt.targets[0], (ast.Tuple, ast.List)) and \
+                    len(stmt.targets[0].elts) == len(stmt.value.elts):
+                for t, v in zip(stmt.targets[0].elts, stmt.value.elts):
+                    self._assign_target(t, self.tag(v))
+            else:
+                for t in stmt.targets:
+                    self._assign_target(t, tag)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            tags = [self.tag(stmt.target), self.tag(stmt.value)]
+            self._check_mixing(stmt, tags)
+            self._assign_target(stmt.target, self._combine(tags))
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is not None:
+                self._assign_target(stmt.target, self.tag(stmt.value))
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            self._maybe_flag_branch(stmt, self.tag(stmt.test))
+            self._visit_block(stmt.body)
+            self._visit_block(stmt.orelse)
+            return
+        if isinstance(stmt, ast.For):
+            self._maybe_flag_branch(stmt, self.tag(stmt.iter))
+            self._assign_target(stmt.target, UNKNOWN)
+            self._visit_block(stmt.body)
+            self._visit_block(stmt.orelse)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.tag(item.context_expr)
+                if item.optional_vars is not None:
+                    self._assign_target(item.optional_vars, UNKNOWN)
+            self._visit_block(stmt.body)
+            return
+        if isinstance(stmt, ast.Try):
+            self._visit_block(stmt.body)
+            for h in stmt.handlers:
+                self._visit_block(h.body)
+            self._visit_block(stmt.orelse)
+            self._visit_block(stmt.finalbody)
+            return
+        if isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                self.tag(stmt.value)
+            return
+        if isinstance(stmt, ast.Assert):
+            self.tag(stmt.test)
+            return
+        if isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                self.tag(t)
+            return
+        if isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self.tag(stmt.exc)
+            return
+        # Import / Pass / Global / Nonlocal / Break / Continue: nothing
+
+
+def _check_nds004(mod: ModuleInfo, fi: FuncInfo, findings: list):
+    """Flag jnp/lax/compute-jax usage inside host-only scope."""
+    seen_lines = set()
+    for node in ast.walk(fi.node):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node is not fi.node:
+            continue  # nested defs get their own pass
+        if not isinstance(node, ast.Attribute):
+            continue
+        d = _dotted(node, mod.aliases)
+        if not _is_jax_dotted(d):
+            continue
+        parts = d.split(".")
+        if len(parts) >= 2 and parts[1] in HOST_OK_JAX_ATTRS:
+            continue
+        if node.lineno in seen_lines:
+            continue
+        seen_lines.add(node.lineno)
+        findings.append(Finding(
+            path=mod.path, key=mod.key, rule="NDS004", line=node.lineno,
+            func=fi.qualname, text=_line_text(mod, node.lineno)))
+
+
+def _check_nds005(mod: ModuleInfo, fi: FuncInfo, findings: list):
+    node = fi.node
+    if fi.jit_root or fi.reachable:
+        defaults = list(node.args.defaults) + \
+            [d for d in node.args.kw_defaults if d is not None]
+        for d in defaults:
+            if _mutable_default(d):
+                findings.append(Finding(
+                    path=mod.path, key=mod.key, rule="NDS005",
+                    line=d.lineno, func=fi.qualname,
+                    text=_line_text(mod, d.lineno)))
+    if fi.jit_root and fi.static_params:
+        args = node.args
+        names = {a.arg for a in args.args} | \
+            {a.arg for a in args.kwonlyargs} | \
+            {a.arg for a in getattr(args, "posonlyargs", [])}
+        if args.kwarg is None:
+            for s in fi.static_params:
+                if s not in names:
+                    findings.append(Finding(
+                        path=mod.path, key=mod.key, rule="NDS005",
+                        line=node.lineno, func=fi.qualname,
+                        text=_line_text(mod, node.lineno)))
+
+
+def iter_py_files(paths):
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if "__pycache__" not in f.parts:
+                    yield f
+        elif p.suffix == ".py":
+            yield p
+
+
+def lint_paths(paths) -> list:
+    """Scan files/dirs and return the full (unsuppressed) finding list."""
+    modules = [m for m in (_collect_module(f) for f in iter_py_files(paths))
+               if m is not None]
+    ws = Workspace(modules)
+    findings = []
+    for mod in ws.modules.values():
+        for fi in mod.funcs.values():
+            if mod.host_only or fi.host_only:
+                _check_nds004(mod, fi, findings)
+            _check_nds005(mod, fi, findings)
+            _FuncAnalyzer(ws, mod, fi, findings).run()
+    findings.sort(key=lambda f: (f.key, f.line, f.rule))
+    return findings
+
+
+# -- suppression baseline ---------------------------------------------------
+
+def load_baseline(path):
+    """Load suppressions; entries without a justification are invalid."""
+    data = json.loads(Path(path).read_text())
+    entries = {}
+    for e in data.get("suppressions", []):
+        if not str(e.get("why", "")).strip():
+            raise ValueError(
+                f"baseline entry without justification: {e!r}")
+        entries[(e["file"], e["rule"], e["func"], e["text"])] = e
+    return entries
+
+
+def apply_baseline(findings, baseline):
+    """Split findings into (active, suppressed); also report stale keys."""
+    active, suppressed, used = [], [], set()
+    for f in findings:
+        if f.suppression_key in baseline:
+            suppressed.append(f)
+            used.add(f.suppression_key)
+        else:
+            active.append(f)
+    stale = [k for k in baseline if k not in used]
+    return active, suppressed, stale
+
+
+def run_lint(paths, baseline_path=None, show_all=False, out=None) -> int:
+    """CLI body: returns the process exit code."""
+    import sys
+    out = out or sys.stdout
+    findings = lint_paths(paths)
+    suppressed, stale = [], []
+    if baseline_path and Path(baseline_path).exists() and not show_all:
+        baseline = load_baseline(baseline_path)
+        findings, suppressed, stale = apply_baseline(findings, baseline)
+    for f in findings:
+        print(f.render(), file=out)
+    if suppressed:
+        print(f"{len(suppressed)} finding(s) suppressed by baseline",
+              file=out)
+    for k in stale:
+        print(f"note: stale baseline entry (no longer matches): {k}",
+              file=out)
+    if findings:
+        print(f"FAIL: {len(findings)} trace-discipline finding(s)", file=out)
+        return 1
+    print("OK: no trace-discipline findings", file=out)
+    return 0

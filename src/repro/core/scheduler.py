@@ -195,9 +195,10 @@ class SpecController:
 
     def store(self, spec_state):
         """Adopt the post-chunk controller state from the device."""
-        sw, hi, pk, phi, ppk = spec_state
-        # np.array: device buffers give read-only views; reset_rows
-        # mutates these in place at admission
+        sw, hi, pk, phi, ppk = jax.device_get(spec_state)
+        # np.array: keep private mutable copies (reset_rows mutates
+        # them in place at admission); device_get batches the five
+        # buffers into one transfer
         self.spec_w = np.array(sw, np.int32)
         self._hit = np.array(hi, np.float32)
         self._peak = np.array(pk, np.float32)
@@ -563,17 +564,20 @@ class StreamScheduler:
             dest = jnp.asarray(tgt[order])
             valid = jnp.ones(N, bool)
             rank, counts = compute_ranks(dest, valid, S)
-            counts = np.asarray(counts)
+            counts = jax.device_get(counts)
             cap = max(1, int(counts.max()))
-            legidx = np.asarray(scatter_to_buckets(
-                dest, rank, valid, jnp.asarray(order.astype(np.int32)),
-                S, cap, fill=np.int32(INVALID)))  # (S, cap) -> row id
             # INT32_MAX padding sorts after every real arrival, so the
-            # in-jit searchsorted never sees a hole
-            arr_by_shard = np.asarray(scatter_to_buckets(
-                dest, rank, valid,
-                jnp.asarray(arrivals[order], jnp.int32), S, cap,
-                fill=np.int32(2**31 - 1)))
+            # in-jit searchsorted never sees a hole. One explicit
+            # transfer brings both staging tables to the host together
+            # (pre-serving setup: the clock has not started yet).
+            legidx, arr_by_shard = jax.device_get((
+                scatter_to_buckets(
+                    dest, rank, valid, jnp.asarray(order.astype(np.int32)),
+                    S, cap, fill=np.int32(INVALID)),   # (S, cap) -> row id
+                scatter_to_buckets(
+                    dest, rank, valid,
+                    jnp.asarray(arrivals[order], jnp.int32), S, cap,
+                    fill=np.int32(2**31 - 1))))
             next_qs = np.zeros(S, np.int64)       # per-shard cursors
             if injit:
                 pend = (scatter_to_buckets(
@@ -730,16 +734,18 @@ class StreamScheduler:
                         self.consts, state, qbuf, spec_state, cfg, K,
                         pend, cursor, t, self.entry, dynamic=dyn)
                 dispatches += 1
-                steps = int(steps)                    # host sync point
+                # the chunk boundary's one sync: everything else below
+                # transfers lazily (and batched) only if needed
+                steps = int(jax.device_get(steps))
                 now_wall = time.time()
-                admit_qidx = np.asarray(admit_qidx)[:steps]
+                admit_qidx = jax.device_get(admit_qidx)[:steps]
                 if admit_qidx.size and (admit_qidx >= 0).any():
-                    ret_i = np.asarray(ret_i)
-                    ret_d = np.asarray(ret_d)
-                    ret_rounds = np.asarray(ret_rounds)
-                    ret_ndist = np.asarray(ret_ndist)
-                    ret_age = np.asarray(ret_age)
-                    ret_trunc = np.asarray(ret_trunc)
+                    # a seat happened: fetch all six eviction-capture
+                    # tensors in a single host transfer
+                    (ret_i, ret_d, ret_rounds, ret_ndist, ret_age,
+                     ret_trunc) = jax.device_get(
+                        (ret_i, ret_d, ret_rounds, ret_ndist, ret_age,
+                         ret_trunc))
                     for j in range(steps):
                         for s, r in np.argwhere(admit_qidx[j] >= 0):
                             if owner[s, r] != INVALID:
@@ -781,8 +787,9 @@ class StreamScheduler:
                                 else int(order[admit_qidx[j][s, r]]))
                             admit_t[s, r] = t + j
                             admit_wall[s, r] = launch_wall
+                cur = jax.device_get(cur)
                 if routed:
-                    next_qs = np.asarray(cur, np.int64).copy()
+                    next_qs = cur.astype(np.int64)
                 elif ring:
                     del staged[:int(cur)]   # consumed window seats
                 else:
@@ -818,7 +825,7 @@ class StreamScheduler:
                                            spec_state, cfg, budget,
                                            stop_on_finish, dynamic=dyn)
                 dispatches += 1
-                steps = int(steps)                    # host sync point
+                steps = int(jax.device_get(steps))    # host sync point
             t += steps
             stepped += steps
             if self.pagestore is not None and steps:
@@ -828,10 +835,11 @@ class StreamScheduler:
                 # chunk's compute), demand-fetch the misses, and stage
                 # the next speculative fetch set; then refresh the
                 # consts view the next dispatch traces against
+                (touch, miss, cand_i, cand_e, bdone, ra) = jax.device_get(
+                    (state.page_touch, state.page_miss, state.cand_i,
+                     state.cand_e, state.done, state.rounds))
                 upd = self.pagestore.boundary(
-                    state.page_touch, state.page_miss,
-                    np.asarray(state.cand_i), np.asarray(state.cand_e),
-                    np.asarray(state.done))
+                    touch, miss, cand_i, cand_e, bdone)
                 self.consts.update(upd)
                 pz = jnp.zeros_like(state.page_touch)
                 state = state._replace(page_touch=pz, page_miss=pz)
@@ -844,8 +852,7 @@ class StreamScheduler:
                 # consecutive boundaries is that configuration error
                 # (a legitimate stall clears at the next boundary's
                 # demand fetch), not a transient.
-                ra = np.asarray(state.rounds)
-                dn = np.asarray(state.done)
+                dn = bdone
                 if self._stall_count is None:
                     self._stall_count = np.zeros(ra.shape, np.int64)
                 else:
@@ -863,17 +870,17 @@ class StreamScheduler:
                 self._stall_rounds_prev = ra
             if self.controller is not None:
                 self.controller.store(spec_state)
-            live_cnt = np.asarray(live_cnt)[:steps]
-            width_sum = np.asarray(width_sum)[:steps]
+            # one batched transfer for the chunk's accounting: the
+            # per-round traces plus the pool state the retire scan reads
+            (live_cnt, width_sum, done, rounds, n_dist, age,
+             trunc) = jax.device_get(
+                (live_cnt, width_sum, state.done, state.rounds,
+                 state.n_dist, state.age, state.truncated))
+            live_cnt = live_cnt[:steps]
+            width_sum = width_sum[:steps]
             occ_trace.extend(int(c) for c in live_cnt)
             spec_trace.extend(ws / c for ws, c in
                               zip(width_sum, np.maximum(live_cnt, 1)))
-
-            done = np.asarray(state.done)
-            rounds = np.asarray(state.rounds)
-            n_dist = np.asarray(state.n_dist)
-            age = np.asarray(state.age)
-            trunc = np.asarray(state.truncated)
 
             # -- retire finished rows (the chunk already parked rows
             # that hit the per-query round cap, at the exact round
@@ -881,8 +888,7 @@ class StreamScheduler:
             fin = (owner != INVALID) & done
             if fin.any():
                 out_i, out_d, _ = self.stepper.retire(state)
-                out_i = np.asarray(out_i)
-                out_d = np.asarray(out_d)
+                out_i, out_d = jax.device_get((out_i, out_d))
                 now_wall = time.time()
                 for s, r in np.argwhere(fin):
                     # exact even when the finish was mid-chunk: the row
@@ -903,22 +909,26 @@ class StreamScheduler:
                     owner[s, r] = INVALID
                 retired += int(fin.sum())
 
+        # end-of-session counters: one transfer for the whole summary
+        (pages_unique, items_recv, props_sent, drops_b,
+         quarantined) = jax.device_get(
+            (state.pages_unique, state.items_recv, state.props_sent,
+             state.drops_b, state.quarantined))
         return StreamStats(
             results=results, total_rounds=stepped,
             occupancy=slot_occupancy(occ_trace, S * Qs, stepped + idle),
             occupancy_trace=occ_trace,
-            pages_unique=int(np.asarray(state.pages_unique).sum()),
-            items_recv=int(np.asarray(state.items_recv).sum()),
-            props_sent=int(np.asarray(state.props_sent).sum()),
-            drops_b=int(np.asarray(state.drops_b).sum()),
+            pages_unique=int(pages_unique.sum()),
+            items_recv=int(items_recv.sum()),
+            props_sent=int(props_sent.sum()),
+            drops_b=int(drops_b.sum()),
             spec_trace=spec_trace, wall_s=time.time() - t0,
             host_dispatches=dispatches, compile_s=compile_s,
             idle_rounds=idle, injit_admit=self.injit_admit,
-            items_by_shard=[int(x) for x in
-                            np.ravel(np.asarray(state.items_recv))],
+            items_by_shard=[int(x) for x in np.ravel(items_recv)],
             shed=len(shed_qids),
             truncated=sum(1 for r in results if r.truncated),
-            quarantined=int(np.asarray(state.quarantined).sum()),
+            quarantined=int(quarantined.sum()),
             stalls=sum(r.stall_rounds for r in results),
             prefetch_hits=(self.pagestore.prefetch_hits
                            if self.pagestore is not None else 0),

@@ -15,7 +15,6 @@ import argparse
 import json
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import EngineParams, pack_for_engine, search_sim
@@ -236,7 +235,7 @@ def main(argv=None):
         spec_width=args.spec, kernel_mode=args.kernel_mode,
         coalesce_qb=args.coalesce_qb)
     qs = args.queries - args.queries % S or S
-    qsh = jnp.asarray(queries[:qs].reshape(S, qs // S, -1))
+    qsh = queries[:qs].reshape(S, qs // S, -1)  # jit stages the transfer
 
     t0 = time.time()
     ids, dists, stats = search_sim(consts, qsh, *entry, params, geom)

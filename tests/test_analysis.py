@@ -1,0 +1,375 @@
+"""Trace-discipline suite: lint rule fixtures (positive + negative per
+rule), seeded-violation regression against the real tree, the jaxpr
+golden audit, the float32-discipline audit, and CompileGuard's
+one-warmup-compile session proof (analysis/{lint,jaxpr_audit,
+compile_guard}.py)."""
+import io
+import json
+import shutil
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.compile_guard import CompileGuard
+from repro.analysis.lint import (apply_baseline, lint_paths, load_baseline,
+                                 run_lint)
+
+REPO = Path(__file__).resolve().parents[1]
+LINT_BASELINE = REPO / "ANALYSIS_lint_baseline.json"
+AUDIT_BASELINE = REPO / "ANALYSIS_baseline.json"
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: rule fixtures. Each rule gets a module with a known violation
+# and a clean twin; the linter must flag exactly the former.
+# ---------------------------------------------------------------------------
+FIXTURES = {
+    "NDS001": (
+        """
+        # nds: hot-path-module
+        import numpy as np
+        import jax.numpy as jnp
+        SENTINEL = jnp.int32(2**31 - 1)
+
+        def predictor(cands):
+            host = np.asarray(cands)
+            return host != SENTINEL      # device const poisons host math
+        """,
+        """
+        # nds: hot-path-module
+        import numpy as np
+        import jax.numpy as jnp
+        SENTINEL = jnp.int32(2**31 - 1)
+        _SENT = 2**31 - 1
+
+        def predictor(cands):
+            host = np.asarray(cands)
+            return host != _SENT
+        """),
+    "NDS002": (
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            if x.sum() > 0:
+                return x
+            return -x
+        """,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.where(x.sum() > 0, x, -x)
+        """),
+    "NDS003": (
+        """
+        # nds: hot-path-module
+        import numpy as np
+        import jax.numpy as jnp
+
+        def boundary(state):
+            total = jnp.sum(state)
+            return float(total)          # hidden device sync
+        """,
+        """
+        # nds: hot-path-module
+        import jax
+        import jax.numpy as jnp
+
+        def boundary(state):
+            total = jnp.sum(state)
+            return float(jax.device_get(total))   # explicit, sanctioned
+        """),
+    "NDS004": (
+        """
+        # nds: host-only-module
+        import jax.numpy as jnp
+
+        def summarize(xs):
+            return jnp.mean(jnp.asarray(xs))
+        """,
+        """
+        # nds: host-only-module
+        import numpy as np
+
+        def summarize(xs):
+            return np.mean(np.asarray(xs))
+        """),
+    "NDS005": (
+        """
+        import jax
+
+        @jax.jit
+        def step(x, pad=[0.0]):          # mutable default on a jit fn
+            return x
+        """,
+        """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("pad",))
+        def step(x, pad=(0.0,)):
+            return x
+        """),
+}
+
+
+def _write_module(tmp_path, name, body):
+    f = tmp_path / f"{name}.py"
+    f.write_text(textwrap.dedent(body))
+    return f
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_fires_on_violation(tmp_path, rule):
+    bad = _write_module(tmp_path, f"bad_{rule.lower()}", FIXTURES[rule][0])
+    findings = lint_paths([bad])
+    assert [f.rule for f in findings].count(rule) >= 1, \
+        f"{rule} did not fire: {[f.render() for f in findings]}"
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_quiet_on_clean_twin(tmp_path, rule):
+    good = _write_module(tmp_path, f"good_{rule.lower()}", FIXTURES[rule][1])
+    findings = lint_paths([good])
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_nds005_static_name_mismatch(tmp_path):
+    f = _write_module(tmp_path, "bad_staticname", """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("missing",))
+        def step(x, k):
+            return x
+        """)
+    findings = lint_paths([f])
+    assert any(x.rule == "NDS005" for x in findings)
+
+
+# ---------------------------------------------------------------------------
+# The committed tree + the committed suppression baseline
+# ---------------------------------------------------------------------------
+def test_committed_tree_is_clean():
+    out = io.StringIO()
+    code = run_lint([REPO / "src"], baseline_path=LINT_BASELINE, out=out)
+    assert code == 0, out.getvalue()
+
+
+def test_baseline_entries_require_justification(tmp_path):
+    b = tmp_path / "baseline.json"
+    b.write_text(json.dumps({"suppressions": [
+        {"file": "repro/core/scheduler.py", "rule": "NDS003",
+         "func": "f", "text": "x = int(y)", "why": ""}]}))
+    with pytest.raises(ValueError, match="justification"):
+        load_baseline(b)
+
+
+def test_baseline_suppresses_matching_finding(tmp_path):
+    bad = _write_module(tmp_path, "bad_nds004", FIXTURES["NDS004"][0])
+    findings = lint_paths([bad])
+    assert findings
+    f = findings[0]
+    baseline = {f.suppression_key: {"why": "fixture"}}
+    active, suppressed, stale = apply_baseline(findings, baseline)
+    assert suppressed and not stale
+    assert all(x.suppression_key != f.suppression_key for x in active)
+
+
+# Seeding any one rule violation into core/scheduler.py must turn the
+# committed-tree lint red (the acceptance gate for the whole layer).
+SEEDS = {
+    "NDS001": """
+def _seeded_nds001(arr):
+    import numpy as _np
+    from repro.core.traversal import ID_SENTINEL
+    return _np.asarray(arr) == ID_SENTINEL
+""",
+    "NDS002": """
+@jax.jit
+def _seeded_nds002(x):
+    if x.sum() > 0:
+        return x + 1
+    return x - 1
+""",
+    "NDS003": """
+def _seeded_nds003(state):
+    return float(jnp.sum(state))
+""",
+    "NDS004": """
+def _seeded_nds004(n):  # nds: host-only
+    return jnp.arange(n)
+""",
+    "NDS005": """
+@jax.jit
+def _seeded_nds005(x, pad=[0.0]):
+    return x
+""",
+}
+
+
+@pytest.mark.parametrize("rule", sorted(SEEDS))
+def test_seeded_violation_fails_lint(tmp_path, rule):
+    tree = tmp_path / "src"
+    shutil.copytree(REPO / "src", tree,
+                    ignore=shutil.ignore_patterns("__pycache__"))
+    sched = tree / "repro" / "core" / "scheduler.py"
+    sched.write_text(sched.read_text() + SEEDS[rule])
+    out = io.StringIO()
+    code = run_lint([tree], baseline_path=LINT_BASELINE, out=out)
+    assert code != 0
+    assert rule in out.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: jaxpr audit golden test + float32 discipline
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def audit_report():
+    from repro.analysis.jaxpr_audit import collect_report
+    return collect_report()
+
+
+def test_jaxpr_audit_matches_committed_baseline(audit_report):
+    from repro.analysis.jaxpr_audit import baseline_payload
+    import jax
+    base = json.loads(AUDIT_BASELINE.read_text())
+    cur = baseline_payload(audit_report)
+    assert set(base["steppers"]) == set(cur["steppers"])
+    assert base["invariants"] == cur["invariants"]
+    if base["jax_version"] == jax.__version__:
+        for name in base["steppers"]:
+            assert base["steppers"][name]["primitives"] == \
+                cur["steppers"][name]["primitives"], \
+                f"{name}: hot-loop primitive mix drifted; re-baseline " \
+                "with `python -m repro.analysis audit --update` and " \
+                "review the diff"
+
+
+def test_no_callbacks_on_any_stepper(audit_report):
+    for name, s in audit_report["steppers"].items():
+        assert s["callbacks"] == [], name
+
+
+def test_float32_discipline_every_stepper(audit_report):
+    """No float64 aval and no convert to f64 anywhere in any traced
+    stepper: distances, norms and merge keys all stay f32 (pins the
+    PR 5 lowering-divergence class from the dtype side)."""
+    for name, s in audit_report["steppers"].items():
+        assert s["f64"] == [], f"{name}: {sorted(set(s['f64']))[:5]}"
+
+
+def test_engine_state_dtypes_f32(audit_report):
+    """The stepper outputs (engine state leaves + result tensors) carry
+    no float64 either."""
+    from repro.analysis.jaxpr_audit import trace_steppers
+    specs = trace_steppers()
+    for name, spec in specs.items():
+        for v in spec["traced"].jaxpr.jaxpr.outvars:
+            assert str(v.aval.dtype) != "float64", name
+
+
+def test_scatter_donation_in_lowered_text(audit_report):
+    assert audit_report["invariants"]["scatter_donation_aliases"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: CompileGuard
+# ---------------------------------------------------------------------------
+def test_compile_guard_counts_and_caches():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def _guard_probe(x):
+        return x * 2 + 1
+
+    x = jnp.arange(37, dtype=jnp.float32)  # unique shape for this test
+    with CompileGuard() as cg:
+        _guard_probe(x).block_until_ready()
+        _guard_probe(x + 1).block_until_ready()   # cache hit
+    assert cg.count("_guard_probe") == 1
+    with CompileGuard() as cg2:
+        _guard_probe(x).block_until_ready()       # warm: no compiles
+    assert cg2.count("_guard_probe") == 0
+
+
+def test_compile_guard_max_compiles_enforced():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def _guard_limit(x):
+        return x + 2
+
+    with pytest.raises(RuntimeError, match="CompileGuard"):
+        with CompileGuard(match="_guard_limit", max_compiles=0):
+            _guard_limit(
+                jnp.arange(11, dtype=jnp.float32)).block_until_ready()
+
+
+def _guard_dataset(n=512, d=24, nq=16, S=2, page=8, seed=3):
+    """Unique dims so no other test in the process pre-warmed these
+    stepper signatures (compiles are cached process-wide)."""
+    from repro.core.graph import build_vamana
+    from repro.core.luncsr import Geometry, LUNCSR, pack_index
+    rng = np.random.default_rng(seed)
+    db = rng.integers(-8, 9, size=(n, d)).astype(np.float32)
+    queries = rng.integers(-8, 9, size=(nq, d)).astype(np.float32)
+    adj, medoid = build_vamana(db, r=8, alpha=1.2, seed=seed)
+    geo = Geometry(num_shards=S, page_size=page, pages_per_block=2, dim=d)
+    index = LUNCSR.from_adjacency(db, adj, geo, entry=medoid, pref_width=2)
+    return db, queries, pack_index(index, max_degree=8)
+
+
+def test_one_compile_covers_ring_wrapping_partial_residency_session():
+    """The PR 7 serving claim, machine-checked: a multi-chunk session
+    with ring-window restaging AND a half-resident tiered page store
+    (consts view swapped at every boundary) dispatches against exactly
+    one engine_run_chunk_admit compilation -- the warmup's."""
+    import dataclasses
+    from repro.core.engine import EngineParams, pack_for_engine
+    from repro.core.pagestore import PageStore
+    from repro.core.ref_search import SearchParams
+    from repro.core.scheduler import stream_search
+
+    db, queries, packed = _guard_dataset()
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=8, W=1, k=5)
+    params = EngineParams.lossless(sp, 2, geom.max_degree, spec_width=2)
+    NP = consts["db"].shape[1]
+    params = dataclasses.replace(params, store_pages=NP)
+    ps = PageStore(consts, geom, NP // 2, w_select=1)
+    nq = queries.shape[0]
+    arrivals = np.arange(nq, dtype=np.int64) * 2   # forces ring re-staging
+    ring = 6                                       # < nq: window must wrap
+
+    with CompileGuard() as cg:
+        ids, dists, stats = stream_search(
+            consts, geom, params, entry, queries, num_slots=2,
+            round_chunk=2, arrivals=arrivals, injit_admit=True,
+            ring_capacity=ring, pagestore=ps)
+
+    n = cg.count("engine_run_chunk_admit")
+    assert n == 1, (f"expected exactly the warmup compile, saw {n}: "
+                    f"{[x for x in cg.names if 'chunk' in x]}")
+    # the session really exercised the claim: multiple dispatches, a
+    # wrapped ring and partial residency with real demand fetches
+    assert stats.host_dispatches > 1
+    assert stats.stalls > 0 and ps.counters()["demand_fetches"] > 0
+    assert len(stats.results) == nq
+    # and it still returns the right answers: bit-identical to the
+    # untiered, unringed reference
+    ref_i, ref_d, _ = stream_search(
+        consts, geom, dataclasses.replace(params, store_pages=0), entry,
+        queries, num_slots=2, round_chunk=2, arrivals=arrivals,
+        injit_admit=True)
+    np.testing.assert_array_equal(ids, ref_i)
+    np.testing.assert_array_equal(dists, ref_d)

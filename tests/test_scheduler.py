@@ -925,3 +925,33 @@ def test_fault_validation(ds):
                            faults=fault_plan(S + 1).kill(0, 5))
     with pytest.raises(ValueError, match="num_shards"):
         StreamScheduler(consts, geom, wrong, entry, num_slots=2)
+
+
+def test_session_compiles_stepper_exactly_once():
+    """Every retire/refill/admit boundary re-dispatches the same jitted
+    stepper: a staggered-arrival in-jit session must trigger exactly one
+    engine_run_chunk_admit compilation (the warmup), however many chunks
+    the host loop runs."""
+    from repro.analysis.compile_guard import CompileGuard
+
+    # Shapes unique to this test: jit caches are process-wide, so
+    # reusing the module fixture's dims could hide (or zero) the count.
+    db, queries, packed = _dataset(n=768, d=28, nq=20, S=2, page=16,
+                                   seed=5)
+    consts, geom, entry = pack_for_engine(packed)
+    sp = SearchParams(L=12, W=1, k=8)
+    params = EngineParams.lossless(sp, 2, geom.max_degree, spec_width=4)
+    arrivals = np.random.default_rng(7).integers(0, 12, queries.shape[0])
+
+    with CompileGuard() as cg:
+        ids, dists, st = stream_search(
+            consts, geom, params, entry, queries, num_slots=2,
+            arrivals=arrivals, round_chunk=4, injit_admit=True)
+
+    n = cg.count("engine_run_chunk_admit")
+    assert n == 1, (f"expected exactly the warmup compile, saw {n}: "
+                    f"{[x for x in cg.names if 'chunk' in x]}")
+    # and the one compile really amortized over a multi-chunk session
+    assert st.host_dispatches > 1
+    assert st.total_rounds > 4
+    assert len(st.results) == queries.shape[0]
