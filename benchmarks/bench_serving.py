@@ -335,6 +335,139 @@ def tiered_leg(*, kernel_mode, seed, smoke):
     }
 
 
+def live_leg(*, kernel_mode, seed, smoke):
+    """Live-index serving sweep (epoch-versioned store): what streaming
+    inserts, tombstone deletes and background reorders cost the serving
+    path.
+
+    Three sessions on one workload (paced Poisson arrivals):
+
+      * ``frozen``      — the plain packed index (baseline);
+      * ``zero-churn``  — live machinery armed (``delta_cap`` > 0) but
+        no mutation ever applied: must be **bit-identical** to frozen
+        (ids, dists, dispatch count — the zero-cost-when-idle
+        contract, gated under ``--smoke``);
+      * ``churn``       — a Poisson insert/delete schedule with
+        periodic background reindexes swapping in mid-session: p99
+        latency (rounds) must stay within 1.25x the frozen session's
+        (zero-downtime gate), the stepper must compile exactly once
+        across every swap, and recall against the *final* live dataset
+        must hold within 0.15 of a cold rebuild over that same data.
+    """
+    from repro.analysis.compile_guard import CompileGuard
+    from repro.core.live import build_live_index, mutation_schedule
+    from repro.launch.search import build_index
+
+    n, d, nq, shards = 2048, 32, 48, 4
+    page_size, rdeg, slots, K = 8, 8, 2, 4
+    k = 8
+    ds = VectorDataset("live-bench", n=n, dim=d, clusters=8, seed=seed)
+    db0 = ds.materialize()
+    queries = ds.queries(nq, seed=seed + 1)
+    arrivals = poisson_arrivals(0.25, nq, seed + 7)
+    sp = SearchParams(L=16, W=1, k=k)
+    skw = dict(num_slots=slots, round_chunk=K, arrivals=arrivals)
+
+    db, packed = build_index(db0, shards=shards, page_size=page_size,
+                             r=rdeg, seed=seed)
+    consts, geom, entry = pack_for_engine(packed)
+    params = EngineParams.lossless(sp, slots, packed.max_degree,
+                                   kernel_mode=kernel_mode)
+    base_i, base_d, base_st = stream_search(consts, geom, params, entry,
+                                            queries, **skw)
+    base_row = stream_summary(base_st)
+
+    def live_session(schedule, refresh_every, label):
+        live = build_live_index(db0, shards=shards, page_size=page_size,
+                                r=rdeg, delta_cap=8, seed=seed,
+                                refresh_every=refresh_every,
+                                schedule=schedule)
+        lc, lg, le = pack_for_engine(live.ep.packed)
+        lp = dataclasses.replace(
+            EngineParams.lossless(sp, slots, rdeg,
+                                  kernel_mode=kernel_mode), delta_cap=8)
+        with CompileGuard() as cg:
+            ids, dists, st = stream_search(lc, lg, lp, le, queries,
+                                           live=live, **skw)
+        row = stream_summary(st)
+        row.update(label=label,
+                   stepper_compiles=cg.count("engine_run_chunk_admit"))
+        return row, (np.asarray(ids), np.asarray(dists)), live
+
+    zc_row, zc_out, _ = live_session(None, 0, "zero-churn")
+
+    horizon = max(int(arrivals.max()) + 1, 2 * nq)
+    sched = mutation_schedule(0.35, 0.1, horizon, d, seed=seed + 5,
+                              ref=db0)
+    ch_row, ch_out, ch_live = live_session(sched, 8, "churn")
+
+    # recall vs the final live dataset, against a cold rebuild over
+    # exactly that data (the background reorder must not leave the
+    # graph meaningfully worse than a from-scratch build)
+    vecs, exts = ch_live.final_dataset()
+    pos, _ = brute_force_topk(vecs, queries, k)
+    ch_row["recall"] = round(float(recall_at_k(ch_out[0], exts[pos])), 4)
+    dbr, cpacked = build_index(vecs, shards=shards, page_size=page_size,
+                               r=rdeg, seed=seed)
+    cc, cgm, ce = pack_for_engine(cpacked)
+    cold_params = EngineParams.lossless(sp, slots, rdeg,
+                                        kernel_mode=kernel_mode)
+    cold_i, _, _ = stream_search(cc, cgm, cold_params, ce, queries, **skw)
+    posr, _ = brute_force_topk(dbr, queries, k)
+    cold_recall = round(float(recall_at_k(np.asarray(cold_i), posr)), 4)
+
+    p99_ratio = round(
+        ch_row["latency_rounds"]["p99"]
+        / max(base_row["latency_rounds"]["p99"], 1e-9), 4)
+    zero_churn_identity = bool(
+        np.array_equal(zc_out[0], np.asarray(base_i))
+        and np.array_equal(zc_out[1], np.asarray(base_d))
+        and zc_row["host_dispatches"] == base_row["host_dispatches"])
+
+    emit([["frozen", 0, 0, 0, 0,
+           base_row["latency_rounds"]["p99"],
+           base_row["host_dispatches"], "-"],
+          ["zero-churn", 0, 0, 0, 0,
+           zc_row["latency_rounds"]["p99"], zc_row["host_dispatches"],
+           zc_row["stepper_compiles"]],
+          ["churn", ch_row["epoch_swaps"], ch_row["delta_hits"],
+           ch_row["tombstoned"], ch_row["swap_stall_rounds"],
+           ch_row["latency_rounds"]["p99"], ch_row["host_dispatches"],
+           ch_row["stepper_compiles"]]],
+         ["session", "swaps", "delta_hits", "tombstoned", "swap_stall",
+          "p99_rounds", "dispatches", "compiles"],
+         f"live index (n0={n}, delta_cap=8, refresh_every=8, paced "
+         f"arrivals, {shards}x{slots} slots, chunk={K})")
+
+    checks = {
+        "live_zero_churn_identity": zero_churn_identity,
+        "live_p99_ratio": p99_ratio,
+        "live_epoch_swaps": ch_row["epoch_swaps"],
+        "live_stepper_compiles": ch_row["stepper_compiles"],
+        "live_recall": ch_row["recall"],
+        "live_cold_rebuild_recall": cold_recall,
+        "live_recall_delta": round(ch_row["recall"] - cold_recall, 4),
+    }
+    if smoke:
+        assert zero_churn_identity, (
+            "a zero-churn live session must be bit-identical to the "
+            "frozen path (ids, dists, dispatch count)")
+        assert zc_row["stepper_compiles"] == 1
+        assert ch_row["epoch_swaps"] >= 2, (
+            f"the churn session must exercise >= 2 epoch swaps, got "
+            f"{ch_row['epoch_swaps']}")
+        assert ch_row["stepper_compiles"] == 1, (
+            f"epoch swaps must not recompile the stepper: "
+            f"{ch_row['stepper_compiles']} compiles")
+        assert p99_ratio <= 1.25, (
+            f"p99 latency while background reorders run must stay "
+            f"within 1.25x steady state: ratio {p99_ratio}")
+        assert ch_row["recall"] >= cold_recall - 0.15, (
+            f"post-churn recall {ch_row['recall']} fell more than 0.15 "
+            f"below the cold rebuild's {cold_recall}")
+    return [base_row, zc_row, ch_row], checks
+
+
 def compile_guard_leg(*, kernel_mode, seed, smoke):
     """One-warmup-compile gate (analysis layer 3): a fresh serving
     session — multi-chunk, ring-bounded admission, half-resident tiered
@@ -563,7 +696,7 @@ def chaos_leg(*, n, d, nq, page_size, r, L, k, kernel_mode, seed,
 
 def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         spec_max=8, L=32, rate=2.0, kernel_mode="jnp", seed=0,
-        round_chunk=1, smoke=False, chaos=False,
+        round_chunk=1, smoke=False, chaos=False, live=False,
         out_json="BENCH_serving.json"):
     if smoke:
         nq, n, slots, rate = 64, 2048, 4, 0.0
@@ -674,6 +807,14 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
     guard_row = compile_guard_leg(kernel_mode=kernel_mode, seed=seed,
                                   smoke=smoke)
 
+    # live index: zero-churn identity, the p99-under-reorder gate, and
+    # compile-once across epoch swaps (opt-in like chaos — it builds
+    # three extra indexes)
+    live_rows, live_checks = [], {}
+    if live:
+        live_rows, live_checks = live_leg(
+            kernel_mode=kernel_mode, seed=seed, smoke=smoke)
+
     # chaos sweep: overload shedding/backpressure against the bounded
     # admission ring, a mid-run shard kill under a deadline, corrupted
     # page reads behind the guard, and the armed-but-idle identity gate
@@ -762,6 +903,7 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         checks["routed_r2_recall_delta"] = round(
             r2["recall"] - fo["recall"], 4)
     checks.update(tiered_checks)
+    checks.update(live_checks)
     checks["compile_guard_stepper_compiles"] = guard_row[
         "stepper_compiles"]
     results = {
@@ -782,6 +924,7 @@ def run(*, nq=128, n=4096, d=48, shards=4, slots=8, page_size=64, r=16,
         "routed_sweep": routed_rows,
         "tiered_sweep": tiered_rows,
         "compile_guard": guard_row,
+        "live_sweep": live_rows,
         "chaos": chaos_rows,
         "checks": checks,
     }
@@ -908,6 +1051,13 @@ def main(argv=None):
                          "mid-run shard kill under a deadline, NaN page "
                          "reads behind the guard, and the armed-but-"
                          "idle bit-identity gate")
+    ap.add_argument("--live", action="store_true",
+                    help="add the live-index sweep: zero-churn "
+                         "bit-identity, p99 latency while background "
+                         "reorders run (must stay within 1.25x steady "
+                         "state under --smoke), compile-once across "
+                         "epoch swaps, and post-churn recall vs a cold "
+                         "rebuild")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
@@ -915,7 +1065,7 @@ def main(argv=None):
         rate=args.rate, spec_max=args.spec_max,
         kernel_mode=args.kernel_mode, round_chunk=args.round_chunk,
         seed=args.seed, smoke=args.smoke, chaos=args.chaos,
-        out_json=args.out)
+        live=args.live, out_json=args.out)
     return 0
 
 

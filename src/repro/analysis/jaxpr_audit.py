@@ -128,6 +128,32 @@ def trace_steppers(prob=None):
         params=p, geom=g, K=TINY["K"], dynamic=True)
     out["run_chunk_admit_routed"] = {"traced": tr, "lowered_text": None}
 
+    # Live leg: the delta segment + tombstone bitset ride in `consts`
+    # as fixed-shape traced arrays (EngineParams.delta_cap is the only
+    # static change), so insert/delete/epoch-swap sessions rejit
+    # nothing — the audit pins the live finalize's structure.
+    dcap = 4
+    n_cap = prob["consts"]["db"].shape[1] * TINY["page"] * TINY["S"]
+    live_consts = {
+        **prob["consts"],
+        "tombs": jnp.zeros((n_cap,), bool),
+        "delta_vec": jnp.zeros((dcap, TINY["d"]), jnp.float32),
+        "delta_norm": jnp.zeros((dcap,), jnp.float32),
+        "delta_live": jnp.zeros((dcap,), bool),
+    }
+    live_params = dataclasses.replace(p, delta_cap=dcap)
+    tr = engine.engine_run_chunk_admit.trace(
+        live_consts, prob["state"], prob["queries"], prob["spec_state"],
+        prob["spec_cfg"], TINY["K"], *_pend_args(prob), 0, *prob["entry"],
+        params=live_params, geom=g, K=TINY["K"], dynamic=True)
+    out["run_chunk_admit_live"] = {"traced": tr, "lowered_text": None}
+
+    tr = engine.engine_retire_live.trace(
+        prob["state"], prob["queries"], live_consts["tombs"],
+        live_consts["delta_vec"], live_consts["delta_norm"],
+        live_consts["delta_live"], k=TINY["k"])
+    out["retire_live"] = {"traced": tr, "lowered_text": None}
+
     # Tiered leg: consts carry the frame buffer + translation table.
     NP = prob["consts"]["db"].shape[1]
     ps = PageStore(prob["consts"], g, NP, w_select=1)

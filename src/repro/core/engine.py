@@ -153,6 +153,17 @@ class EngineParams:
                                     # reading garbage. 0 = device-resident
                                     # store, zero extra ops (bit-identical
                                     # to every pre-tiered path).
+    delta_cap: int = 0              # live index (core/live.py): rows of
+                                    # the append-only delta segment that
+                                    # retirement brute-force-scans
+                                    # alongside the main candidate list,
+                                    # after masking tombstoned ids. The
+                                    # delta/tombstone consts are traced
+                                    # arrays of fixed shape, so inserts,
+                                    # deletes and epoch swaps never
+                                    # change the stepper signature.
+                                    # 0 = frozen index, zero extra ops
+                                    # (byte-identical traces).
 
     @property
     def backend(self) -> KernelBackend:
@@ -557,6 +568,62 @@ def _finalize(state: EngineState, k: int):
     return out_i, out_d, stats
 
 
+def _finalize_live(state: EngineState, queries, tombs, delta_vec,
+                   delta_norm, delta_live, k: int):
+    """Live-index retire (one shard): mask tombstones, merge the delta.
+
+    Three steps, each chosen so a zero-churn session stays bit-identical
+    to :func:`_finalize`:
+
+      1. tombstoned candidates are **stable-partitioned** to the back of
+         the full length-L list (all-False flags -> identity permutation)
+         and overwritten with (ID_SENTINEL, BIG_DIST), so a leaked
+         tombstone can never survive in the first k;
+      2. the delta segment is brute-force scanned with the same
+         mul+reduce distance expression as :func:`_init_state` (the
+         1-ULP cross-path contract); dead rows score BIG_DIST; live
+         rows get global ids ``capacity + row``;
+      3. [main k | delta] is merged by a **stable** argsort — main is
+         already sorted ascending and wins ties, so an at-rest delta
+         (all BIG_DIST) reproduces the frozen output exactly.
+    """
+    ids = state.cand_i                                      # (Qs, L)
+    cap = tombs.shape[0]
+    dead = tombs[jnp.clip(ids, 0, cap - 1)] & (ids != ID_SENTINEL)
+    order = jnp.argsort(dead, axis=-1, stable=True)
+    ci = jnp.take_along_axis(ids, order, axis=-1)
+    cd = jnp.take_along_axis(state.cand_d, order, axis=-1)
+    dd = jnp.take_along_axis(dead, order, axis=-1)
+    main_i = jnp.where(dd, ID_SENTINEL, ci)[:, :k]
+    main_d = jnp.where(dd, BIG_DIST, cd)[:, :k]
+
+    qq = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1)
+    dn = delta_vec.shape[0]
+    d_d = (qq[:, None]
+           - 2.0 * jnp.sum(queries[:, None, :].astype(jnp.float32)
+                           * delta_vec[None].astype(jnp.float32), axis=-1)
+           + delta_norm[None])
+    d_d = jnp.where(delta_live[None, :], d_d, BIG_DIST)
+    d_i = jnp.where(delta_live,
+                    cap + jnp.arange(dn, dtype=jnp.int32),
+                    ID_SENTINEL)
+    d_i = jnp.broadcast_to(d_i[None], (ids.shape[0], dn))
+
+    all_d = jnp.concatenate([main_d, d_d], axis=-1)
+    all_i = jnp.concatenate([main_i, d_i], axis=-1)
+    ord2 = jnp.argsort(all_d, axis=-1, stable=True)
+    out_d = jnp.take_along_axis(all_d, ord2, axis=-1)[:, :k]
+    out_i = jnp.take_along_axis(all_i, ord2, axis=-1)[:, :k]
+    out_i = jnp.where(out_i != ID_SENTINEL, out_i, INVALID)
+    stats = {
+        "rounds": state.rounds, "n_dist": state.n_dist,
+        "items_recv": state.items_recv, "pages_unique": state.pages_unique,
+        "drops_b": state.drops_b, "props_sent": state.props_sent,
+        "truncated": state.truncated, "quarantined": state.quarantined,
+    }
+    return out_i, out_d, stats
+
+
 # ---------------------------------------------------------------------------
 # Drivers
 # ---------------------------------------------------------------------------
@@ -884,6 +951,21 @@ def engine_retire(state: EngineState, k: int):
     return jax.vmap(lambda s: _finalize(s, k))(state)
 
 
+#: consts keys a live index adds next to db/vnorm/adj/pref/blk_perm.
+LIVE_CONST_KEYS = ("tombs", "delta_vec", "delta_norm", "delta_live")
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def engine_retire_live(state: EngineState, queries, tombs, delta_vec,
+                       delta_norm, delta_live, k: int):
+    """:func:`engine_retire` through :func:`_finalize_live`: tombstones
+    masked, delta segment merged. The delta/tombstone arrays are traced,
+    so inserts/deletes/epoch swaps retrace nothing."""
+    return jax.vmap(
+        lambda s, q: _finalize_live(s, q, tombs, delta_vec, delta_norm,
+                                    delta_live, k))(state, queries)
+
+
 def _chunk_round(carry, round_fn, rounds_cap, dynamic, spec_cfg,
                  stall=None):
     """One in-chunk round, shared by the sim and shard_map while_loop
@@ -1117,7 +1199,24 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
     entry_ax = 0 if jnp.ndim(entry_vec) == 2 else None
     vadmit = jax.vmap(functools.partial(_admit_rows, params=params),
                       in_axes=(0, 0, 0, 0, entry_ax, entry_ax, entry_ax))
-    vfin = jax.vmap(lambda s: _finalize(s, k)[:2])
+    # evicted rows' results are captured pre-admission; with a live
+    # index (static delta_cap > 0) the capture masks tombstones and
+    # merges the delta so a mid-chunk eviction honours deletes exactly
+    # like a host-side retire. delta_cap == 0 keeps the original
+    # closure untouched: byte-identical trace to the frozen path.
+    if params.delta_cap > 0:
+        vfin_live = jax.vmap(
+            lambda s, qr: _finalize_live(
+                s, qr, consts["tombs"], consts["delta_vec"],
+                consts["delta_norm"], consts["delta_live"], k)[:2])
+
+        def capture_fin(st, q):
+            return vfin_live(st, q)
+    else:
+        vfin = jax.vmap(lambda s: _finalize(s, k)[:2])
+
+        def capture_fin(st, q):
+            return vfin(st)
     if per_shard:
         avail_of = jax.vmap(_pending_avail, in_axes=(0, 0, None))
         vseat = jax.vmap(_seat_pending,
@@ -1136,7 +1235,7 @@ def engine_run_chunk_admit(consts, state: EngineState, queries, spec_state,
          aq, ri, rd, rr, rn, ra, rt) = carry
         # -- boundary j (global round t0 + j): record the would-be-
         # evicted rows' results, then seat arrived pending queries
-        fin_i, fin_d = vfin(st)
+        fin_i, fin_d = capture_fin(st, q)
         ri = ri.at[j].set(fin_i)
         rd = rd.at[j].set(fin_d)
         rr = rr.at[j].set(st.rounds)

@@ -306,3 +306,113 @@ def pack_index(index: LUNCSR, max_degree: int, dim_pad: Optional[int] = None,
         blk_perm=index.blk_perm.astype(np.int32),
         vnorm=vnorm, entry=index.entry,
     )
+
+
+def pack_padded(vectors: np.ndarray, adjacency: np.ndarray,
+                geometry: Geometry, entry: int, max_degree: int,
+                capacity: int, pref_width: int = 0) -> PackedIndex:
+    """Pack a graph over ``m <= capacity`` live vertices into a
+    ``capacity``-sized :class:`PackedIndex`.
+
+    The pad seats (ids ``m .. capacity-1``) hold zero vectors and
+    INVALID adjacency — unreachable from the entry, so a search over
+    the padded index is bit-identical to one over the unpadded graph.
+    Every epoch of a live session packs at the same ``capacity``, which
+    is what keeps the engine consts' shapes fixed across swaps.
+    With ``capacity == m`` this is exactly ``from_adjacency`` +
+    :func:`pack_index` (the frozen build path).
+    """
+    m, d = vectors.shape
+    if m > capacity:
+        raise ValueError(f"{m} live vertices exceed capacity {capacity}")
+    if m < capacity:
+        vpad = np.zeros((capacity - m, d), dtype=np.float32)
+        apad = np.full((capacity - m, adjacency.shape[1]), INVALID,
+                       dtype=np.int32)
+        vectors = np.concatenate(
+            [np.ascontiguousarray(vectors, np.float32), vpad], axis=0)
+        adjacency = np.concatenate(
+            [adjacency.astype(np.int32), apad], axis=0)
+    index = LUNCSR.from_adjacency(vectors, adjacency, geometry,
+                                  entry=entry, pref_width=pref_width)
+    return pack_index(index, max_degree=max_degree)
+
+
+# ---------------------------------------------------------------------------
+# Epoch-versioned live index (ISSUE 10): main graph + delta + tombstones.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class EpochIndex:
+    """One epoch of a live index: the packed main graph plus the mutable
+    side-state the engine scans at retire time.
+
+    The main :class:`PackedIndex` is packed at the session ``capacity``
+    (== ``packed.n``), so every epoch's device consts share one shape.
+    The delta segment is a bounded append-only buffer of freshly
+    inserted vectors, brute-force scanned by ``_finalize_live``; the
+    tombstone bitset masks deleted main-graph vertices at retire time.
+    A background reindex (core/refresh.py:``reindex_epoch``) folds both
+    into the next epoch's main graph.
+
+    vectors   : (capacity, d) logical-order mirror of the packed db
+                (row i = vertex i; pad seats zero)
+    ext_ids   : (capacity,) int64  internal id -> external id; -1 = pad
+    tombs     : (capacity,) bool   deleted main-graph vertices
+    delta_vec : (delta_cap, d) f32 inserted vectors (stale rows linger)
+    delta_norm: (delta_cap,) f32   ||v||^2, same f64-accumulate as pack
+    delta_live: (delta_cap,) bool  row currently live
+    delta_ext : (delta_cap,) int64 row -> external id; -1 = never used
+    delta_len : rows ever appended this epoch (<= delta_cap)
+    """
+
+    epoch: int
+    packed: PackedIndex
+    vectors: np.ndarray
+    ext_ids: np.ndarray
+    tombs: np.ndarray
+    delta_vec: np.ndarray
+    delta_norm: np.ndarray
+    delta_live: np.ndarray
+    delta_ext: np.ndarray
+    delta_len: int = 0
+
+    @property
+    def capacity(self) -> int:
+        return int(self.packed.n)
+
+    @property
+    def delta_cap(self) -> int:
+        return int(self.delta_vec.shape[0])
+
+    def n_live(self) -> int:
+        main = int(((self.ext_ids >= 0) & ~self.tombs).sum())
+        return main + int(self.delta_live.sum())
+
+    def live_consts(self) -> dict:
+        """The four traced consts ``_finalize_live`` reads. Fixed shape
+        and dtype for the whole session — mutation is a content swap."""
+        import jax.numpy as jnp
+
+        return {
+            "tombs": jnp.asarray(self.tombs),
+            "delta_vec": jnp.asarray(self.delta_vec, jnp.float32),
+            "delta_norm": jnp.asarray(self.delta_norm, jnp.float32),
+            "delta_live": jnp.asarray(self.delta_live),
+        }
+
+    @staticmethod
+    def empty(packed: PackedIndex, vectors: np.ndarray, ext_ids: np.ndarray,
+              delta_cap: int, epoch: int = 0) -> "EpochIndex":
+        d = vectors.shape[1]
+        cap = int(packed.n)
+        assert vectors.shape[0] == cap and ext_ids.shape == (cap,)
+        return EpochIndex(
+            epoch=epoch, packed=packed,
+            vectors=np.ascontiguousarray(vectors, np.float32),
+            ext_ids=ext_ids.astype(np.int64),
+            tombs=np.zeros(cap, dtype=bool),
+            delta_vec=np.zeros((delta_cap, d), dtype=np.float32),
+            delta_norm=np.zeros(delta_cap, dtype=np.float32),
+            delta_live=np.zeros(delta_cap, dtype=bool),
+            delta_ext=np.full(delta_cap, -1, dtype=np.int64),
+        )

@@ -141,6 +141,16 @@ def stream_summary(stats) -> dict:
         if getattr(stats, "prefetch_issued", 0) else 0.0,
         "resident_fraction": round(
             float(getattr(stats, "resident_fraction", 1.0)), 4),
+        # live index (core/live.py): delta_hits counts result rows
+        # answered from the append-only delta segment, tombstoned the
+        # deletes applied during the run, epoch_swaps the background
+        # reindex swap-ins, swap_stall_rounds the worked rounds thrown
+        # away by legs whose frontier died at a swap (re-admitted from
+        # the new epoch's entry). All zero on a frozen-index session.
+        "delta_hits": getattr(stats, "delta_hits", 0),
+        "tombstoned": getattr(stats, "tombstoned", 0),
+        "epoch_swaps": getattr(stats, "epoch_swaps", 0),
+        "swap_stall_rounds": getattr(stats, "swap_stall_rounds", 0),
         # goodput = retired clean / offered. The three robustness
         # counters partition differently and cannot double-count a
         # query: `truncated` is a per-result flag (each query retires

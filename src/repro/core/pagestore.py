@@ -206,6 +206,40 @@ class PageStore:
                 "prefetch_issued": int(self.prefetch_issued),
                 "prefetch_hits": int(self.prefetch_hits)}
 
+    def swap_epoch(self, consts):
+        """Epoch swap (live index): adopt a new epoch's cold tier and
+        restage every resident frame from it via the existing donated
+        scatter — no new compiles, no shape change, no device-memory
+        growth. Residency (ttab / frame_page / clock state) is
+        preserved: the cache keeps the same *pages* resident, now with
+        the new epoch's contents. In-flight staged payload from the old
+        epoch is dropped (its reservations are released) — it would
+        commit stale bytes. Returns the refreshed consts overrides.
+        """
+        cold_db = np.asarray(consts["db"])
+        cold_vn = np.asarray(consts["vnorm"])
+        if cold_db.shape != self.cold_db.shape:
+            raise ValueError(
+                f"epoch swap changed the store shape: {cold_db.shape} "
+                f"!= {self.cold_db.shape} (pack every epoch at the "
+                "session capacity)")
+        self.cold_db = cold_db
+        self.cold_vn = cold_vn
+        self.adj = np.asarray(consts["adj"])
+        self.pref = np.asarray(consts["pref"])
+        self.blk_perm = np.asarray(consts["blk_perm"])
+        self._staged = None
+        self.reserved[:] = False
+        rows = [(s, int(self.frame_page[s, f]), f)
+                for s in range(self.S) for f in range(self.P_dev)
+                if self.frame_page[s, f] >= 0]
+        if rows:
+            sidx, fidx, pay_db, pay_vn = self._push_payload(rows)
+            self.frames, self.vnf = _scatter_frames(
+                self.frames, self.vnf, sidx, fidx, pay_db, pay_vn,
+                pdev=self.P_dev)
+        return self.device_view()
+
     def boundary(self, touch, miss, cand_i, cand_e, done):
         """Process one round-chunk boundary; returns consts overrides.
 

@@ -7,7 +7,13 @@ Allocator still resolves logical ids without FTL translation.
 
 Here a "refresh" permutes logical->physical block mapping within a shard
 (blk_perm row) and physically moves the affected db pages + vnorm rows.
-Search results must be invariant (tested in tests/test_refresh.py).
+Search results must be invariant (tested in tests/test_engine.py).
+
+The same machinery generalizes to the live index's **background reindex**
+(:func:`reindex_epoch`): instead of permuting blocks of a frozen graph,
+rebuild the graph over the current live set (main survivors + delta
+inserts), re-run the degree-ascending BFS reorder, and pack the result at
+the session capacity so the swap is a pure content update.
 """
 from __future__ import annotations
 
@@ -15,7 +21,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.luncsr import PackedIndex
+from repro.core.luncsr import EpochIndex, PackedIndex, pack_padded
 
 
 def refresh_blocks(packed: PackedIndex, rng: np.random.Generator,
@@ -25,7 +31,44 @@ def refresh_blocks(packed: PackedIndex, rng: np.random.Generator,
     Each refreshed block swaps physical position with another block of the
     same shard (a 2-cycle of the permutation), mirroring "copy to a free
     block, retire the old one" at steady state.
+
+    The data move is a single gather by the composed physical-page
+    permutation: logical page ``(b, i)`` of shard ``s`` moves from
+    physical page ``old_perm[s, b] * ppb + i`` to
+    ``new_perm[s, b] * ppb + i``. Since both perms are bijections over
+    the shard's blocks, the gather covers every physical page exactly
+    once and is the identity on unrefreshed blocks — bit-identical to
+    the per-pair swap loop (:func:`_refresh_blocks_loop`, kept as the
+    regression reference).
     """
+    g = packed.geometry
+    S, B = packed.blk_perm.shape
+    ppb = g.pages_per_block
+    old_perm = packed.blk_perm
+    new_perm = old_perm.copy()
+    for s in range(S):
+        k = max(1, int(B * frac)) & ~1  # even count -> disjoint swap pairs
+        if k < 2:
+            continue
+        chosen = rng.choice(B, size=k, replace=False)
+        a, b = chosen[::2], chosen[1::2]
+        new_perm[s, a], new_perm[s, b] = old_perm[s, b], old_perm[s, a]
+    pages = B * ppb
+    pib = np.arange(ppb, dtype=np.int64)
+    src = (old_perm[:, :, None] * ppb + pib[None, None, :]).reshape(S, pages)
+    dst = (new_perm[:, :, None] * ppb + pib[None, None, :]).reshape(S, pages)
+    pagemap = np.empty((S, pages), dtype=np.int64)
+    sidx = np.arange(S)[:, None]
+    pagemap[sidx, dst] = src          # pagemap[s, new phys] = old phys
+    db = packed.db[sidx, pagemap]
+    vnorm = packed.vnorm[sidx, pagemap]
+    return dataclasses.replace(packed, db=db, vnorm=vnorm, blk_perm=new_perm)
+
+
+def _refresh_blocks_loop(packed: PackedIndex, rng: np.random.Generator,
+                         frac: float = 0.25) -> PackedIndex:
+    """Original per-pair swap implementation (regression reference for
+    :func:`refresh_blocks`; consumes the rng stream identically)."""
     g = packed.geometry
     S, B = packed.blk_perm.shape
     ppb = g.pages_per_block
@@ -64,3 +107,42 @@ def physical_page_of(packed: PackedIndex, ids: np.ndarray) -> np.ndarray:
     pib = lpage % g.pages_per_block
     phys = packed.blk_perm[shard, blk] * g.pages_per_block + pib
     return shard, phys, ids % g.page_size
+
+
+def reindex_epoch(ep: EpochIndex, *, seed: int = 0,
+                  pref_width: int = 0) -> EpochIndex:
+    """Background reindex: fold the delta + tombstones into a fresh epoch.
+
+    Collects the live set (main survivors + live delta rows), rebuilds
+    the Vamana graph over it, re-runs the degree-ascending BFS reorder
+    (static scheduling step 1 applied to the *new* graph), and packs at
+    the session capacity. External ids ride along through the reorder
+    permutation, so the result's ``ext_ids`` keeps every surviving
+    vector addressable under its original name. The new epoch starts
+    with an empty delta and a clear tombstone set.
+    """
+    from repro.core.graph import build_vamana
+    from repro.core.reorder import apply_reordering, degree_ascending_bfs
+
+    main_live = (ep.ext_ids >= 0) & ~ep.tombs
+    vecs = np.concatenate(
+        [ep.vectors[main_live], ep.delta_vec[ep.delta_live]], axis=0)
+    exts = np.concatenate(
+        [ep.ext_ids[main_live], ep.delta_ext[ep.delta_live]], axis=0)
+    if vecs.shape[0] < 2:
+        raise ValueError("reindex needs at least 2 live vectors")
+    r = ep.packed.max_degree
+    adj, medoid = build_vamana(vecs, r=r, seed=seed)
+    order = degree_ascending_bfs(adj)
+    vecs, adj, entry = apply_reordering(vecs, adj, order, entry=medoid)
+    exts = exts[order]
+    packed = pack_padded(vecs, adj, ep.packed.geometry, entry, r,
+                         capacity=ep.capacity, pref_width=pref_width)
+    cap = ep.capacity
+    m = vecs.shape[0]
+    vmirror = np.zeros((cap, vecs.shape[1]), dtype=np.float32)
+    vmirror[:m] = vecs
+    emirror = np.full(cap, -1, dtype=np.int64)
+    emirror[:m] = exts
+    return EpochIndex.empty(packed, vmirror, emirror,
+                            delta_cap=ep.delta_cap, epoch=ep.epoch + 1)

@@ -240,6 +240,55 @@ def build_routed_index(db: np.ndarray, *, shards: int, page_size: int,
                        medoids=np.asarray(medoids))
 
 
+def build_live_router(ep, centroids_per_shard: int = 8, seed: int = 0,
+                      kernel_mode: str = "jnp") -> ShardRouter:
+    """Fit a :class:`ShardRouter` over a live epoch's striped layout.
+
+    The live index stripes the global graph across shards (unlike
+    ``build_routed_index``'s spatial partition), so routing is only
+    meaningful in the degenerate ``topr >= S`` fan-out mode — but the
+    sketches still have to track the layout so ``refresh_router`` has
+    something shape-compatible to refresh at each swap.
+    """
+    S = ep.packed.geometry.num_shards
+    d = ep.vectors.shape[1]
+    zero = np.zeros((S, centroids_per_shard, d), np.float32)
+    base = ShardRouter(centroids=jnp.asarray(zero),
+                       cnorm=jnp.asarray((zero * zero).sum(-1)),
+                       backend=KernelBackend(mode=kernel_mode))
+    return refresh_router(base, ep, seed=seed)
+
+
+def refresh_router(router: ShardRouter, ep, seed: int = 0) -> ShardRouter:
+    """Recompute the per-shard centroid sketches for a new epoch
+    (ROADMAP item 2 remainder: the router tracks layout churn).
+
+    ``ep`` is a live :class:`~repro.core.luncsr.EpochIndex`; each
+    striping-owner shard's sketch is re-fit over its *live* vectors in
+    the new epoch (called right after a reindex, so the delta is empty
+    and the main mirror holds the whole live set). Shapes and backend
+    are preserved — the swap is a content update like every other.
+    """
+    g = ep.packed.geometry
+    cap = ep.capacity
+    ids = np.arange(cap, dtype=np.int64)
+    owner = np.asarray(g.owner_of_n(ids, cap))
+    live = (ep.ext_ids >= 0) & ~ep.tombs
+    S, C, d = router.centroids.shape
+    rc = np.zeros((S, C, d), np.float32)
+    for s in range(S):
+        pts = ep.vectors[live & (owner == s)]
+        if len(pts) == 0:
+            continue        # empty shard keeps a zero sketch
+        cents, _ = _kmeans(pts, min(C, len(pts)), seed=seed + 1000 + s)
+        rc[s, :cents.shape[0]] = cents
+        if cents.shape[0] < C:
+            rc[s, cents.shape[0]:] = cents[0]   # pad: duplicate, harmless
+    return ShardRouter(centroids=jnp.asarray(rc),
+                       cnorm=jnp.asarray((rc * rc).sum(-1)),
+                       backend=router.backend)
+
+
 # ---------------------------------------------------------------------------
 # retire-time fusion
 # ---------------------------------------------------------------------------

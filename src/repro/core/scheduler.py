@@ -93,11 +93,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (EngineGeom, EngineParams, EngineStepper,
-                               make_stepper, spec_update)
+                               engine_retire_live, make_stepper,
+                               spec_update)
 from repro.core.metrics import slot_occupancy
+from repro.core.traversal import ID_SENTINEL
 from repro.ft.inject import NEVER
+from repro.utils import BIG_DIST, bloom_insert
 
 INVALID = -1
+_SENTINEL = int(ID_SENTINEL)    # host mirror (module scope: no per-call sync)
 
 # tiered store: consecutive no-round-progress chunk boundaries for one
 # live row before the scheduler declares a livelock (the round's page
@@ -320,6 +324,17 @@ class StreamStats:
                               # tiered store: device frames / logical
                               # pages per shard (1.0 = fully resident
                               # or no tiered store)
+    delta_hits: int = 0       # live index: retired result entries
+                              # served from the delta segment
+    tombstoned: int = 0       # live index: deletes applied during the
+                              # run (main tombstones + killed delta rows)
+    epoch_swaps: int = 0      # live index: background reindexes swapped
+                              # in at chunk boundaries during the run
+    swap_stall_rounds: int = 0
+                              # live index: worked rounds discarded at
+                              # swaps — rows whose whole frontier died
+                              # with the old epoch restart from the new
+                              # entry (translated rows discard nothing)
 
     def by_qid(self):
         return {r.qid: r for r in self.results}
@@ -343,7 +358,7 @@ class StreamScheduler:
                  stepper: Optional[EngineStepper] = None,
                  injit_admit: Optional[bool] = None,
                  routed: bool = False, ring_capacity: int = 0,
-                 overload: str = "block", pagestore=None):
+                 overload: str = "block", pagestore=None, live=None):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
         if round_chunk < 1:
@@ -393,6 +408,33 @@ class StreamScheduler:
             raise ValueError(
                 "params.store_pages > 0 needs a PageStore (pass "
                 "pagestore=...) to own the translation table")
+        self.live = live
+        if live is not None:
+            # live index (core/live.py): sim driver only — the
+            # distributed round body has no delta/tombstone stage, and
+            # swaps mutate host-owned consts. The caller's consts must
+            # describe live's *current* epoch (with a pagestore, its
+            # cold tier too); mid-run swaps are the scheduler's job.
+            if mesh is not None:
+                raise ValueError("the live index runs on the sim driver "
+                                 "only (mesh must be None)")
+            if params.delta_cap <= 0:
+                raise ValueError(
+                    "a live index needs params.delta_cap > 0 (the "
+                    "static gate that compiles the delta-merge retire)")
+            if params.delta_cap != live.delta_cap:
+                raise ValueError(
+                    f"params.delta_cap={params.delta_cap} != "
+                    f"live.delta_cap={live.delta_cap}")
+            if geom.n != live.capacity:
+                raise ValueError(
+                    f"geom.n={geom.n} != live capacity "
+                    f"{live.capacity} (pack at the session capacity)")
+            consts = dict(consts)
+            consts.update(live.live_consts())
+        elif params.delta_cap > 0:
+            raise ValueError(
+                "params.delta_cap > 0 needs a LiveIndex (pass live=...)")
         self.consts = consts
         self.geom = geom
         self.params = params
@@ -478,6 +520,114 @@ class StreamScheduler:
             self._static_spec = (w, z, z, z, z)
         return self._static_spec, _NULL_CFG, False
 
+    def _retire(self, state, qbuf):
+        """Per-slot results: plain finalize, or the live-index finalize
+        (tombstone mask + delta merge) when a live index is attached.
+        Zero churn keeps the live path bit-identical to the plain one
+        (stable partition and merge — see ``_finalize_live``)."""
+        if self.live is None:
+            return self.stepper.retire(state)
+        return engine_retire_live(
+            state, qbuf, self.consts["tombs"], self.consts["delta_vec"],
+            self.consts["delta_norm"], self.consts["delta_live"],
+            k=self.params.search.k)
+
+    def _swap_epoch(self, state, qbuf, owner, age_base, rounds_base):
+        """Adopt a freshly reindexed epoch mid-session (live index).
+
+        The consts swap is pure content (every epoch packs at the
+        session capacity): device-resident consts are replaced; with a
+        tiered store, the cold tier swaps and resident frames restage
+        through the existing donated scatter. No stepper retraces.
+
+        In-flight rows keep serving across the swap: each owned row's
+        candidate list is translated old-internal -> new-internal via
+        the external-id bridge, dead entries (deleted or reordered
+        away) are compacted out (the list stays sorted — distances are
+        content-identical across epochs), and the bloom filter is
+        rebuilt over the surviving frontier on device. A row whose
+        whole frontier died restarts from the new entry — its worked
+        rounds are the swap's ``swap_stall_rounds`` and its served age
+        carries over via ``age_base``/``rounds_base`` so latency
+        accounting stays exact. Returns (state, qbuf, discarded
+        rounds)."""
+        live = self.live
+        mc = live.main_consts()
+        if self.pagestore is not None:
+            self.consts.update(
+                {k: mc[k] for k in ("adj", "pref", "blk_perm")})
+            self.consts.update(self.pagestore.swap_epoch(mc))
+        else:
+            self.consts.update(mc)
+        ev, en, ei = live.device_entry()
+        if jnp.ndim(self.entry[0]) == 2:      # routed broadcast entries
+            Sn = self.S
+            ev = jnp.broadcast_to(ev[None], (Sn,) + ev.shape)
+            en = jnp.broadcast_to(jnp.asarray(en)[None], (Sn,))
+            ei = jnp.broadcast_to(jnp.asarray(ei)[None], (Sn,))
+        self.entry = (ev, en, ei)
+
+        trans = live.take_translation()
+        rows = np.argwhere(owner != INVALID)
+        if trans is None or rows.size == 0:
+            return state, qbuf, 0
+        sent = _SENTINEL
+        ci, cd, ce, ages, rnds = jax.device_get(
+            (state.cand_i, state.cand_d, state.cand_e, state.age,
+             state.rounds))
+        ci = np.array(ci)
+        cd = np.array(cd)
+        ce = np.array(ce)
+        tr = np.asarray(trans)
+        tmask = np.zeros(owner.shape, bool)
+        dead_rows = np.zeros(owner.shape, bool)
+        for s, r in rows:
+            row_i = ci[s, r]
+            valid = row_i != sent
+            t_ids = np.where(
+                valid, tr[np.clip(row_i, 0, tr.shape[0] - 1)], -1)
+            keep = t_ids >= 0
+            m = int(keep.sum())
+            if m == 0:
+                dead_rows[s, r] = True
+                continue
+            kd = cd[s, r][keep].copy()
+            ke = ce[s, r][keep].copy()
+            ci[s, r, :m] = t_ids[keep]
+            ci[s, r, m:] = sent
+            cd[s, r, :m] = kd
+            cd[s, r, m:] = BIG_DIST
+            ce[s, r, :m] = ke
+            ce[s, r, m:] = False
+            tmask[s, r] = True
+        if tmask.any():
+            jm = jnp.asarray(tmask)
+            ci_j = jnp.asarray(ci)
+            Sn, Qs, L = ci.shape
+            flat = ci_j.reshape(Sn * Qs, L)
+            fvalid = ((flat != ID_SENTINEL)
+                      & jm.reshape(-1)[:, None])
+            bl = bloom_insert(
+                jnp.zeros(state.bloom.shape,
+                          jnp.uint32).reshape(Sn * Qs, -1),
+                flat, fvalid).reshape(state.bloom.shape)
+            w3 = jm[..., None]
+            state = state._replace(
+                cand_i=jnp.where(w3, ci_j, state.cand_i),
+                cand_d=jnp.where(w3, jnp.asarray(cd), state.cand_d),
+                cand_e=jnp.where(w3, jnp.asarray(ce), state.cand_e),
+                bloom=jnp.where(w3, bl, state.bloom))
+        stall = 0
+        if dead_rows.any():
+            stall = int(rnds[dead_rows].sum())
+            age_base[dead_rows] += ages[dead_rows]
+            rounds_base[dead_rows] += rnds[dead_rows]
+            state, qbuf = self.stepper.admit(
+                state, qbuf, jnp.asarray(dead_rows), qbuf, *self.entry)
+            if self.controller is not None:
+                self.controller.reset_rows(dead_rows)
+        return state, qbuf, stall
+
     def _warmup(self, state, qbuf, pend=None):
         """Compile the dispatch path actually used by :meth:`run` —
         admit/run_chunk/retire, or run_chunk_admit/retire when ``pend``
@@ -501,7 +651,15 @@ class StreamScheduler:
             out = self.stepper.run_chunk_admit(
                 self.consts, state, qbuf, spec_state, cfg, 1, pend,
                 done_cur, 0, self.entry, dynamic=dyn)
-            ids, dists, _ = self.stepper.retire(state)
+            ids, dists, _ = self._retire(state, qbuf)
+            if self.live is not None:
+                # epoch-swap restarts admit host-side even on the
+                # in-jit path — warm it so a mid-session swap costs no
+                # compile (the p99-under-refresh contract)
+                zmask = jnp.zeros((S, Qs), bool)
+                astate, _ = self.stepper.admit(state, qbuf, zmask, qbuf,
+                                               *self.entry)
+                jax.block_until_ready(astate.done)
             jax.block_until_ready((out[0].done, out[13], ids, dists))
             return time.time() - t0
         zmask = jnp.zeros((S, Qs), bool)
@@ -511,7 +669,7 @@ class StreamScheduler:
         # runs zero rounds — values are untouched and discarded anyway
         out = self.stepper.run_chunk(self.consts, wstate, wq, spec_state,
                                      cfg, 1, False, dynamic=dyn)
-        ids, dists, _ = self.stepper.retire(wstate)
+        ids, dists, _ = self._retire(wstate, wq)
         jax.block_until_ready((out[0].done, ids, dists))
         return time.time() - t0
 
@@ -599,6 +757,17 @@ class StreamScheduler:
         owner = np.full((S, Qs), INVALID, np.int64)   # slot -> qid
         admit_t = np.zeros((S, Qs), np.int64)
         admit_wall = np.zeros((S, Qs), np.float64)
+        # live index: serving-age carried across swap restarts (zeroed
+        # at every seat; identically zero without swaps), plus counters
+        age_base = np.zeros((S, Qs), np.int64)
+        rounds_base = np.zeros((S, Qs), np.int64)
+        epoch_swaps = 0
+        swap_stall = 0
+        live_del0 = self.live.deletes if self.live is not None else 0
+        live_hit0 = self.live.delta_hits if self.live is not None else 0
+        if self.live is not None:
+            # pick up direct-API mutations applied since construction
+            self.consts.update(self.live.live_consts())
         next_q = 0                                    # cursor into order
         retired = 0
         t = 0
@@ -622,6 +791,19 @@ class StreamScheduler:
             return int(arrivals[order[next_q]]) if next_q < N else None
 
         while retired + len(shed_qids) < N:
+            if self.live is not None and self.live.due(t):
+                # -- live-index boundary: apply every scheduled insert/
+                # delete due by the serving clock; a triggered reindex
+                # (refresh_every, or a full delta) swaps in here — the
+                # one place the pool is between dispatches
+                changed, nswaps = self.live.advance(t)
+                if nswaps:
+                    epoch_swaps += nswaps
+                    state, qbuf, lost = self._swap_epoch(
+                        state, qbuf, owner, age_base, rounds_base)
+                    swap_stall += lost
+                if changed:
+                    self.consts.update(self.live.live_consts())
             if not injit and routed:
                 # -- host-paced routed admission: each shard fills its
                 # own free rows from its own arrived queue
@@ -756,25 +938,32 @@ class StreamScheduler:
                                 # advances by age, not rounds: a row
                                 # stalled by a fault aged on the serving
                                 # clock without working
+                                rid = ret_i[j, s, r].copy()
+                                rdd = ret_d[j, s, r].copy()
+                                if self.live is not None:
+                                    rid, rdd = self.live.map_result(
+                                        rid, rdd)
                                 results.append(QueryResult(
                                     qid=int(owner[s, r]),
-                                    ids=ret_i[j, s, r].copy(),
-                                    dists=ret_d[j, s, r].copy(),
+                                    ids=rid, dists=rdd,
                                     arrival_round=int(
                                         arrivals[owner[s, r]]),
                                     admit_round=int(admit_t[s, r]),
                                     retire_round=int(
-                                        admit_t[s, r]
+                                        admit_t[s, r] + age_base[s, r]
                                         + ret_age[j, s, r]),
                                     service_rounds=int(
-                                        ret_rounds[j, s, r]),
+                                        rounds_base[s, r]
+                                        + ret_rounds[j, s, r]),
                                     n_dist=int(ret_ndist[j, s, r]),
                                     wall_latency_s=now_wall
                                     - admit_wall[s, r],
                                     truncated=bool(
                                         ret_trunc[j, s, r]),
                                     stall_rounds=int(
-                                        ret_age[j, s, r]
+                                        age_base[s, r]
+                                        + ret_age[j, s, r]
+                                        - rounds_base[s, r]
                                         - ret_rounds[j, s, r])))
                                 retired += 1
                             # routed: pidx indexes shard s's own queue;
@@ -787,6 +976,8 @@ class StreamScheduler:
                                 else int(order[admit_qidx[j][s, r]]))
                             admit_t[s, r] = t + j
                             admit_wall[s, r] = launch_wall
+                            age_base[s, r] = 0
+                            rounds_base[s, r] = 0
                 cur = jax.device_get(cur)
                 if routed:
                     next_qs = cur.astype(np.int64)
@@ -887,7 +1078,7 @@ class StreamScheduler:
             # boundary the per-round scheduler would have)
             fin = (owner != INVALID) & done
             if fin.any():
-                out_i, out_d, _ = self.stepper.retire(state)
+                out_i, out_d, _ = self._retire(state, qbuf)
                 out_i, out_d = jax.device_get((out_i, out_d))
                 now_wall = time.time()
                 for s, r in np.argwhere(fin):
@@ -895,18 +1086,27 @@ class StreamScheduler:
                     # aged `age` consecutive serving rounds from
                     # admission (== `rounds` worked unless a fault
                     # stalled it mid-service)
+                    rid = out_i[s, r].copy()
+                    rdd = out_d[s, r].copy()
+                    if self.live is not None:
+                        rid, rdd = self.live.map_result(rid, rdd)
                     results.append(QueryResult(
-                        qid=int(owner[s, r]), ids=out_i[s, r].copy(),
-                        dists=out_d[s, r].copy(),
+                        qid=int(owner[s, r]), ids=rid, dists=rdd,
                         arrival_round=int(arrivals[owner[s, r]]),
                         admit_round=int(admit_t[s, r]),
-                        retire_round=int(admit_t[s, r] + age[s, r]),
-                        service_rounds=int(rounds[s, r]),
+                        retire_round=int(admit_t[s, r]
+                                         + age_base[s, r] + age[s, r]),
+                        service_rounds=int(rounds_base[s, r]
+                                           + rounds[s, r]),
                         n_dist=int(n_dist[s, r]),
                         wall_latency_s=now_wall - admit_wall[s, r],
                         truncated=bool(trunc[s, r]),
-                        stall_rounds=int(age[s, r] - rounds[s, r])))
+                        stall_rounds=int(age_base[s, r] + age[s, r]
+                                         - rounds_base[s, r]
+                                         - rounds[s, r])))
                     owner[s, r] = INVALID
+                    age_base[s, r] = 0
+                    rounds_base[s, r] = 0
                 retired += int(fin.sum())
 
         # end-of-session counters: one transfer for the whole summary
@@ -935,7 +1135,13 @@ class StreamScheduler:
             prefetch_issued=(self.pagestore.prefetch_issued
                              if self.pagestore is not None else 0),
             resident_fraction=(self.pagestore.resident_fraction
-                               if self.pagestore is not None else 1.0))
+                               if self.pagestore is not None else 1.0),
+            delta_hits=(self.live.delta_hits - live_hit0
+                        if self.live is not None else 0),
+            tombstoned=(self.live.deletes - live_del0
+                        if self.live is not None else 0),
+            epoch_swaps=epoch_swaps,
+            swap_stall_rounds=swap_stall)
 
 
 def poisson_arrivals(rate: float, n: int, seed: int = 0) -> np.ndarray:
@@ -988,11 +1194,13 @@ def stream_search(consts, geom, params, entry, queries,
                   dynamic_spec: bool = False, refill: bool = True,
                   round_chunk: int = 1, injit_admit=None,
                   spec_page_w: float = 0.0, ring_capacity: int = 0,
-                  overload: str = "block", pagestore=None):
+                  overload: str = "block", pagestore=None, live=None):
     """Convenience wrapper: run the streaming scheduler and return
     (ids (N, k), dists (N, k), StreamStats) in query order.  A query
     shed by the overload policy keeps its INVALID/0 row in the output
-    (check ``stats.shed`` / absence from ``stats.results``)."""
+    (check ``stats.shed`` / absence from ``stats.results``). With
+    ``live`` the returned ids are external ids (stable across epoch
+    swaps; identical to internal ids in a zero-churn session)."""
     ctrl = _make_controller(params, geom, dynamic_spec, spec_page_w)
     sched = StreamScheduler(consts, geom, params, entry,
                             num_slots=num_slots, mesh=mesh,
@@ -1000,7 +1208,8 @@ def stream_search(consts, geom, params, entry, queries,
                             round_chunk=round_chunk,
                             injit_admit=injit_admit,
                             ring_capacity=ring_capacity,
-                            overload=overload, pagestore=pagestore)
+                            overload=overload, pagestore=pagestore,
+                            live=live)
     stats = sched.run(queries, arrivals)
     k = params.search.k
     n = np.asarray(queries).shape[0]
@@ -1018,7 +1227,8 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
                          dynamic_spec: bool = False,
                          round_chunk: int = 1, injit_admit=None,
                          shard_entries=None, leg_L=None,
-                         spec_page_w: float = 0.0, down_shards=None):
+                         spec_page_w: float = 0.0, down_shards=None,
+                         live=None):
     """Two-tier routed serving (core/router.py): coarse-route each
     query to its top-R shards, serve one *leg* per (query, shard) on
     that shard's independent slot schedule, and fuse the per-leg top-k
@@ -1064,6 +1274,13 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
     topr = int(topr)
     if topr < 1:
         raise ValueError(f"topr must be >= 1, got {topr}")
+    if live is not None and topr < S:
+        # legs on topr < S shard-local subgraphs would each merge the
+        # full delta segment, duplicating delta ids across the fused
+        # top-k (and the shard partition itself changes on every swap);
+        # only the degenerate one-leg-per-query branch is live-safe
+        raise ValueError("live index requires topr >= num_shards "
+                         "(shard-local legs cannot mask a shared delta)")
     if topr >= S:
         R = 1
         targets = np.asarray(router.route(queries, 1))
@@ -1114,7 +1331,8 @@ def routed_stream_search(consts, geom, params, entry, queries, *,
                             num_slots=num_slots, mesh=mesh,
                             controller=ctrl, refill=True,
                             round_chunk=round_chunk,
-                            injit_admit=injit_admit, routed=True)
+                            injit_admit=injit_admit, routed=True,
+                            live=live)
     leg_stats = sched.run(leg_q[alive_rows], leg_arr[alive_rows],
                           target_shards=leg_tgt[alive_rows])
 

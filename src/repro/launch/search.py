@@ -112,6 +112,20 @@ def main(argv=None):
                          "chunk (auto = on whenever refill admission "
                          "is active; off = PR-4-style host-paced "
                          "admission with stop-on-finish chunks)")
+    ap.add_argument("--insert-rate", type=float, default=0.0,
+                    help="streaming live index: mean Poisson vector "
+                         "inserts per engine round (needs --delta-cap)")
+    ap.add_argument("--delete-rate", type=float, default=0.0,
+                    help="streaming live index: mean Poisson tombstone "
+                         "deletes per engine round (needs --delta-cap)")
+    ap.add_argument("--delta-cap", type=int, default=0,
+                    help="streaming live index: delta-segment rows; a "
+                         "full delta forces a background reindex "
+                         "(0 = frozen index)")
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="streaming live index: reindex + epoch swap "
+                         "after this many mutations (0 = only when "
+                         "the delta fills)")
     ap.add_argument("--deadline-rounds", type=int, default=0,
                     help="streaming: force-retire a query after this "
                          "many serving rounds in a slot (truncated "
@@ -159,7 +173,29 @@ def main(argv=None):
 
     t0 = time.time()
     routed = None
-    if args.topr > 0:
+    live = None
+    if args.delta_cap > 0:
+        if not args.stream:
+            raise SystemExit("--delta-cap requires --stream (the live "
+                             "index is a serving-path feature)")
+        if args.topr > 0 and args.topr < args.shards:
+            raise SystemExit("live index needs --topr >= --shards "
+                             "(shard-local legs cannot mask the delta)")
+        from repro.launch.serve_stream import build_live_session
+        live = build_live_session(
+            db0, shards=args.shards, page_size=args.page_size,
+            r=args.degree, insert_rate=args.insert_rate,
+            delete_rate=args.delete_rate, delta_cap=args.delta_cap,
+            refresh_every=args.refresh_every,
+            arrival_rate=args.arrival_rate, nq=args.queries,
+            arrivals_seed=args.seed + 2, pref_width=args.spec,
+            seed=args.seed, with_router=args.topr > 0,
+            kernel_mode=args.kernel_mode)
+        db, packed = db0, live.ep.packed
+        print(f"live index built in {time.time() - t0:.1f}s "
+              f"(capacity={live.capacity}, delta_cap={args.delta_cap}, "
+              f"scheduled mutations={len(live.schedule)})")
+    elif args.topr > 0:
         if not args.stream:
             raise SystemExit("--topr requires --stream (routing is a "
                              "serving-path feature)")
@@ -197,11 +233,13 @@ def main(argv=None):
             args.shards, kill=args.kill_shard, delay=args.delay_shard,
             corrupt_rate=args.corrupt_pages,
             corrupt_mode=args.corrupt_mode, seed=args.seed)
-        if args.deadline_rounds or args.nan_guard or faults is not None:
+        if (args.deadline_rounds or args.nan_guard or faults is not None
+                or live is not None):
             import dataclasses
             params = dataclasses.replace(
                 params, deadline_rounds=args.deadline_rounds,
-                guard_nonfinite=args.nan_guard, faults=faults)
+                guard_nonfinite=args.nan_guard, faults=faults,
+                delta_cap=args.delta_cap)
         down = ([int(s) for s in args.down_shards.split(",")]
                 if args.down_shards else None)
         res = {
@@ -222,7 +260,8 @@ def main(argv=None):
                             overload=args.overload, down_shards=down,
                             device_pages=args.device_pages,
                             prefetch=args.prefetch,
-                            prefetch_page_w=args.prefetch_page_w),
+                            prefetch_page_w=args.prefetch_page_w,
+                            live=live),
         }
         print(json.dumps(res, indent=1))
         if args.out:

@@ -66,13 +66,40 @@ class StreamingRetriever:
         return vecs, ids, dists, stats
 
 
+def build_live_session(db, *, shards, page_size, r, insert_rate,
+                       delete_rate, delta_cap, refresh_every,
+                       arrival_rate, nq, arrivals_seed, pref_width=0,
+                       seed=0, with_router=False, kernel_mode="jnp"):
+    """Build a :class:`repro.core.live.LiveIndex` sized for a streaming
+    session: the mutation schedule spans the session's arrival horizon
+    (same Poisson draw ``stream_report`` will make), capacity is n0 +
+    scheduled inserts, and — when routing — the striped layout gets a
+    :func:`repro.core.router.build_live_router` sketch the index refits
+    at every epoch swap."""
+    from repro.core.live import build_live_index, mutation_schedule
+
+    arr = poisson_arrivals(arrival_rate, nq, arrivals_seed)
+    horizon = max(int(arr.max()) + 1, 2 * nq)
+    sched = mutation_schedule(insert_rate, delete_rate, horizon,
+                              db.shape[1], seed=seed + 5, ref=db)
+    live = build_live_index(db, shards=shards, page_size=page_size, r=r,
+                            delta_cap=delta_cap, pref_width=pref_width,
+                            seed=seed, refresh_every=refresh_every,
+                            schedule=sched)
+    if with_router:
+        from repro.core.router import build_live_router
+        live.router = build_live_router(live.ep, seed=seed,
+                                        kernel_mode=kernel_mode)
+    return live
+
+
 def stream_report(consts, geom, params, entry, db, queries, *, slots,
                   arrival_rate, seed, dynamic_spec=False,
                   refill=True, round_chunk=8, injit_admit=None,
                   routed=None, topr=0, leg_L=None,
                   spec_page_w=0.0, ring_capacity=0, overload="block",
                   down_shards=None, device_pages=0, prefetch=True,
-                  prefetch_page_w=1.0) -> dict:
+                  prefetch_page_w=1.0, live=None) -> dict:
     """Run one streaming session and build the serving report shared by
     the `search --stream` and `serve_stream` CLIs: Poisson arrivals ->
     scheduler -> recall vs brute force + stream_summary metrics.
@@ -93,7 +120,13 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
     resident, the rest live cold in host RAM and fetch on demand at
     chunk boundaries — plus double-buffered speculative prefetch when
     ``prefetch`` is set (``prefetch_page_w`` weighs the stored
-    prefetch lists in the prediction score)."""
+    prefetch lists in the prediction score).
+
+    A ``live`` :class:`repro.core.live.LiveIndex` turns on the live-
+    index path (``--insert-rate``/``--delete-rate``/``--delta-cap``/
+    ``--refresh-every``): its mutation schedule runs against the query
+    stream, result ids are external ids, and recall is measured against
+    the *final* live dataset (post-mutation ground truth)."""
     arrivals = poisson_arrivals(arrival_rate, queries.shape[0], seed)
     pagestore = None
     if device_pages > 0:
@@ -107,7 +140,17 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
             consts, geom, device_pages, w_select=params.search.W,
             prefetch=prefetch, page_w=prefetch_page_w)
         params = _dc.replace(params, store_pages=pagestore.num_pages)
-    if routed is not None and topr > 0:
+    if live is not None and topr > 0:
+        # live routing runs the degenerate fan-out over the striped
+        # live layout (router = the live index's own sketch)
+        from repro.core.scheduler import routed_stream_search
+        ids, _, st = routed_stream_search(
+            consts, geom, params, entry, queries, router=live.router,
+            topr=topr, num_slots=slots, arrivals=arrivals,
+            dynamic_spec=dynamic_spec, round_chunk=round_chunk,
+            injit_admit=injit_admit, spec_page_w=spec_page_w,
+            down_shards=down_shards, live=live)
+    elif routed is not None and topr > 0:
         from repro.core.scheduler import routed_stream_search
         ids, _, st = routed_stream_search(
             consts, geom, params, entry, queries, router=routed.router,
@@ -122,9 +165,14 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
             arrivals=arrivals, dynamic_spec=dynamic_spec, refill=refill,
             round_chunk=round_chunk, injit_admit=injit_admit,
             spec_page_w=spec_page_w, ring_capacity=ring_capacity,
-            overload=overload, pagestore=pagestore)
+            overload=overload, pagestore=pagestore, live=live)
     k = params.search.k
-    true_ids, _ = brute_force_topk(db, queries, k)
+    if live is not None:
+        vecs, exts = live.final_dataset()
+        pos, _ = brute_force_topk(vecs, queries, k)
+        true_ids = exts[pos]
+    else:
+        true_ids, _ = brute_force_topk(db, queries, k)
     return {
         "shards": geom.num_shards, "slots_per_shard": slots,
         "arrival_rate": arrival_rate, "refill": refill,
@@ -133,6 +181,9 @@ def stream_report(consts, geom, params, entry, db, queries, *, slots,
         "deadline_rounds": params.deadline_rounds,
         "ring": ring_capacity, "overload": overload,
         "device_pages": (pagestore.P_dev if pagestore else 0),
+        "live": live is not None,
+        "delta_cap": params.delta_cap,
+        "inserts": (live.inserts if live is not None else 0),
         "nan_guard": params.guard_nonfinite,
         "faults": params.faults is not None,
         "down_shards": sorted(int(s) for s in (down_shards or [])),
@@ -193,6 +244,20 @@ def main(argv=None):
                     help="tiered: weight of the stored speculative "
                          "prefetch lists in the prediction score "
                          "(adjacency neighbors weigh 1)")
+    ap.add_argument("--insert-rate", type=float, default=0.0,
+                    help="live index: mean Poisson vector inserts per "
+                         "engine round (needs --delta-cap)")
+    ap.add_argument("--delete-rate", type=float, default=0.0,
+                    help="live index: mean Poisson tombstone deletes "
+                         "per engine round (needs --delta-cap)")
+    ap.add_argument("--delta-cap", type=int, default=0,
+                    help="live index: append-only delta-segment rows; "
+                         "a full delta forces a background reindex "
+                         "(0 = frozen index, bit-identical to before)")
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="live index: background reindex + epoch swap "
+                         "after this many mutations (0 = only when the "
+                         "delta fills)")
     ap.add_argument("--no-refill", action="store_true",
                     help="frozen-batch discipline (baseline): admit "
                          "only into an all-free pool")
@@ -257,7 +322,22 @@ def main(argv=None):
     db0 = ds.materialize()
     queries = ds.queries(args.queries, seed=args.seed + 1)
     routed = None
-    if args.topr > 0:
+    live = None
+    if args.delta_cap > 0:
+        if args.topr > 0 and args.topr < args.shards:
+            raise SystemExit("live index needs --topr >= --shards "
+                             "(shard-local legs cannot mask the delta)")
+        live = build_live_session(
+            db0, shards=args.shards, page_size=args.page_size,
+            r=args.degree, insert_rate=args.insert_rate,
+            delete_rate=args.delete_rate, delta_cap=args.delta_cap,
+            refresh_every=args.refresh_every,
+            arrival_rate=args.arrival_rate, nq=queries.shape[0],
+            arrivals_seed=args.seed + 2, pref_width=args.spec,
+            seed=args.seed, with_router=args.topr > 0,
+            kernel_mode=args.kernel_mode)
+        db, packed = db0, live.ep.packed
+    elif args.topr > 0:
         from repro.core.router import build_routed_index
         grid = args.shards * args.page_size
         routed = build_routed_index(
@@ -281,12 +361,13 @@ def main(argv=None):
         corrupt_rate=args.corrupt_pages, corrupt_mode=args.corrupt_mode,
         seed=args.seed)
     if (args.deadline_rounds or args.nan_guard
-            or faults is not None):
+            or faults is not None or live is not None):
         import dataclasses as _dc
         params = _dc.replace(params,
                              deadline_rounds=args.deadline_rounds,
                              guard_nonfinite=args.nan_guard,
-                             faults=faults)
+                             faults=faults,
+                             delta_cap=args.delta_cap)
     down = ([int(s) for s in args.down_shards.split(",")]
             if args.down_shards else None)
 
@@ -308,7 +389,8 @@ def main(argv=None):
                         down_shards=down,
                         device_pages=args.device_pages,
                         prefetch=args.prefetch,
-                        prefetch_page_w=args.prefetch_page_w),
+                        prefetch_page_w=args.prefetch_page_w,
+                        live=live),
     }
     print(json.dumps(res, indent=1))
     if args.out:

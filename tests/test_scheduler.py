@@ -458,6 +458,10 @@ def test_stream_summary_covers_stats_fields(ds):
     assert summ["prefetch_hits"] == 0 and summ["prefetch_issued"] == 0
     assert summ["prefetch_hit_rate"] == 0.0
     assert summ["resident_fraction"] == 1.0
+    # live-index counters joined the frozen contract: a frozen-index
+    # run reports them at rest (no delta, no deletes, no swaps)
+    assert summ["delta_hits"] == 0 and summ["tombstoned"] == 0
+    assert summ["epoch_swaps"] == 0 and summ["swap_stall_rounds"] == 0
 
 
 def test_goodput_counts_each_query_once():
